@@ -1,0 +1,28 @@
+"""Fig. 12 — total energy vs number of devices; PCCP vs optimal policy.
+
+Paper settings: AlexNet D=200 ms, B=5 MHz; ResNet152 D=150 ms, B=15 MHz.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, timed
+from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
+from repro.core import plan, plan_optimal
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name, fleet_fn, D, B in (("alexnet", alexnet_fleet, 0.200, 5e6),
+                                 ("resnet152", resnet152_fleet, 0.150, 15e6)):
+        for n in (4, 8, 12):
+            fleet = fleet_fn(jax.random.PRNGKey(1), n)
+            p, us = timed(lambda: plan(fleet, D, 0.04, B, policy="robust",
+                                       outer_iters=3, pccp_iters=6))
+            po, _ = timed(lambda: plan_optimal(fleet, D, 0.04, B))
+            gap = (float(p.total_energy) - float(po.total_energy)) / max(
+                float(po.total_energy), 1e-12)
+            rows.append((f"fig12_energy_{name}_N{n}", us,
+                         f"pccp_J={float(p.total_energy):.4f};"
+                         f"optimal_J={float(po.total_energy):.4f};gap={gap:.3f}"))
+    return rows

@@ -1,0 +1,38 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp reference wall time and
+allclose deltas. On CPU the interpret-mode time is NOT a TPU projection —
+this bench exists to pin numerics and give a stable call-cost baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, ssd_scan_ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    f32 = jnp.float32
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), f32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), f32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), f32)
+    out, us_k = timed(lambda: jax.block_until_ready(flash_attention(q, k, v)))
+    ref, us_r = timed(lambda: jax.block_until_ready(flash_attention_ref(q, k, v)))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(("kernel_flash_attn_512", us_k, f"ref_us={us_r:.0f};maxerr={err:.1e}"))
+
+    x = jax.random.normal(ks[0], (1, 256, 4, 64), f32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 4), f32))
+    a = -jnp.exp(jax.random.normal(ks[2], (4,), f32) * 0.5)
+    bm = jax.random.normal(ks[3], (1, 256, 32), f32)
+    cm = jax.random.normal(ks[4], (1, 256, 32), f32)
+    out, us_k = timed(lambda: jax.block_until_ready(ssd_scan(x, dt, a, bm, cm, chunk=64)))
+    ref, us_r = timed(lambda: jax.block_until_ready(ssd_scan_ref(x, dt, a, bm, cm, 64)))
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append(("kernel_ssd_scan_256", us_k, f"ref_us={us_r:.0f};maxerr={err:.1e}"))
+    return rows

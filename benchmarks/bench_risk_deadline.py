@@ -1,0 +1,42 @@
+"""Figs. 13a/b & 14a/b — energy vs risk level ε and vs task deadline,
+robust policy vs worst-case baseline (+ Gaussian-σ beyond-paper variant).
+
+Paper settings: N=12; AlexNet B=10 MHz (D=180 ms for the ε sweep);
+ResNet152 B=30 MHz (D=120 ms).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, timed
+from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
+from repro.core import plan
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    scen = (("alexnet", alexnet_fleet, 0.180, 10e6, (0.16, 0.20, 0.24, 0.28)),
+            ("resnet152", resnet152_fleet, 0.120, 30e6, (0.12, 0.14, 0.16, 0.18)))
+    for name, fleet_fn, D, B, deadlines in scen:
+        fleet = fleet_fn(jax.random.PRNGKey(0), 12)
+        pw, _ = timed(lambda: plan(fleet, D, 0.02, B, policy="worst_case", outer_iters=3))
+        ew = float(pw.total_energy)
+        for eps in (0.02, 0.04, 0.06, 0.08):
+            p, us = timed(lambda: plan(fleet, D, eps, B, policy="robust_exact",
+                                       outer_iters=3))
+            pg, _ = timed(lambda: plan(fleet, D, eps, B, policy="gaussian",
+                                       outer_iters=3))
+            e = float(p.total_energy)
+            save = 100.0 * (ew - e) / max(ew, 1e-12)
+            rows.append((f"fig13a_energy_{name}_eps{eps}", us,
+                         f"robust_J={e:.4f};worst_J={ew:.4f};saving={save:.1f}%;"
+                         f"gaussian_J={float(pg.total_energy):.4f}"))
+        for D2 in deadlines:
+            p, us = timed(lambda: plan(fleet, D2, 0.02 if name == "alexnet" else 0.04,
+                                       B, policy="robust_exact", outer_iters=3))
+            pw2, _ = timed(lambda: plan(fleet, D2, 0.02, B, policy="worst_case",
+                                        outer_iters=3))
+            rows.append((f"fig13b_energy_{name}_D{int(D2*1e3)}ms", us,
+                         f"robust_J={float(p.total_energy):.4f};"
+                         f"worst_J={float(pw2.total_energy):.4f}"))
+    return rows

@@ -1,0 +1,100 @@
+"""§Roofline — three-term roofline per (arch × shape) from the dry-run
+artifacts in results/dryrun/*.json (single-pod mesh).
+
+  compute    = loop-aware HLO FLOPs / (chips × 197 TFLOP/s bf16)
+  memory     = loop-aware dot traffic bytes / (chips × 819 GB/s)
+  collective = Σ weighted collective bytes / (chips × 50 GB/s ICI)
+
+All three are *per-device* seconds (the dry-run stores per-device
+numbers). Also reports MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and
+the HBM fit against 16 GiB.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_CAP = 16 * 2**30
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh: str = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    n = rec["num_devices"]
+    flops = rec.get("hlo_loop_aware_flops_per_dev", 0.0)
+    dbytes = rec.get("hlo_loop_aware_dot_bytes_per_dev", 0.0)
+    coll = sum(rec.get("collective_bytes_per_dev", {}).values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = dbytes / HBM_BW
+    collective_s = coll / ICI_BW
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    hbm = (rec.get("arg_bytes_per_dev", 0) + rec.get("temp_bytes_per_dev", 0)
+           + rec.get("out_bytes_per_dev", 0) - rec.get("alias_bytes_per_dev", 0))
+    model_per_dev = rec.get("model_flops_total", 0.0) / n
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dom,
+        "useful_ratio": model_per_dev / flops if flops else 0.0,
+        "hbm_gib": hbm / 2**30,
+        "fits": hbm <= HBM_CAP,
+    }
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for rec in load_records():
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        if rec.get("status") == "skipped":
+            rows.append((name, 0.0, "skipped"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append((name, 0.0, f"status={rec.get('status')}"))
+            continue
+        t = terms(rec)
+        rows.append((name, 0.0,
+                     f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+                     f"collective_s={t['collective_s']:.4f};dom={t['dominant']};"
+                     f"useful={t['useful_ratio']:.2f};hbm_GiB={t['hbm_gib']:.1f};"
+                     f"fits={t['fits']}"))
+    if not rows:
+        rows.append(("roofline", 0.0, "no dry-run artifacts; run repro.launch.dryrun_all"))
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO | HBM GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records(mesh):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | {rec['status']} | — | — | — |")
+            continue
+        t = terms(rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | {t['dominant']} | "
+            f"{t['useful_ratio']:.2f} | {t['hbm_gib']:.1f} | "
+            f"{'✓' if t['fits'] else '✗'} |")
+    return "\n".join(lines)

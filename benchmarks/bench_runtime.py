@@ -1,0 +1,28 @@
+"""Fig. 11 — average runtime of Algorithm 2 vs number of devices.
+
+The paper reports near-linear scaling in N (MATLAB, i7-8700). Our PCCP
+inner problems are vmapped across devices, so wall time should grow
+sub-linearly after jit warmup; we report both cold and warm times.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, timed
+from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
+from repro.core import plan
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name, fleet_fn, D, B in (("alexnet", alexnet_fleet, 0.22, 10e6),
+                                 ("resnet152", resnet152_fleet, 0.16, 30e6)):
+        for n in (4, 8, 16, 24):
+            fleet = fleet_fn(jax.random.PRNGKey(n), n)
+            solve = lambda: plan(fleet, D, 0.04, B, policy="robust",
+                                 outer_iters=2, pccp_iters=6, multi_start=False)
+            _, us_cold = timed(solve)
+            p, us_warm = timed(solve)
+            rows.append((f"fig11_runtime_{name}_N{n}", us_warm,
+                         f"cold_us={us_cold:.0f};energy={float(p.total_energy):.4f}"))
+    return rows

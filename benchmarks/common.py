@@ -1,0 +1,22 @@
+"""Shared benchmark utilities. Every bench emits CSV rows
+``name,us_per_call,derived`` (derived = the paper figure's metric)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, repeats: int = 1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # µs
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,62 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13,...]
+#
+# Benches:
+#   bench_fit           — Fig. 6   (NLS fit of t̄ = w/(g·f))
+#   bench_convergence   — Fig. 9/10 (PCCP iterations; Alg.-2 trajectories)
+#   bench_runtime       — Fig. 11  (runtime vs N)
+#   bench_devices       — Fig. 12  (energy vs N; PCCP vs optimal)
+#   bench_risk_deadline — Fig. 13a/b, 14a/b (energy vs ε / deadline)
+#   bench_violation     — Fig. 13c/14c (violation probability ≤ ε)
+#   bench_two_tier      — beyond-paper: planner over zoo architectures
+#   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
+#   bench_kernels       — Pallas kernels vs references
+#   bench_roofline      — §Roofline terms from dry-run artifacts
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "bench_fit",
+    "bench_convergence",
+    "bench_runtime",
+    "bench_devices",
+    "bench_risk_deadline",
+    "bench_violation",
+    "bench_two_tier",
+    "bench_channel",
+    "bench_kernels",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of bench module names")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if wanted and not any(w in mod_name for w in wanted):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            emit(mod.run())
+        except Exception:
+            failures += 1
+            print(f"{mod_name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

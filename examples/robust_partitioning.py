@@ -1,0 +1,41 @@
+"""Robust partitioning of a *zoo architecture* (the framework feature):
+plan the device/edge split of InternVL2-2B under uncertain per-block
+latency on a CONGESTED shared edge, sweep the risk level, and validate
+the chance constraint.
+
+(With an abundant dedicated edge, full offload m=0 is provably optimal
+for token-input transformers — see DESIGN.md §5b. The congested regime is
+where the paper's machinery earns its keep on transformers.)
+
+Run:  PYTHONPATH=src python examples/robust_partitioning.py
+"""
+import jax
+
+from repro.configs.registry import get_config
+from repro.models.costmodel import TierProfile
+from repro.serve.partitioned import TwoTierDeployment
+
+cfg = get_config("internvl2-2b")
+print(f"arch: {cfg.name} ({cfg.num_layers}L, d_model={cfg.d_model}, "
+      f"vlm_stub patches={cfg.num_patches})")
+
+fast_dev = TierProfile(flops_per_cycle=4000.0, cv=0.10, eff_jitter=0.10)
+shared_edge = TierProfile(flops_per_cycle=8000.0, cv=0.08, eff_jitter=0.05,
+                          clock_hz=1.5e9)
+
+for eps in (0.02, 0.05, 0.10, 0.20):
+    dep = TwoTierDeployment(cfg, num_devices=8, deadline_s=0.75, eps=eps,
+                            bandwidth_hz=60e6, seq_len=512,
+                            dedicated_vm=False, device=fast_dev,
+                            edge=shared_edge, f_max_hz=2.5e9)
+    p, fleet = dep.plan(policy="robust_exact")
+    pw, _ = dep.plan(policy="worst_case")
+    rep = dep.validate(p, fleet)
+    save = 100 * (float(pw.total_energy) - rep["total_energy_j"]) / float(pw.total_energy)
+    print(f"ε={eps:4.2f}  E={rep['total_energy_j']:.4f} J  "
+          f"(worst-case {float(pw.total_energy):.4f} J, saving {save:4.1f}%)  "
+          f"violation={rep['max_violation']:.4f}  "
+          f"p95={rep['p95_latency_s']*1e3:.0f} ms  m={list(map(int, p.m_sel))}")
+
+print("\nHigher ε → smaller Cantelli margin → lower clocks → less energy; "
+      "the empirical violation stays below ε in every row.")

@@ -1,0 +1,40 @@
+"""End-to-end training driver: train a ~100M-param dense model for a few
+hundred steps on the synthetic Markov corpus and watch the loss drop
+below the unigram floor.
+
+Run:  PYTHONPATH=src python examples/train_small.py  (takes a few minutes on CPU)
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.train.loop import train
+from repro.train.optimizer import AdamWConfig
+
+# ~100M params: 12L × d512 (GQA 8/4 heads), vocab 8192
+CFG = ModelConfig(
+    name="demo-100m", family="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+    activation="swiglu",
+)
+
+if __name__ == "__main__":
+    import argparse
+
+    from repro.models.transformer import param_count
+
+    ap = argparse.ArgumentParser()
+    # full run: --steps 300 --batch 8 --seq 256 (≈47 s/step on one CPU
+    # core — size the run to your box; the loss curve is visible by ~40)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    print(f"params: {param_count(CFG)/1e6:.1f}M")
+    opt = AdamWConfig(lr=6e-4, warmup_steps=10, total_steps=args.steps)
+    params, _, hist = train(CFG, opt, num_steps=args.steps,
+                            global_batch=args.batch, seq_len=args.seq,
+                            log_every=10)
+    losses = [l for _, l in hist["loss"]]
+    print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "training failed to reduce loss"

@@ -1,0 +1,115 @@
+"""Model configuration schema and the input-shape suite.
+
+Every assigned architecture gets a ``configs/<id>.py`` exporting CONFIG
+(exact assignment) and SMOKE (reduced same-family variant: ≤2 layers,
+d_model ≤ 512, ≤4 experts) built via ``reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 → d_model // num_heads
+    activation: str = "swiglu"  # swiglu | gelu | sqrelu
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    moe: bool = False
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- MLA ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    # --- SSM / hybrid ---
+    ssm: bool = False
+    hybrid: bool = False
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # --- encoder-decoder (audio) ---
+    encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    # --- modality stubs ---
+    audio_stub: bool = False
+    vlm_stub: bool = False
+    num_patches: int = 0
+    vision_dim: int = 0
+    # --- extras ---
+    mtp: bool = False  # multi-token prediction head (DeepSeek-V3)
+    sliding_window: int = 0  # 0 = full attention (decode may override)
+    source: str = ""  # citation
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can natively run very long decode (SSM state or windowed attn)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Build the smoke-test variant: same family, tiny dims."""
+    small = dict(
+        name=cfg.name + "-smoke",
+        num_layers=2,
+        d_model=min(cfg.d_model, 256),
+        num_heads=4,
+        num_kv_heads=2 if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=64,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+    )
+    if cfg.moe:
+        small.update(num_experts=4, top_k=2, d_ff_expert=128,
+                     num_shared_experts=min(cfg.num_shared_experts, 1))
+    if cfg.mla:
+        small.update(kv_lora_rank=64, q_lora_rank=0, rope_head_dim=32)
+    if cfg.ssm or cfg.hybrid:
+        small.update(ssm_state=min(cfg.ssm_state, 16), ssm_head_dim=32, ssm_chunk=32)
+    if cfg.encoder_decoder:
+        small.update(num_encoder_layers=2)
+    if cfg.vlm_stub:
+        small.update(num_patches=16, vision_dim=64)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+    window: int = 0  # sliding-window override for decode on dense archs
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode", window=8_192)
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

@@ -1,0 +1,28 @@
+"""deepseek-v3-671b [moe] — MLA + 256-expert MoE + MTP. [arXiv:2412.19437]"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=2048,  # shared-expert width
+    d_ff_expert=2048,
+    vocab_size=129_280,
+    head_dim=128,
+    moe=True,
+    num_experts=256,
+    num_shared_experts=1,
+    top_k=8,
+    mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    rope_head_dim=64,
+    mtp=True,
+    activation="swiglu",
+    source="arXiv:2412.19437",
+)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,30 @@
+"""hymba-1.5b [hybrid] — parallel attention ‖ Mamba heads in each layer.
+[arXiv:2411.13676]
+
+25 attention heads (kv=5) run in parallel with SSM heads on the same
+input; outputs are mean-fused (the paper's hybrid-head module).
+"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32_001,
+    head_dim=64,
+    hybrid=True,
+    ssm_state=16,
+    ssm_head_dim=50,  # d_inner = 2·1600 = 3200 = 64 heads × 50
+    # Hymba uses sliding-window attention in all but three layers (the SSM
+    # heads carry the global context); we model the stack as fully windowed.
+    # Added in §Perf iteration C1 — also what makes long_500k native here.
+    sliding_window=1024,
+    activation="swiglu",
+    source="arXiv:2411.13676",
+)
+
+SMOKE = reduced(CONFIG, num_heads=4, num_kv_heads=2, ssm_head_dim=32)

@@ -1,0 +1,26 @@
+"""internvl2-2b [vlm] — InternViT (stub) + InternLM2 LM backbone.
+[arXiv:2404.16821]
+
+The vision encoder is a stub: ``input_specs`` supplies precomputed patch
+embeddings (B, 256, 1024); the framework implements the projector and the
+language decoder that consume them.
+"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    vlm_stub=True,
+    num_patches=256,
+    vision_dim=1024,
+    activation="swiglu",
+    source="arXiv:2404.16821",
+)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,21 @@
+"""mamba2-130m [ssm] — attention-free SSD. [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,  # attention-free, MLP-free: SSD blocks only (Mamba-2 design)
+    vocab_size=50_280,
+    ssm=True,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    activation="swiglu",
+    source="arXiv:2405.21060",
+)
+
+SMOKE = reduced(CONFIG, num_heads=0, num_kv_heads=0)

@@ -1,0 +1,17 @@
+"""nemotron-4-15b [dense] — GQA + squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=24_576,
+    vocab_size=256_000,
+    activation="sqrelu",
+    source="arXiv:2402.16819",
+)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

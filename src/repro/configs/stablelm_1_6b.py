@@ -1,0 +1,17 @@
+"""stablelm-1.6b [dense] — MHA (kv=heads=32). [hf:stabilityai/stablelm-2-1_6b]"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=5632,
+    vocab_size=100_352,
+    activation="swiglu",
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+
+SMOKE = reduced(CONFIG)

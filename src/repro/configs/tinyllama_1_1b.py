@@ -1,0 +1,17 @@
+"""tinyllama-1.1b [dense] — Llama-2 architecture, GQA kv=4. [arXiv:2401.02385]"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    num_layers=22,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=5632,
+    vocab_size=32_000,
+    activation="swiglu",
+    source="arXiv:2401.02385",
+)
+
+SMOKE = reduced(CONFIG)

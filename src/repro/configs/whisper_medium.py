@@ -1,0 +1,25 @@
+"""whisper-medium [audio] — encoder-decoder; conv frontend is a stub
+(``input_specs`` supplies precomputed frame embeddings). [arXiv:2212.04356]
+
+long_500k is SKIPPED for this arch (enc-dec with full attention; no 500k
+decode analogue) — see DESIGN.md §5.
+"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,  # decoder layers
+    num_encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51_865,
+    activation="gelu",
+    encoder_decoder=True,
+    audio_stub=True,
+    source="arXiv:2212.04356",
+)
+
+SMOKE = reduced(CONFIG)

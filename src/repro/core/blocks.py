@@ -1,0 +1,104 @@
+"""Block-chain abstraction of a partitionable DNN (paper §III-A).
+
+A model is a serial chain of ``M`` blocks with partition points
+``m ∈ {0, …, M}``: blocks ``1..m`` run on the device, the boundary
+activation is uplinked, blocks ``m+1..M`` run on the edge VM.
+
+All quantities are SI (bits, FLOPs, FLOPs/cycle, seconds, seconds²).
+The per-point arrays have length ``M+1`` (index = partition point):
+
+- ``d_bits[m]``   — uplink payload at point m (raw input at 0, result at M)
+- ``w_flops[m]``  — cumulative local FLOPs of blocks 1..m (0 at m=0)
+- ``g_eff[m]``    — fitted effective FLOPs/cycle for the 1..m prefix
+                    (paper eq. (10); fitted by NLS, Fig. 6)
+- ``v_loc[m]``    — variance of local inference time, max over the DVFS
+                    range (paper eq. (11)) — seconds²
+- ``t_vm[m]``     — mean edge (VM) time for blocks m+1..M (0 at m=M)
+- ``v_vm[m]``     — variance of the edge time — seconds²
+
+A ``Fleet`` stacks N devices (leading axis N) plus per-device platform and
+radio-link parameters; it is the single input bundle the planner consumes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+
+class BlockChain(NamedTuple):
+    d_bits: Array
+    w_flops: Array
+    g_eff: Array
+    v_loc: Array
+    t_vm: Array
+    v_vm: Array
+
+    @property
+    def num_points(self) -> int:
+        return self.d_bits.shape[-1]
+
+
+class Platform(NamedTuple):
+    """Local compute platform (paper Table II + κ measurements)."""
+
+    kappa: Array  # W / (cycle/s)^3
+    f_min: Array  # Hz
+    f_max: Array  # Hz
+
+
+class Link(NamedTuple):
+    """Radio link parameters of one device (paper §VI-A)."""
+
+    p_tx: Array  # W
+    gain: Array  # linear channel gain (10^(-PL_dB/10))
+
+
+class Fleet(NamedTuple):
+    """N devices: chains (N, M+1), platforms (N,), links (N,)."""
+
+    chain: BlockChain
+    platform: Platform
+    link: Link
+
+    @property
+    def num_devices(self) -> int:
+        return self.chain.d_bits.shape[0]
+
+    @property
+    def num_points(self) -> int:
+        return self.chain.d_bits.shape[-1]
+
+
+def broadcast_fleet(chain: BlockChain, platform: Platform, link_p: Array, link_gain: Array) -> Fleet:
+    """Tile a single chain/platform across N devices with per-device links."""
+    n = jnp.asarray(link_gain).shape[0]
+
+    def tile(a):
+        a = jnp.asarray(a, jnp.float64)
+        return jnp.broadcast_to(a, (n,) + a.shape)
+
+    return Fleet(
+        chain=BlockChain(*[tile(x) for x in chain]),
+        platform=Platform(*[tile(jnp.asarray(x, jnp.float64)) for x in platform]),
+        link=Link(p_tx=jnp.broadcast_to(jnp.asarray(link_p, jnp.float64), (n,)),
+                  gain=jnp.asarray(link_gain, jnp.float64)),
+    )
+
+
+def covariance(chain: BlockChain, rho: float = 0.9) -> Array:
+    """Full covariance matrix W_n of eq. (27).
+
+    Diagonals are the measured variances (v_loc + v_vm, the independent
+    local/VM components of eq. (21)); off-diagonals follow the paper's
+    observation that "the covariance curve closely matches the variance
+    curve" — we model w_{m,m'} = rho·√(w_mm·w_m'm'). Only the diagonal
+    enters the deterministic reformulation (28).
+    """
+    diag = chain.v_loc + chain.v_vm
+    sq = jnp.sqrt(jnp.maximum(diag, 0.0))
+    full = rho * sq[..., :, None] * sq[..., None, :]
+    m = diag.shape[-1]
+    eye = jnp.eye(m, dtype=full.dtype)
+    return full * (1.0 - eye) + diag[..., None] * eye

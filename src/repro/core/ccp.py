@@ -1,0 +1,54 @@
+"""Chance-constrained programming reformulations (paper §V, Theorem 1).
+
+The paper's Exact Conic Reformulation (ECR) for the mean–covariance
+ambiguity set (distribution-free, one-sided Chebyshev/Cantelli):
+
+    P{aᵀλ ≤ z} ≥ 1-ε   ⟺   aᵀλ̄ + √((1-ε)/ε) · √(aᵀCa) ≤ z
+
+We expose the safety multiplier σ(ε) for three ambiguity models:
+
+- ``cantelli``  — the paper's σ = √((1-ε)/ε). Exact for "any distribution
+  with this mean and covariance" — robust but conservative.
+- ``gaussian``  — σ = Φ⁻¹(1-ε). Valid if times are (approximately) normal
+  (the paper's ref. [16] reports near-Gaussian times on the A11 SoC).
+  Beyond-paper comparison point: quantifies Cantelli's conservatism.
+- ``hard``      — σ = 0 (deterministic constraint on the supplied times;
+  used by the worst-case baseline which plugs in upper bounds instead).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+
+def sigma_cantelli(eps):
+    """Paper's multiplier: σ = √((1-ε)/ε)."""
+    eps = jnp.asarray(eps, jnp.float64)
+    return jnp.sqrt((1.0 - eps) / jnp.maximum(eps, 1e-12))
+
+
+def sigma_gaussian(eps):
+    """Gaussian quantile multiplier: σ = Φ⁻¹(1-ε)."""
+    eps = jnp.asarray(eps, jnp.float64)
+    return ndtri(1.0 - eps)
+
+
+def sigma_hard(eps):
+    return jnp.zeros_like(jnp.asarray(eps, jnp.float64))
+
+
+SIGMA_FNS = {
+    "cantelli": sigma_cantelli,
+    "gaussian": sigma_gaussian,
+    "hard": sigma_hard,
+}
+
+
+def deterministic_deadline_margin(mean_total, var_total, eps, deadline, model="cantelli"):
+    """LHS − RHS of the ECR constraint (22)/(28): ≤ 0 means satisfied.
+
+    mean_total — E[T] (local + offload + VM), var_total — Var[T]
+    (independent local and VM components per eq. (21)).
+    """
+    sig = SIGMA_FNS[model](eps)
+    return mean_total + sig * jnp.sqrt(jnp.maximum(var_total, 0.0)) - deadline

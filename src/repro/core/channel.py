@@ -1,0 +1,64 @@
+"""Wireless uplink model (paper §III-B and §VI-A).
+
+FDMA uplink: device n gets bandwidth ``b_n`` (Hz) of the shared budget B.
+Spectral efficiency  η_n = log2(1 + p_n·h_n / (b_n·N0))  — note the noise
+power grows with the allocated band, so the *rate* R(b) = b·η(b) is
+increasing and concave in b, and 1/R(b) is convex (this is what makes the
+resource subproblem convex).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# 3GPP TR 36.931 pico-cell path loss (paper eq. in §VI-A):
+#   PL(dB) = 38 + 30·log10(r/m)
+N0_DBM_PER_HZ = -174.0
+
+
+def noise_psd_watt_per_hz(n0_dbm_per_hz: float = N0_DBM_PER_HZ) -> float:
+    return 10.0 ** ((n0_dbm_per_hz - 30.0) / 10.0)
+
+
+def pathloss_gain(r_m):
+    """Linear channel gain from the 3GPP pico path-loss model."""
+    pl_db = 38.0 + 30.0 * jnp.log10(jnp.asarray(r_m, jnp.float64))
+    return 10.0 ** (-pl_db / 10.0)
+
+
+def spectral_efficiency(b, p_tx, gain, n0=None):
+    """η(b) = log2(1 + p·h/(b·N0)) in bit/s/Hz; safe at b→0⁺."""
+    n0 = noise_psd_watt_per_hz() if n0 is None else n0
+    b = jnp.maximum(b, 1e-3)  # numerical floor: 1 mHz
+    return jnp.log2(1.0 + p_tx * gain / (b * n0))
+
+
+def uplink_rate(b, p_tx, gain, n0=None):
+    """R(b) = b·η(b) in bit/s — increasing, concave, R(0)=0."""
+    return jnp.maximum(b, 0.0) * spectral_efficiency(b, p_tx, gain, n0)
+
+
+def offload_time(d_bits, b, p_tx, gain, n0=None):
+    """t_off = d / R(b)  (paper eq. (3))."""
+    return d_bits / jnp.maximum(uplink_rate(b, p_tx, gain, n0), 1e-12)
+
+
+def offload_energy(d_bits, b, p_tx, gain, n0=None):
+    """e_off = p·t_off  (paper eq. (4))."""
+    return p_tx * offload_time(d_bits, b, p_tx, gain, n0)
+
+
+def offload_time_std(d_bits, b, p_tx, gain_mean, gain_cv, n0=None):
+    """Std of t_off under channel-gain uncertainty (paper footnote 2).
+
+    Delta method around h̄: t_off(h) = d/(b·log2(1+p·h/(b·N0))), so
+      ∂t/∂h = −t_off · [p/(ln2·(b·N0+p·h))] / η(b)
+    and std[t_off] ≈ t_off · (h̄·|∂logt/∂h|) · cv_h. Exact for small cv;
+    validated by Monte-Carlo in tests/test_channel_robust.py.
+    """
+    n0 = noise_psd_watt_per_hz() if n0 is None else n0
+    b = jnp.maximum(b, 1e-3)
+    eta = spectral_efficiency(b, p_tx, gain_mean, n0)
+    t = offload_time(d_bits, b, p_tx, gain_mean, n0)
+    snr_term = p_tx * gain_mean / (b * n0 + p_tx * gain_mean)
+    rel_sens = snr_term / (jnp.log(2.0) * jnp.maximum(eta, 1e-9))
+    return t * rel_sens * gain_cv

@@ -1,0 +1,29 @@
+"""Device energy models (paper §III-B, eqs. (2), (4), (15)).
+
+Local compute: CMOS dynamic power  α·c·V²·f with V ∝ f in the non-low
+frequency range gives  P = κ·f³, so the energy of the local prefix is
+``e_loc = κ·f³·t_loc``. With the mean time model t̄_loc = w/(g·f) (eq. 10),
+the *expected* local energy is  κ·(w/g)·f²  — eq. (15).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def local_power(kappa, f):
+    return kappa * f**3
+
+
+def local_energy(kappa, f, t_loc):
+    """e_loc = κ f³ t_loc (eq. (2))."""
+    return kappa * f**3 * t_loc
+
+
+def expected_local_energy(kappa, w_flops, g_eff, f):
+    """E[e_loc] = κ (w/g) f² (the first term of eq. (15))."""
+    return kappa * (w_flops / jnp.maximum(g_eff, 1e-30)) * f**2
+
+
+def mean_local_time(w_flops, g_eff, f):
+    """t̄_loc = w/(g·f) (eq. (10))."""
+    return w_flops / (jnp.maximum(g_eff, 1e-30) * jnp.maximum(f, 1.0))

@@ -1,0 +1,264 @@
+"""Algorithm 2 — alternating robust partitioning + resource allocation.
+
+Policies (all share the same alternation skeleton):
+
+- ``"robust"``      — the paper: CCP margins (Cantelli σ) + PCCP partitioning.
+- ``"robust_exact"``— beyond-paper: CCP margins + *exact per-device
+                      enumeration* of the partition point (the decoupling
+                      observation in DESIGN.md §2); certifies PCCP.
+- ``"gaussian"``    — beyond-paper: Gaussian quantile σ instead of Cantelli
+                      (tighter margins when times are near-normal).
+- ``"worst_case"``  — §VI baseline: upper-bound times (mean + 3σ), no
+                      probabilistic slack (hard deadline).
+- ``"optimal"``     — §VI baseline: joint exhaustive search implemented as
+                      price-based exact enumeration over (m, b, f)
+                      (optimal because the problem decouples at a fixed
+                      bandwidth price; see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ccp, channel, energy
+from repro.core.blocks import Fleet
+from repro.core.pccp import pccp_partition
+from repro.core.resource import Allocation, _device_best_b, allocate, deadline_budget, select_point
+from repro.solvers.scalar import bisect
+
+_POLICIES = ("robust", "robust_exact", "gaussian", "worst_case", "optimal")
+
+
+class Plan(NamedTuple):
+    m_sel: jnp.ndarray  # (N,) partition points
+    alloc: Allocation  # bandwidth / frequency allocation
+    total_energy: jnp.ndarray  # scalar objective (9a)
+    feasible: jnp.ndarray  # (N,) chance/hard constraint satisfied
+    objective_trace: jnp.ndarray  # (outer_iters,) Algorithm-2 trajectory (Fig. 10)
+    pccp_iters: jnp.ndarray  # (outer_iters, N) Algorithm-1 iterations (Fig. 9)
+    margins: jnp.ndarray  # (N,) deadline margin (≤0 ⇒ guaranteed)
+
+
+def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
+    """Per-(device, point) energy/time/variance tables at fixed (b, f)."""
+    c, plat, link = fleet.chain, fleet.platform, fleet.link
+    f = alloc.f[:, None]
+    b = alloc.b[:, None]
+    e_loc = energy.expected_local_energy(plat.kappa[:, None], c.w_flops, c.g_eff, f)
+    t_loc = energy.mean_local_time(c.w_flops, c.g_eff, f)
+    t_off = channel.offload_time(c.d_bits, b, link.p_tx[:, None], link.gain[:, None])
+    e_off = link.p_tx[:, None] * t_off
+    e_table = e_loc + e_off
+    t_table = t_loc + t_off + c.t_vm
+    var_table = c.v_loc + c.v_vm
+    if channel_cv > 0.0:  # joint channel robustness (paper footnote 2)
+        std_off = channel.offload_time_std(
+            c.d_bits, b, link.p_tx[:, None], link.gain[:, None], channel_cv)
+        var_table = var_table + std_off**2
+    return e_table, t_table, var_table
+
+
+def _exact_partition(e_table, t_table, var_table, sigma, deadline):
+    """Exact per-device enumeration under the ECR constraint (28)."""
+    margin = t_table + sigma[:, None] * jnp.sqrt(jnp.maximum(var_table, 0.0)) - deadline[:, None]
+    # Tolerance: allocate() drives f to meet the deadline *exactly*, so the
+    # incumbent point sits at margin ≈ +ulp; treat it as feasible.
+    feas = margin <= 1e-9
+    e_masked = jnp.where(feas, e_table, jnp.inf)
+    m_feas = jnp.argmin(e_masked, axis=-1)
+    any_feas = jnp.any(feas, axis=-1)
+    m_least_bad = jnp.argmin(margin, axis=-1)
+    m_sel = jnp.where(any_feas, m_feas, m_least_bad).astype(jnp.int32)
+    return m_sel, jnp.take_along_axis(feas, m_sel[:, None], -1)[:, 0]
+
+
+#: Worst-case baseline upper bound: mean + UB_K·std. Fig. 1/5 show
+#: heavy-tailed outliers (spikes ≫ mean); the empirical max of the paper's
+#: 500-sample campaigns corresponds to ≈ mean + 8·std for such tails.
+WORST_CASE_UB_K = 8.0
+
+
+def _ub_k(policy: str) -> float:
+    return WORST_CASE_UB_K if policy == "worst_case" else 0.0
+
+
+def _sigma_model(policy: str) -> str:
+    return {"gaussian": "gaussian", "worst_case": "hard"}.get(policy, "cantelli")
+
+
+def plan(
+    fleet: Fleet,
+    deadline: jnp.ndarray,
+    eps: jnp.ndarray,
+    B: float,
+    policy: str = "robust",
+    outer_iters: int = 6,
+    init_m: Optional[jnp.ndarray] = None,
+    pccp_iters: int = 10,
+    multi_start: bool = True,
+    channel_cv: float = 0.0,
+) -> Plan:
+    """Run Algorithm 2 (or a baseline policy) and return the plan.
+
+    ``multi_start`` follows Fig. 10: the alternation converges to a
+    stationary point that depends on the initial partition point, so we run
+    it from a small spread of starts and keep the best feasible plan.
+    """
+    if policy not in _POLICIES:
+        raise ValueError(f"policy must be one of {_POLICIES}, got {policy!r}")
+    if policy == "optimal":
+        return plan_optimal(fleet, deadline, eps, B)
+
+    if multi_start and init_m is None:
+        m1 = fleet.num_points
+        starts = sorted({1, m1 // 2, (3 * m1) // 4, max(m1 - 2, 1), m1 - 1})
+        plans = [
+            plan(fleet, deadline, eps, B, policy, outer_iters, jnp.int32(s),
+                 pccp_iters, multi_start=False, channel_cv=channel_cv)
+            for s in starts
+        ]
+
+        def score(p: Plan):
+            # feasible plans first, then lowest energy
+            return (float(jnp.sum(~p.feasible)), float(p.total_energy))
+
+        return min(plans, key=score)
+
+    n, m1 = fleet.num_devices, fleet.num_points
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
+    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
+    sig_model = _sigma_model(policy)
+    ub_k = _ub_k(policy)
+    sigma = ccp.SIGMA_FNS[sig_model](eps)
+
+    # Default initial point: full local inference (m = M). The alternation
+    # is sensitive to its start (paper Fig. 10 uses interior points): m = 0
+    # pins f at f_min which makes every local prefix look deadline-
+    # infeasible in the partitioning step. Starting from full-local
+    # allocates a high frequency, from which all prefixes are reachable.
+    m = (
+        jnp.full((n,), m1 - 1, jnp.int32)
+        if init_m is None
+        else jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))
+    )
+
+    traces, pccp_trace = [], []
+    feasible = jnp.ones((n,), bool)
+    alloc = None
+    for _ in range(outer_iters):
+        alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
+        e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
+        if ub_k > 0.0:  # worst-case baseline: inflate times, drop variance
+            t_table = t_table + ub_k * (
+                jnp.sqrt(jnp.maximum(fleet.chain.v_loc, 0.0))
+                + jnp.sqrt(jnp.maximum(fleet.chain.v_vm, 0.0))
+            )
+            var_table = jnp.zeros_like(var_table)
+        if policy == "robust":
+            x_init = jax.nn.one_hot(m, m1, dtype=jnp.float64)
+            res = pccp_partition(
+                e_table, t_table, var_table, sigma, deadline, x_init, num_iters=pccp_iters
+            )
+            m, feasible = res.m_sel, res.feasible
+            pccp_trace.append(res.iters_to_converge)
+        else:  # robust_exact / gaussian / worst_case → exact enumeration
+            m, feasible = _exact_partition(e_table, t_table, var_table, sigma, deadline)
+            pccp_trace.append(jnp.ones((n,), jnp.int32))
+        obj = jnp.sum(jnp.take_along_axis(e_table, m[:, None], -1)[:, 0])
+        traces.append(obj)
+
+    alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
+    sel = select_point(fleet, m)
+    t_mean = (
+        energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
+        + channel.offload_time(sel.d_bits, alloc.b, fleet.link.p_tx, fleet.link.gain)
+        + sel.t_vm
+    )
+    margins = ccp.deterministic_deadline_margin(
+        t_mean, sel.v_loc + sel.v_vm, eps, deadline, sig_model
+    )
+    return Plan(
+        m_sel=m,
+        alloc=alloc,
+        total_energy=jnp.sum(alloc.energy),
+        feasible=feasible & alloc.feasible,
+        objective_trace=jnp.stack(traces),
+        pccp_iters=jnp.stack(pccp_trace),
+        margins=margins,
+    )
+
+
+def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") -> Plan:
+    """§VI "Optimal policy": joint exact search over (m, b, f).
+
+    At a fixed bandwidth price λ the joint problem separates per device
+    *and* per candidate point: solve the 1-D convex bandwidth problem for
+    every (n, m), take the per-device argmin over m, then bisect λ until
+    Σ b ≤ B. Complexity O(N·M·log) — equivalent to the paper's exhaustive
+    baseline (which is exponential only because it enumerates x jointly).
+    """
+    n, m1 = fleet.num_devices, fleet.num_points
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
+    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
+    c, plat, link = fleet.chain, fleet.platform, fleet.link
+    sigma = ccp.SIGMA_FNS[sigma_model](eps)
+
+    budget_all = (
+        deadline[:, None]
+        - c.t_vm
+        - sigma[:, None] * jnp.sqrt(jnp.maximum(c.v_loc + c.v_vm, 0.0))
+    )  # (N, M+1)
+
+    def per_point(lam, bud, d, w, g, k, fmin, fmax, p, h):
+        b, f, feas = _device_best_b(lam, bud, d, w, g, k, fmin, fmax, p, h, B)
+        e = energy.expected_local_energy(k, w, g, f) + channel.offload_energy(d, b, p, h)
+        cost = jnp.where(feas, e + lam * b, jnp.inf)
+        return cost, b, f, e, feas
+
+    vm_points = jax.vmap(per_point, in_axes=(None, 0, 0, 0, 0, None, None, None, None, None))
+    vm_devices = jax.vmap(vm_points, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+
+    def solve_at(lam):
+        cost, b, f, e, feas = vm_devices(
+            lam, budget_all, c.d_bits, c.w_flops, c.g_eff,
+            plat.kappa, plat.f_min, plat.f_max, link.p_tx, link.gain,
+        )
+        any_feas = jnp.any(feas, axis=-1)
+        m_sel = jnp.where(any_feas, jnp.argmin(cost, -1), jnp.argmax(budget_all, -1))
+        pick = lambda a: jnp.take_along_axis(a, m_sel[:, None], -1)[:, 0]
+        return m_sel.astype(jnp.int32), pick(b), pick(f), pick(e), pick(feas) & any_feas
+
+    _, b0, *_ = solve_at(jnp.asarray(0.0, jnp.float64))
+    need_price = jnp.sum(b0) > B
+
+    def excess(log_lam):
+        _, b, *_ = solve_at(10.0**log_lam)
+        return jnp.sum(b) - B
+
+    log_lam = bisect(excess, -16.0, 2.0, iters=60)
+    lam = jnp.where(need_price, 10.0**log_lam, 0.0)
+    m_sel, b, f, e, feas = solve_at(lam)
+
+    sel = select_point(fleet, m_sel)
+    e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
+    e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
+    alloc = Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas, lam=lam)
+    t_mean = (
+        energy.mean_local_time(sel.w_flops, sel.g_eff, f)
+        + channel.offload_time(sel.d_bits, b, link.p_tx, link.gain)
+        + sel.t_vm
+    )
+    margins = ccp.deterministic_deadline_margin(
+        t_mean, sel.v_loc + sel.v_vm, eps, deadline, sigma_model
+    )
+    return Plan(
+        m_sel=m_sel,
+        alloc=alloc,
+        total_energy=jnp.sum(alloc.energy),
+        feasible=feas,
+        objective_trace=jnp.sum(alloc.energy)[None],
+        pccp_iters=jnp.ones((1, fleet.num_devices), jnp.int32),
+        margins=margins,
+    )

@@ -1,0 +1,270 @@
+"""Resource-allocation subproblem (paper §V-B, problems (16) → (23)).
+
+Given a partition decision m_n per device, jointly allocate uplink
+bandwidth b_n (Σ b_n ≤ B) and DVFS frequency f_n ∈ [f_min, f_max] to
+minimize expected energy under the ECR-deterministic deadline (22).
+
+Two solvers:
+
+- ``allocate`` (primary): Lagrangian dual on the single coupling
+  constraint Σ b_n ≤ B. For a bandwidth price λ the problem separates per
+  device; the inner 1-D problem over b is convex (partial minimization
+  over f is closed-form), solved by grid+golden section; λ is found by
+  bisection on Σ b*(λ) − B. Strong duality holds (convex + Slater), so
+  this matches the paper's interior-point optimum.
+- ``allocate_ipm`` (cross-check): the paper-faithful joint interior-point
+  solve of (23) in scaled variables, used in tests to certify ``allocate``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ccp, channel, energy
+from repro.core.blocks import Fleet
+from repro.solvers.scalar import bisect, golden_section
+from repro.solvers.ipm import BarrierSpec, barrier_solve
+
+_BIG = 1e9
+_TINY_B = 1e-3  # Hz floor for allocated bandwidth
+
+
+class Selected(NamedTuple):
+    """Per-device chain quantities at the chosen partition point."""
+
+    d_bits: jnp.ndarray
+    w_flops: jnp.ndarray
+    g_eff: jnp.ndarray
+    v_loc: jnp.ndarray
+    t_vm: jnp.ndarray
+    v_vm: jnp.ndarray
+
+
+class Allocation(NamedTuple):
+    b: jnp.ndarray  # (N,) Hz
+    f: jnp.ndarray  # (N,) Hz
+    e_loc: jnp.ndarray  # (N,) J (expected)
+    e_off: jnp.ndarray  # (N,) J
+    feasible: jnp.ndarray  # (N,) bool
+    lam: jnp.ndarray  # scalar dual price of bandwidth
+
+    @property
+    def energy(self):
+        return self.e_loc + self.e_off
+
+
+def select_point(fleet: Fleet, m_sel: jnp.ndarray) -> Selected:
+    """Gather chain columns at per-device partition points (N,)."""
+    c = fleet.chain
+    take = lambda a: jnp.take_along_axis(a, m_sel[:, None], axis=-1)[:, 0]
+    return Selected(
+        d_bits=take(c.d_bits),
+        w_flops=take(c.w_flops),
+        g_eff=take(c.g_eff),
+        v_loc=take(c.v_loc),
+        t_vm=take(c.t_vm),
+        v_vm=take(c.v_vm),
+    )
+
+
+def deadline_budget(sel: Selected, deadline, eps, sigma_model="cantelli", ub_k=0.0):
+    """D' = D − t̄_vm − σ(ε)·√(v_loc+v_vm) − ub_k·(√v_loc+√v_vm).
+
+    The local+offload time must fit inside D'. ``ub_k`` > 0 implements the
+    worst-case baseline (§VI: "upper bound of t_loc and t_vm"): means are
+    replaced by mean + ub_k·std and no probabilistic slack is taken.
+    """
+    sig = ccp.SIGMA_FNS[sigma_model](eps)
+    return (
+        deadline
+        - sel.t_vm
+        - sig * jnp.sqrt(jnp.maximum(sel.v_loc + sel.v_vm, 0.0))
+        - ub_k * (jnp.sqrt(jnp.maximum(sel.v_loc, 0.0)) + jnp.sqrt(jnp.maximum(sel.v_vm, 0.0)))
+    )
+
+
+def _device_best_b(lam, budget, d, w, g, kappa, f_min, f_max, p_tx, gain, B,
+                   sigma=0.0, v_base=0.0, channel_cv=0.0):
+    """Optimal (cost, b, f) for one device at bandwidth price λ.
+
+    For fixed b: t_off = d/R(b); the deadline forces
+    f ≥ f_req(b) = w / (g·(budget_eff(b) − t_off)); energy rises with f, so
+    f*(b) = clip(f_req, f_min, f_max). The remaining 1-D problem in b is
+    convex (1/R is convex); we restrict to the feasible interval
+    [b_feas, B] computed by bisection on the concave rate R.
+
+    With channel uncertainty (paper footnote 2; ``channel_cv`` > 0) the
+    offload time is random too: Var[T] = v_base + v_off(b) and the ECR
+    budget shrinks by σ·(√(v_base+v_off(b)) − √v_base). The golden search
+    handles the (quasi-convex) extra term.
+    """
+
+    def _budget_eff(b):
+        if channel_cv <= 0.0:
+            return budget
+        std_off = channel.offload_time_std(d, b, p_tx, gain, channel_cv)
+        return budget - sigma * (
+            jnp.sqrt(jnp.maximum(v_base + std_off**2, 0.0))
+            - jnp.sqrt(jnp.maximum(v_base, 0.0))
+        )
+    # Smallest feasible b: R(b) ≥ d / (budget − w/(g·f_max)).
+    slack_at_fmax = budget - w / (jnp.maximum(g, 1e-30) * f_max)
+    need_rate = d / jnp.maximum(slack_at_fmax, 1e-12)
+    rate_fn = lambda b: channel.uplink_rate(b, p_tx, gain) - need_rate
+    b_feas = bisect(rate_fn, _TINY_B, B)
+    feasible = (slack_at_fmax > 0.0) & (channel.uplink_rate(B, p_tx, gain) >= need_rate)
+    b_lo = jnp.where(feasible, jnp.minimum(b_feas * (1.0 + 1e-9) + _TINY_B, B), B * 0.5)
+
+    def cost_fn(b):
+        t_off = channel.offload_time(d, b, p_tx, gain)
+        local_slack = jnp.maximum(_budget_eff(b) - t_off, 1e-12)
+        f_req = w / (jnp.maximum(g, 1e-30) * local_slack)
+        f = jnp.clip(f_req, f_min, f_max)
+        e = energy.expected_local_energy(kappa, w, g, f) + channel.offload_energy(
+            d, b, p_tx, gain
+        )
+        return e + lam * b
+
+    b_star = golden_section(cost_fn, b_lo, B)
+    t_off = channel.offload_time(d, b_star, p_tx, gain)
+    local_slack = jnp.maximum(_budget_eff(b_star) - t_off, 1e-12)
+    f_req = w / (jnp.maximum(g, 1e-30) * local_slack)
+    f_star = jnp.clip(f_req, f_min, f_max)
+    t_loc = energy.mean_local_time(w, g, f_star)
+    feasible = feasible & (t_loc + t_off <= _budget_eff(b_star) + 1e-9)
+    return b_star, f_star, feasible
+
+
+@partial(jax.jit, static_argnames=("sigma_model", "channel_cv"))
+def allocate(
+    fleet: Fleet,
+    m_sel: jnp.ndarray,
+    deadline: jnp.ndarray,
+    eps: jnp.ndarray,
+    B: float,
+    sigma_model: str = "cantelli",
+    ub_k: float = 0.0,
+    channel_cv: float = 0.0,
+) -> Allocation:
+    """Solve problem (23) by dual decomposition over Σ b_n ≤ B.
+
+    ``channel_cv`` > 0 enables the joint inference-time + channel-state
+    robustness extension (paper footnote 2).
+    """
+    sel = select_point(fleet, m_sel)
+    budget = deadline_budget(sel, deadline, eps, sigma_model, ub_k)
+    sigma = ccp.SIGMA_FNS[sigma_model](jnp.broadcast_to(
+        jnp.asarray(eps, jnp.float64), (fleet.num_devices,)))
+    v_base = jnp.maximum(sel.v_loc + sel.v_vm, 0.0)
+    plat, link = fleet.platform, fleet.link
+
+    per_device = jax.vmap(
+        lambda lam, bud, d, w, g, k, fmin, fmax, p, h, sg, vb: _device_best_b(
+            lam, bud, d, w, g, k, fmin, fmax, p, h, B,
+            sigma=sg, v_base=vb, channel_cv=channel_cv,
+        ),
+        in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
+    )
+
+    def solve_at(lam):
+        return per_device(
+            lam,
+            budget,
+            sel.d_bits,
+            sel.w_flops,
+            sel.g_eff,
+            plat.kappa,
+            plat.f_min,
+            plat.f_max,
+            link.p_tx,
+            link.gain,
+            sigma,
+            v_base,
+        )
+
+    b0, _, _ = solve_at(jnp.asarray(0.0, jnp.float64))
+    need_price = jnp.sum(b0) > B
+
+    def excess(log_lam):
+        b, _, _ = solve_at(10.0**log_lam)
+        return jnp.sum(b) - B
+
+    log_lam = bisect(excess, -16.0, 2.0, iters=60)
+    lam = jnp.where(need_price, 10.0**log_lam, 0.0)
+    b, f, feas = solve_at(lam)
+    # If the price was active, rescale residual slack to exactly meet B
+    # (bisection leaves O(1e-14 B) slack; harmless but keep Σb ≤ B exact).
+    total = jnp.sum(b)
+    b = jnp.where(need_price & (total > B), b * (B / total), b)
+
+    e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
+    e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
+    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas, lam=lam)
+
+
+def allocate_ipm(
+    fleet: Fleet,
+    m_sel: jnp.ndarray,
+    deadline: jnp.ndarray,
+    eps: jnp.ndarray,
+    B: float,
+    sigma_model: str = "cantelli",
+    init: Allocation | None = None,
+) -> Allocation:
+    """Paper-faithful joint interior-point solve of (23) (for cross-checks).
+
+    Variables are scaled: β = b/B ∈ (0,1], φ = f/f_max ∈ [f_min/f_max, 1].
+    """
+    sel = select_point(fleet, m_sel)
+    budget = deadline_budget(sel, deadline, eps, sigma_model)
+    plat, link = fleet.platform, fleet.link
+    n = fleet.num_devices
+
+    if init is None:
+        init = allocate(fleet, m_sel, deadline, eps, B, sigma_model)
+
+    def unpack(z):
+        return z[:n] * B, z[n:] * plat.f_max  # b, f
+
+    def objective(z):
+        b, f = unpack(z)
+        e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
+        e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
+        return jnp.sum(e_loc + e_off)
+
+    def inequalities(z):
+        b, f = unpack(z)
+        t_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, f)
+        t_off = channel.offload_time(sel.d_bits, b, link.p_tx, link.gain)
+        ddl = t_loc + t_off - budget  # ≤ 0
+        return jnp.concatenate(
+            [
+                ddl,
+                (jnp.sum(b) - B)[None],
+                _TINY_B - b,
+                plat.f_min - f,
+                f - plat.f_max,
+            ]
+        )
+
+    # Strictly feasible start: nudge the dual solution into the interior.
+    b0 = jnp.clip(init.b, _TINY_B * 2, B)
+    b0 = b0 * jnp.minimum(1.0, 0.999 * B / jnp.sum(b0))
+    f0 = jnp.clip(init.f * 1.02, plat.f_min * 1.0001, plat.f_max * 0.9999)
+    z0 = jnp.concatenate([b0 / B, f0 / plat.f_max])
+
+    res = barrier_solve(
+        BarrierSpec(objective=objective, inequalities=inequalities),
+        z0,
+        t0=1e2,
+        mu=10.0,
+        outer_iters=12,
+        newton_iters=20,
+    )
+    b, f = unpack(res.z)
+    e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
+    e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
+    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=init.feasible, lam=init.lam)

@@ -1,0 +1,77 @@
+"""Inference-time statistics under DVFS (paper §IV).
+
+- Mean model: t̄(f) = w / (g·f), with g fitted per (model, block,
+  platform) by nonlinear least squares (Fig. 6).
+- Variance: irregular in f, so the paper takes the max over the DVFS
+  range (eq. (11)); covariance likewise (eq. (12)).
+- ``measure_profile`` turns raw (frequency, samples) measurements into the
+  (g, v_loc) entries a BlockChain needs — this is the online-profiling
+  path a deployment would run, and what our serving engine feeds back.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.nls import LMResult, fit_inverse_frequency
+
+
+class ProfiledPoint(NamedTuple):
+    g_eff: jnp.ndarray  # fitted FLOPs/cycle
+    v_loc: jnp.ndarray  # max-over-frequency variance (s²)
+    fit_residual_sq: jnp.ndarray  # ‖residual‖² of the NLS fit (paper's metric)
+
+
+def fit_g(freqs_hz: jnp.ndarray, mean_times_s: jnp.ndarray, w_flops) -> LMResult:
+    """Fit g in t̄ = w/(g·f) from mean times at several frequencies."""
+    res = fit_inverse_frequency(freqs_hz, mean_times_s)
+    a = res.params[0]  # a = w/g
+    g = w_flops / jnp.maximum(a, 1e-30)
+    return LMResult(params=jnp.array([g]), residual_norm_sq=res.residual_norm_sq,
+                    iterations=res.iterations)
+
+
+def max_variance(per_freq_samples: jnp.ndarray) -> jnp.ndarray:
+    """eq. (11): v = max_f Var[t(f)] over the scaling range.
+
+    per_freq_samples: (num_freqs, num_samples) of measured times (s).
+    """
+    v = jnp.var(per_freq_samples, axis=-1, ddof=1)
+    return jnp.max(v)
+
+
+def max_covariance(samples_a: jnp.ndarray, samples_b: jnp.ndarray) -> jnp.ndarray:
+    """eq. (12): w_{m,m'} = max_f Cov[t_m(f), t_m'(f)]."""
+    a = samples_a - samples_a.mean(-1, keepdims=True)
+    b = samples_b - samples_b.mean(-1, keepdims=True)
+    cov = (a * b).sum(-1) / (a.shape[-1] - 1)
+    return jnp.max(cov)
+
+
+def measure_profile(freqs_hz, samples, w_flops) -> ProfiledPoint:
+    """Full profiling pipeline for one partition point.
+
+    samples: (num_freqs, num_samples) measured local times at each
+    frequency. Returns the fitted g and the conservative variance.
+    """
+    mean_t = samples.mean(-1)
+    fit = fit_g(freqs_hz, mean_t, w_flops)
+    return ProfiledPoint(
+        g_eff=fit.params[0],
+        v_loc=max_variance(samples),
+        fit_residual_sq=fit.residual_norm_sq,
+    )
+
+
+def synth_samples(key, freqs_hz, w_flops, g_true, cv=0.08, num_samples=500):
+    """Synthesize per-frequency time measurements with gamma noise.
+
+    Mirrors the paper's 500-trial measurement campaign: mean w/(g·f),
+    coefficient of variation ``cv`` (inference-time jitter).
+    """
+    mean = w_flops / (g_true * freqs_hz)  # (F,)
+    k = 1.0 / cv**2
+    g = jax.random.gamma(key, k, shape=(freqs_hz.shape[0], num_samples))
+    return mean[:, None] * (g / k)

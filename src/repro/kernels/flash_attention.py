@@ -1,0 +1,115 @@
+"""Flash attention (online softmax) as a Pallas TPU kernel.
+
+TPU-native design decisions (DESIGN.md §4):
+- BlockSpec tiling: queries in (BLK_Q, Dh) VMEM tiles, K/V streamed in
+  (BLK_K, Dh) tiles along the innermost grid axis; running max/denominator
+  and the output accumulator live in VMEM scratch across the K sweep.
+- Tile sizes default to 128 — MXU-aligned (128×128 systolic array) and
+  a multiple of the (8,128) vreg tile for f32.
+- GQA folds query-head groups onto KV heads via the K/V index_map, so no
+  repeated KV materialization in HBM.
+- Causal + sliding-window masking is applied per tile; fully-masked tiles
+  write nothing (the mask zeroes their contribution).
+
+Validated in interpret mode against ``ref.flash_attention_ref`` over
+shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int, blk_q: int, blk_k: int,
+                 num_k_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (blk_q, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (blk_k, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (blk_q, blk_k)
+
+    rows = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    cols = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    blk_q: int = 128, blk_k: int = 128, interpret: bool = True,
+):
+    """q: (B, Hq, S, Dh), k/v: (B, Hkv, S, Dh) → (B, Hq, S, Dh).
+
+    S must be a multiple of the block sizes (pad upstream in ops.py).
+    ``interpret=True`` executes on CPU for validation; on TPU pass False.
+    """
+    to32 = lambda t: t.astype(jnp.float32) if t.dtype == jnp.float64 else t
+    q, k, v = map(to32, (q, k, v))
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+    nq, nk = s // blk_q, s // blk_k
+    scale = dh**-0.5
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, dh), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh), lambda b_, h, qi, ki: (b_, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh), lambda b_, h, qi, ki: (b_, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, dh), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

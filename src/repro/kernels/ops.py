@@ -1,0 +1,43 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+These handle layout adaptation (the model uses (B, S, H, Dh); the kernels
+use (B, H, S, Dh)), sequence padding to block multiples, and the
+CPU-vs-TPU dispatch (``interpret=True`` executes the kernel body on CPU
+for validation; on a real TPU pass ``interpret=False``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm_residual
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["flash_attention_bshd", "ssd_scan", "rmsnorm_residual", "flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention_bshd(q, k, v, *, causal: bool = True, window: int = 0,
+                         interpret: bool = True):
+    """Model-layout wrapper: q (B,S,Hq,Dh), k/v (B,S,Hkv,Dh) → (B,S,Hq·Dh).
+
+    Pads S to a 128 multiple (padded keys are masked out by causality for
+    suffix padding; for non-causal use explicit masking upstream).
+    """
+    b, s, hq, dh = q.shape
+    blk = min(128, max(16, 1 << (s - 1).bit_length() if s < 128 else 128))
+    pad = (-s) % blk
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          blk_q=blk, blk_k=blk, interpret=interpret)
+    out = out[:, :, :s]
+    return jnp.moveaxis(out, 1, 2).reshape(b, s, hq * dh)

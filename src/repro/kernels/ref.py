@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    """q: (B, Hq, S, Dh); k/v: (B, Hkv, S, Dh). GQA by head folding."""
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = dh**-0.5 if scale is None else scale
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= j > i - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(vv.dtype), vv)
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, chunk: int):
+    """Delegates to the model-layer chunked SSD oracle (same math)."""
+    from repro.models.ssm import ssd_reference
+
+    return ssd_reference(x, dt, a, b_mat, c_mat, chunk)[0]
+
+
+def rmsnorm_residual_ref(x, res, scale, eps: float = 1e-5):
+    """Fused y = rmsnorm(x + res) and new residual (x + res).
+
+    The residual add happens in f32 (matching the kernel, which keeps the
+    tile in f32 VMEM) — adding in bf16 first loses a rounding step.
+    """
+    h = x.astype(jnp.float32) + res.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype), h.astype(x.dtype)

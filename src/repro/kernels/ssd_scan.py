@@ -1,0 +1,96 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU-native design (DESIGN.md §4): the sequential recurrence is recast in
+its state-space-dual form — per chunk, the output is an (cs × cs) masked
+"attention" matmul (MXU work) plus a rank-N state contribution; the
+(P × N) inter-chunk state is carried in VMEM scratch across the chunk
+grid axis (TPU grids iterate sequentially, so scratch acts as the scan
+carry). All chunk matmuls are f32 on the MXU.
+
+Grid: (B, H, num_chunks) — chunks innermost so the carry is correct.
+Validated in interpret mode vs ``ref.ssd_scan_ref`` (= models.ssm oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (cs, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (cs,)
+    a = a_ref[0].astype(jnp.float32)  # scalar decay rate (negative)
+    b = b_ref[0, 0, 0].astype(jnp.float32)  # (cs, N)
+    c = c_ref[0, 0, 0].astype(jnp.float32)  # (cs, N)
+
+    da = dt * a  # (cs,)
+    cum = jnp.cumsum(da)  # (cs,)
+
+    # Intra-chunk dual form: L[i,j] = exp(cum_i - cum_j) for j ≤ i.
+    li = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (chunk, chunk), 1
+    )
+    decay = jnp.where(tri, jnp.exp(li), 0.0)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (cs, cs)
+    m = cb * decay * dt[None, :]
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)  # (cs, P)
+
+    # Inter-chunk: contribution of the carried state.
+    state = state_ref[...]  # (P, N)
+    y += jnp.exp(cum)[:, None] * jnp.dot(c, state.T, preferred_element_type=jnp.float32)
+
+    # Update carry: state ← state·exp(Σda) + Σ_j exp(cum_end − cum_j)·dt_j·x_j ⊗ B_j
+    w = (jnp.exp(cum[-1] - cum) * dt)[:, None] * x  # (cs, P)
+    state_new = state * jnp.exp(cum[-1]) + jnp.dot(w.T, b, preferred_element_type=jnp.float32)
+    state_ref[...] = state_new
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128, interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,N) → y: (B,S,H,P).
+
+    Matches ``repro.models.ssm.ssd_reference`` (single B/C group).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # kernel computes in f32; f64 inputs (x64 mode) are downcast here
+    to32 = lambda t: t.astype(jnp.float32) if t.dtype == jnp.float64 else t
+    x, dt, a, b_mat, c_mat = map(to32, (x, dt, a, b_mat, c_mat))
+
+    # layout: (B, H, nc, cs, ·) for per-(batch, head) chunk streaming
+    xh = jnp.moveaxis(x, 2, 1).reshape(bsz, h, nc, chunk, p)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(bsz, h, nc, chunk)
+    bh = b_mat.reshape(bsz, 1, nc, chunk, n)
+    ch = c_mat.reshape(bsz, 1, nc, chunk, n)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, c_: (h_,)),
+            pl.BlockSpec((1, 1, 1, chunk, n), lambda b_, h_, c_: (b_, 0, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n), lambda b_, h_, c_: (b_, 0, c_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, p), lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, nc, chunk, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, a, bh, ch)
+    return jnp.moveaxis(y.reshape(bsz, h, s, p), 1, 2)

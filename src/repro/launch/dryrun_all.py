@@ -1,0 +1,91 @@
+"""Fan-out driver: run every (arch × shape × mesh) dry-run in subprocesses.
+
+Each combo gets its own process because the 512-device XLA_FLAGS must be
+set before jax initializes. Results land in results/dryrun/*.json plus a
+combined results/dryrun/summary.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.dryrun_all \
+           [--jobs 6] [--mesh single|multi|both] [--arch ...] [--shape ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def run_combo(arch: str, shape: str, multi_pod: bool, timeout: int = 3600) -> dict:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    out = os.path.abspath(os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}.json"))
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                              cwd=os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "..")),
+                              env=env)
+        if proc.returncode != 0:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+                   "stderr": proc.stderr[-2000:], "wall_s": round(time.time() - t0, 1)}
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=2)
+            return rec
+        with open(out) as f:
+            return json.load(f)
+    except subprocess.TimeoutExpired:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "timeout",
+               "wall_s": timeout}
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--arch", nargs="*", default=list(ARCH_IDS))
+    ap.add_argument("--shape", nargs="*", default=list(INPUT_SHAPES))
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    combos = [(a, s, m) for a in args.arch for s in args.shape for m in meshes]
+    print(f"{len(combos)} combos, {args.jobs} workers")
+    results = []
+    t0 = time.time()
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = {ex.submit(run_combo, a, s, m, args.timeout): (a, s, m) for a, s, m in combos}
+        for fut in as_completed(futs):
+            a, s, m = futs[fut]
+            rec = fut.result()
+            results.append(rec)
+            print(f"[{len(results)}/{len(combos)}] {a} × {s} × "
+                  f"{'2x16x16' if m else '16x16'} → {rec['status']} "
+                  f"({time.time()-t0:.0f}s elapsed)", flush=True)
+    with open(os.path.join(RESULTS_DIR, "summary.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    bad = [r for r in results if r["status"] not in ("ok", "skipped")]
+    print(f"done: {len(results)-len(bad)} ok/skipped, {len(bad)} failed")
+    for r in bad:
+        print("FAILED:", r["arch"], r["shape"], r["mesh"], r.get("stderr", "")[-300:])
+
+
+if __name__ == "__main__":
+    main()

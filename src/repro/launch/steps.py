@@ -1,0 +1,130 @@
+"""Step functions + abstract input specs for lowering/dry-runs and drivers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+
+def build_train_step(cfg: ModelConfig, opt: Optional[AdamWConfig] = None, remat: bool = True,
+                     microbatches: int = 1):
+    """Train step; ``microbatches > 1`` adds gradient accumulation
+    (scan over microbatches) — activation/remat-carry memory scales with
+    the microbatch size while collective bytes stay constant (§Perf B3).
+    """
+    opt = opt or AdamWConfig(moment_dtype=jnp.bfloat16)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, remat=remat), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, _), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, b):
+                acc, loss_sum = carry
+                (loss, _), g = grads_of(params, b)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_sum + loss), None
+
+            zero = jax.tree.map(jnp.zeros_like, params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+        params, opt_state, _ = apply_updates(opt, params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step, opt
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill_logits(params, cfg, batch)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache, pos):
+        return T.decode_step(params, cfg, tokens, cache, pos)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# abstract specs (ShapeDtypeStruct only — never allocates)
+# --------------------------------------------------------------------------
+
+def enc_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    return min(max(seq_len // 4, 1), 1500)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, act_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+    if cfg.audio_stub:
+        batch["frames"] = sds((b, enc_len_for(cfg, s), cfg.d_model), act_dtype)
+    if cfg.vlm_stub:
+        batch["patches"] = sds((b, cfg.num_patches, cfg.vision_dim), act_dtype)
+    return batch
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """KV-cache width for decode shapes.
+
+    ``shape.window`` (long_500k → 8192) bounds the attention cache: dense
+    archs run long-context decode via sliding-window attention; hybrid's
+    attention half is natively windowed; SSM needs no KV cache at all.
+    """
+    if shape.window:
+        return min(shape.window, shape.seq_len)
+    return shape.seq_len
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, cache_dtype=jnp.bfloat16):
+    b = shape.global_batch
+    w = decode_window(cfg, shape)
+    sds = jax.ShapeDtypeStruct
+    tokens = sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: T.init_decode_cache(
+            cfg, b, w, enc_len=enc_len_for(cfg, shape.seq_len), dtype=cache_dtype
+        )
+    )
+    pos = sds((), jnp.int32)
+    return tokens, cache, pos
+
+
+def abstract_state(cfg: ModelConfig, opt: AdamWConfig, param_dtype=jnp.bfloat16):
+    params = T.abstract_params(cfg, dtype=param_dtype)
+    opt_state = jax.eval_shape(lambda: init_state(opt, params))
+    return params, opt_state
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill/decode (N = active params)."""
+    from repro.models.transformer import active_param_count
+
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

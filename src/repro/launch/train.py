@@ -1,0 +1,46 @@
+"""Training CLI.
+
+Local (CPU) real training on a reduced config:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 100 --batch 8 --seq 128
+
+Full configs are exercised via the dry-run (see repro.launch.dryrun);
+this entry point never forces a device count.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.train.loop import train
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1))
+    print(f"training {cfg.name}: {cfg.num_layers}L d={cfg.d_model} on "
+          f"{len(jax.devices())} device(s)")
+    _, _, hist = train(cfg, opt, args.steps, global_batch=args.batch,
+                       seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=max(args.steps // 2, 1), remat=args.remat)
+    first, last = hist["loss"][0][1], hist["loss"][-1][1]
+    print(f"loss {first:.4f} → {last:.4f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

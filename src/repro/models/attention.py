@@ -1,0 +1,213 @@
+"""GQA attention with causal / bidirectional / sliding-window masking and
+ring-buffer KV caches for decode.
+
+The einsum implementation here is the XLA reference path (used for
+lowering, dry-runs and CPU tests); the Pallas flash kernel in
+``repro.kernels`` is numerically validated against ``repro.kernels.ref``
+which mirrors this math.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+#: full-sequence attention switches to the blockwise (online-softmax) path
+#: above this length — the XLA analogue of the Pallas flash kernel; keeps
+#: the live logits buffer at (B, H, CHUNK, T) instead of (B, H, S, T).
+BLOCKWISE_THRESHOLD = 2048
+BLOCKWISE_CHUNK = 256
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer cache. k/v: (B, W, Hkv, Dh); pos: scalar step count."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def gqa_init(key, d_model, num_heads, num_kv_heads, head_dim, dtype) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d_model, num_heads * head_dim), dtype=dtype),
+        "wk": dense_init(kk, (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wv": dense_init(kv, (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wo": dense_init(ko, (num_heads * head_dim, d_model), fan_in=num_heads * head_dim, dtype=dtype),
+    }
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def sdpa(q, k, v, mask):
+    """q: (B,S,H,Dh), k/v: (B,T,Hkv,Dh), mask: (B,S,T) or (S,T) bool."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, dh)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32)
+    logits = logits * (dh**-0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", w, v)
+    return out.reshape(b, s, h * v.shape[-1])  # v head dim may differ (MLA)
+
+
+def sdpa_blockwise(q, k, v, *, causal: bool = True, window: int = 0,
+                   chunk: int = BLOCKWISE_CHUNK):
+    """Online-softmax-free blockwise attention (memory-bounded reference).
+
+    q: (B,S,H,Dq), k: (B,T,Hkv,Dq), v: (B,T,Hkv,Dv) → (B,S,H·Dv).
+    Processes queries in CHUNK-row blocks via lax.map; each block sees the
+    full K/V (softmax per row is exact, no online rescaling needed). KV
+    heads are repeated to H and head-sharded ("model", first-fit).
+    """
+    b, s, h, dq = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    if h != hkv:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    spec = ("fsdp", None, "model", None)
+    q = constrain(q, spec)
+    k = constrain(k, spec)
+    v = constrain(v, spec)
+    scale = dq**-0.5
+    nq = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    qb = q.reshape(b, nq, chunk, h, dq)
+
+    # Sliding window: slice K/V to the (window + chunk) span each q-block
+    # can actually see. Masking alone leaves the full S·T matmul in the
+    # HLO (§Perf iteration C1, refuted); slicing removes the compute.
+    windowed = causal and window > 0 and window + chunk < t
+
+    def block(qi):
+        qq = qb[:, qi]  # (b, chunk, h, dq)
+        rows = qi * chunk + jnp.arange(chunk)[:, None]
+        if windowed:
+            span = window + chunk
+            start = jnp.maximum(qi * chunk - window, 0)
+            kk = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+            vv = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+            cols = start + jnp.arange(span)[None, :]
+        else:
+            kk, vv = k, v
+            cols = jnp.arange(t)[None, :]
+        logits = jnp.einsum("bchd,bthd->bhct", qq, kk).astype(jnp.float32) * scale
+        logits = constrain(logits, ("fsdp", "model", None, None))
+        mask = jnp.ones((chunk, cols.shape[1]), bool)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+        return jnp.einsum("bhct,bthd->bchd", w, vv)  # (b, chunk, h, dv)
+
+    out = jax.lax.map(block, jnp.arange(nq))  # (nq, b, chunk, h, dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, v.shape[-1])
+    return out.reshape(b, s, h * v.shape[-1])
+
+
+def causal_mask(s: int, window: int = 0):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window > 0:
+        m &= j > i - window
+    return m
+
+
+def full_mask(s: int, t: int):
+    return jnp.ones((s, t), bool)
+
+
+def gqa_apply(
+    p: Dict,
+    x,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    positions,
+    mask,
+    rope_theta: float = 1e4,
+    kv_override: Optional[tuple] = None,
+    causal: Optional[bool] = None,
+    window: int = 0,
+):
+    """Full-sequence attention (train / prefill / encoder).
+
+    kv_override — (k, v, kv_positions) for cross-attention (keys from the
+    encoder memory; no RoPE on decoder cross-queries by convention here).
+    When ``causal`` is given and the sequence is long, the blockwise
+    memory-bounded path is used instead of the dense-mask path.
+    """
+    q = _split_heads(x @ p["wq"], num_heads, head_dim)
+    if kv_override is None:
+        k = _split_heads(x @ p["wk"], num_kv_heads, head_dim)
+        v = _split_heads(x @ p["wv"], num_kv_heads, head_dim)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v, _ = kv_override
+    s = q.shape[1]
+    if causal is not None and s >= BLOCKWISE_THRESHOLD and s % BLOCKWISE_CHUNK == 0:
+        out = sdpa_blockwise(q, k, v, causal=causal, window=window)
+    else:
+        out = sdpa(q, k, v, mask)
+    return out @ p["wo"], (k, v)
+
+
+def init_kv_cache(batch: int, window: int, num_kv_heads: int, head_dim: int, dtype) -> KVCache:
+    shape = (batch, window, num_kv_heads, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_attend(
+    p: Dict,
+    x,  # (B, 1, D)
+    cache: KVCache,
+    pos,  # scalar int32 — absolute position of the new token
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float = 1e4,
+):
+    """One decode step against a ring-buffer cache of width W.
+
+    The new K/V overwrite slot ``pos % W``; attention is masked to the
+    ``min(pos+1, W)`` valid slots. For a full (non-windowed) cache W is the
+    max sequence length and the ring never wraps.
+    """
+    b = x.shape[0]
+    w = cache.k.shape[1]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = _split_heads(x @ p["wq"], num_heads, head_dim)
+    k_new = _split_heads(x @ p["wk"], num_kv_heads, head_dim)
+    v_new = _split_heads(x @ p["wv"], num_kv_heads, head_dim)
+    q = apply_rope(q, posv, rope_theta)
+    k_new = apply_rope(k_new, posv, rope_theta)
+
+    slot = jnp.mod(pos, w).astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (zero, slot, zero, zero))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (zero, slot, zero, zero))
+
+    # Valid slots: ring positions holding tokens in (pos-W, pos].
+    idx = jnp.arange(w)
+    valid = idx <= jnp.minimum(pos, w - 1)
+    wrapped = jnp.where(pos >= w, jnp.ones((w,), bool), valid)
+    mask = wrapped[None, None, :]  # (1, 1, W) broadcast over batch
+    out = sdpa(q, k, v, jnp.broadcast_to(mask, (b, 1, w)))
+    return out @ p["wo"], KVCache(k=k, v=v)

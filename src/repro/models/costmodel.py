@@ -1,0 +1,166 @@
+"""Analytic cost model: ModelConfig → per-block FLOPs / boundary bytes →
+the paper planner's ``BlockChain``.
+
+This is how the paper's technique becomes a first-class framework feature:
+any architecture in the zoo can be partitioned between a weak tier
+("device", DVFS-scalable) and a strong tier ("edge" VM) by the robust
+planner, with w_{n,m} (GFLOPs), d_{n,m} (boundary activation bytes) and
+the (mean, variance) time model derived from the real config instead of
+hand-measured tables.
+
+FLOP counts are inference (fwd) MACs×2 per token; the attention score
+term is per-sequence quadratic. Training cost ≈ 3× fwd (bwd ≈ 2×) — the
+planner partitions inference, so fwd is what matters here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import BlockChain
+from repro.models.ssm import ssm_dims
+
+
+def layer_flops_per_token(cfg: ModelConfig, seq_len: int) -> float:
+    """Forward FLOPs per token for one decoder layer at context seq_len."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    fl = 0.0
+    if cfg.family != "ssm":
+        if cfg.mla:
+            r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+            q_in = cfg.q_lora_rank or d
+            q_proj = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * (hd + dr)) if cfg.q_lora_rank else d * cfg.num_heads * (hd + dr)
+            kv_proj = d * r + d * dr + r * cfg.num_heads * hd * 2
+            o_proj = cfg.num_heads * hd * d
+            fl += 2 * (q_proj + kv_proj + o_proj)
+            fl += 2 * 2 * seq_len * cfg.num_heads * (hd + dr) / 2  # scores+values (avg causal)
+        else:
+            qkv = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+            o = cfg.num_heads * hd * d
+            fl += 2 * (qkv + o)
+            fl += 2 * 2 * seq_len * cfg.num_heads * hd / 2  # causal avg
+    if cfg.family == "ssm" or cfg.hybrid:
+        d_inner, nh, conv_dim = ssm_dims(d, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_expand)
+        in_dim = 2 * d_inner + 2 * cfg.ssm_state + nh
+        fl += 2 * (d * in_dim + d_inner * d)  # in/out proj
+        fl += 2 * 4 * conv_dim  # depthwise conv (k=4)
+        cs = cfg.ssm_chunk
+        n = cfg.ssm_state
+        p = cfg.ssm_head_dim
+        # SSD chunk matmuls per token: CB^T (cs·N), intra (cs·P), state out/in (N·P)
+        fl += 2 * nh * (cs * n / nh + cs * p + 2 * n * p)
+    if cfg.moe:
+        mult = 3 if cfg.activation == "swiglu" else 2
+        fl += 2 * d * cfg.num_experts  # router
+        fl += 2 * mult * d * cfg.d_ff_expert * (cfg.top_k + cfg.num_shared_experts)
+    elif cfg.d_ff > 0:
+        mult = 3 if cfg.activation == "swiglu" else 2
+        fl += 2 * mult * d * cfg.d_ff
+    return float(fl)
+
+
+def model_flops_per_token(cfg: ModelConfig, seq_len: int, include_head: bool = True) -> float:
+    fl = cfg.num_layers * layer_flops_per_token(cfg, seq_len)
+    if cfg.encoder_decoder:
+        # encoder processes seq_len/4 frames with bidirectional attention
+        enc_s = max(seq_len // 4, 1)
+        fl += cfg.num_encoder_layers * layer_flops_per_token(cfg, enc_s) * enc_s / seq_len
+    if include_head:
+        fl += 2 * cfg.d_model * cfg.vocab_size
+    return float(fl)
+
+
+@dataclass(frozen=True)
+class TierProfile:
+    """Throughput/uncertainty profile of a serving tier.
+
+    ``flops_per_cycle`` plays the paper's g role (the per-block fitted
+    efficiency); ``cv`` is the inference-time coefficient of variation
+    (Fig. 5-style jitter), ``eff_jitter`` models per-block efficiency
+    spread (g varies per block, as the paper measures).
+    """
+
+    flops_per_cycle: float
+    cv: float = 0.08
+    eff_jitter: float = 0.15
+    # edge tier only: fixed clock (Hz) — the VM's frequency is constant.
+    clock_hz: float = 1.0e9
+
+
+# A Jetson-class device tier and an RTX/TPU-class edge tier (defaults used
+# by examples/tests; launch scripts may override).
+DEVICE_TIER = TierProfile(flops_per_cycle=220.0, cv=0.10, eff_jitter=0.15)
+EDGE_TIER = TierProfile(flops_per_cycle=40_000.0, cv=0.03, eff_jitter=0.05, clock_hz=2.0e9)
+
+
+def block_chain_from_config(
+    cfg: ModelConfig,
+    *,
+    batch: int = 1,
+    seq_len: int = 512,
+    num_blocks: int = 8,
+    device: TierProfile = DEVICE_TIER,
+    edge: TierProfile = EDGE_TIER,
+    f_mid_hz: float = 0.8e9,
+    seed: int = 0,
+) -> BlockChain:
+    """Partition the layer stack into ``num_blocks`` contiguous blocks.
+
+    Point m=0: everything on the edge (upload raw tokens ≈ S·4 bytes·B).
+    Point m=k: blocks 1..k local; boundary payload = B·S·d_model·2 bytes
+    (bf16 activations). Point m=M: upload only the result logits' argmax
+    (a few bytes) — modeled as 1 KB.
+    """
+    rng = np.random.default_rng(seed)
+    tokens = batch * seq_len
+    per_layer = layer_flops_per_token(cfg, seq_len) * tokens
+    head_fl = 2 * cfg.d_model * cfg.vocab_size * tokens
+
+    # distribute layers over blocks as evenly as possible
+    counts = np.full(num_blocks, cfg.num_layers // num_blocks)
+    counts[: cfg.num_layers % num_blocks] += 1
+    w = np.concatenate([[0.0], np.cumsum(counts * per_layer)])
+    w[-1] += head_fl  # final block carries the LM head
+
+    act_bits = batch * seq_len * cfg.d_model * 2 * 8.0
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner, nh, _ = ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_expand)
+        act_bits += batch * nh * cfg.ssm_head_dim * cfg.ssm_state * 2 * 8.0  # boundary SSM state
+    raw_bits = batch * seq_len * 4 * 8.0  # int32 tokens
+    if cfg.vlm_stub:
+        raw_bits += batch * cfg.num_patches * cfg.vision_dim * 2 * 8.0
+    if cfg.audio_stub:
+        raw_bits += batch * (seq_len // 4) * cfg.d_model * 2 * 8.0
+    d = np.full(num_blocks + 1, act_bits)
+    d[0] = raw_bits
+    d[-1] = 8.0 * 1024  # result payload
+
+    # per-block efficiency (the paper's per-block g): jittered around the tier value
+    g_blocks = device.flops_per_cycle * np.exp(
+        rng.normal(0.0, device.eff_jitter, num_blocks)
+    )
+    # prefix-effective g: harmonic-style combination (time-additive)
+    t_unit = counts * per_layer / g_blocks  # time·f of each block
+    g_prefix = np.concatenate([[1.0], np.cumsum(counts * per_layer) / np.cumsum(t_unit)])
+    g_prefix[-1] = w[-1] / (np.sum(t_unit) + head_fl / g_blocks[-1])
+
+    # variance: (cv · mean time at a mid frequency)², max-over-range per (11)
+    mean_t_mid = w / (np.maximum(g_prefix, 1e-9) * f_mid_hz)
+    v_loc = (device.cv * mean_t_mid) ** 2
+    v_loc[0] = 0.0
+
+    # edge tier: remaining work at fixed clock
+    w_left = w[-1] - w
+    t_vm = w_left / (edge.flops_per_cycle * edge.clock_hz)
+    v_vm = (edge.cv * t_vm) ** 2
+
+    f64 = lambda a: jnp.asarray(a, jnp.float64)
+    return BlockChain(
+        d_bits=f64(d), w_flops=f64(w), g_eff=f64(g_prefix),
+        v_loc=f64(v_loc), t_vm=f64(t_vm), v_vm=f64(v_vm),
+    )

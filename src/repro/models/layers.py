@@ -1,0 +1,72 @@
+"""Shared building blocks: norms, activations, RoPE, MLPs, init helpers."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def _act(name: str):
+    if name == "swiglu" or name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sqrelu":  # squared ReLU (Nemotron-4 / Minitron)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp_apply(p: Dict, x, activation: str):
+    """Gated (swiglu) or plain 2-matrix MLP depending on params present."""
+    act = _act(activation)
+    if "w3" in p:  # gated: act(x@w1) * (x@w3) @ w2
+        h = act(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = act(x @ p["w1"])
+    return h @ p["w2"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, Dh) rotated pairwise; positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = shape[0] if fan_in is None else fan_in
+    return (jax.random.normal(key, shape) * fan_in**-0.5).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)

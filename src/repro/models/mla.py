@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2405.04434 §2.1).
+
+K/V are compressed into a low-rank latent c_kv (kv_lora_rank) plus a
+shared decoupled-RoPE key k_R (rope_head_dim); the decode cache stores
+only (c_kv, k_R) — the MLA memory saving. Queries optionally go through
+their own low-rank path (q_lora_rank, used by V3).
+
+This is the reference (non-absorbed) formulation: at attention time the
+latent is up-projected to per-head K_C/V. Weight absorption is a §Perf
+optimization tracked in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import sdpa
+from repro.models.layers import apply_rope, dense_init
+
+
+class MLACache(NamedTuple):
+    """c_kv: (B, W, R); k_rope: (B, W, Dr)."""
+
+    c_kv: jnp.ndarray
+    k_rope: jnp.ndarray
+
+
+def mla_init(key, d_model, num_heads, head_dim, kv_lora_rank, q_lora_rank, rope_head_dim, dtype) -> Dict:
+    ks = jax.random.split(key, 7)
+    p = {
+        "wdkv": dense_init(ks[0], (d_model, kv_lora_rank), dtype=dtype),
+        "wkr": dense_init(ks[1], (d_model, rope_head_dim), dtype=dtype),
+        "wuk": dense_init(ks[2], (kv_lora_rank, num_heads * head_dim), fan_in=kv_lora_rank, dtype=dtype),
+        "wuv": dense_init(ks[3], (kv_lora_rank, num_heads * head_dim), fan_in=kv_lora_rank, dtype=dtype),
+        "wo": dense_init(ks[4], (num_heads * head_dim, d_model), fan_in=num_heads * head_dim, dtype=dtype),
+    }
+    q_out = num_heads * (head_dim + rope_head_dim)
+    if q_lora_rank > 0:
+        p["wdq"] = dense_init(ks[5], (d_model, q_lora_rank), dtype=dtype)
+        p["wuq"] = dense_init(ks[6], (q_lora_rank, q_out), fan_in=q_lora_rank, dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[5], (d_model, q_out), dtype=dtype)
+    return p
+
+
+def _queries(p, x, num_heads, head_dim, rope_head_dim, positions, rope_theta):
+    b, s, _ = x.shape
+    if "wdq" in p:
+        q = (x @ p["wdq"]) @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, num_heads, head_dim + rope_head_dim)
+    q_c, q_r = q[..., :head_dim], q[..., head_dim:]
+    q_r = apply_rope(q_r, positions, rope_theta)
+    return jnp.concatenate([q_c, q_r], axis=-1)
+
+
+def _expand_kv(p, c_kv, k_rope, num_heads, head_dim):
+    """Up-project latents to per-head K (with shared RoPE part) and V."""
+    b, t, _ = c_kv.shape
+    k_c = (c_kv @ p["wuk"]).reshape(b, t, num_heads, head_dim)
+    v = (c_kv @ p["wuv"]).reshape(b, t, num_heads, head_dim)
+    k_r = jnp.broadcast_to(k_rope[:, :, None, :], (b, t, num_heads, k_rope.shape[-1]))
+    k = jnp.concatenate([k_c, k_r], axis=-1)
+    return k, v
+
+
+def mla_apply(p, x, *, num_heads, head_dim, rope_head_dim, positions, mask,
+              rope_theta=1e4, causal=None, window: int = 0):
+    """Full-sequence MLA (train / prefill). Returns (out, (c_kv, k_rope))."""
+    from repro.models.attention import BLOCKWISE_CHUNK, BLOCKWISE_THRESHOLD, sdpa_blockwise
+
+    q = _queries(p, x, num_heads, head_dim, rope_head_dim, positions, rope_theta)
+    c_kv = x @ p["wdkv"]
+    k_rope = apply_rope((x @ p["wkr"])[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+    k, v = _expand_kv(p, c_kv, k_rope, num_heads, head_dim)
+    s = q.shape[1]
+    if causal is not None and s >= BLOCKWISE_THRESHOLD and s % BLOCKWISE_CHUNK == 0:
+        out = sdpa_blockwise(q, k, v, causal=causal, window=window)
+    else:
+        out = sdpa(q, k, v, mask)  # q/k have head_dim + rope_head_dim; v has head_dim
+    return out @ p["wo"], (c_kv, k_rope)
+
+
+def init_mla_cache(batch, window, kv_lora_rank, rope_head_dim, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, window, kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, window, rope_head_dim), dtype),
+    )
+
+
+def mla_decode(p, x, cache: MLACache, pos, *, num_heads, head_dim, rope_head_dim,
+               rope_theta=1e4, absorbed: bool = True):
+    """One decode step. ``absorbed=True`` (default) runs attention in the
+    latent space — DeepSeek's serving optimization (§Perf D1): the query
+    is projected through W_uk once (q̃ = W_ukᵀ q_c, H·dh·R flops) and
+    scores/context are latent dot products with the *compressed* cache, so
+    the per-step cost drops from O(W·R·H·dh) (expanding K/V) to O(W·R·H).
+    Mathematically identical to the non-absorbed path
+    (tests/test_mla_absorbed.py)."""
+    b = x.shape[0]
+    w = cache.c_kv.shape[1]
+    r = cache.c_kv.shape[-1]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = _queries(p, x, num_heads, head_dim, rope_head_dim, posv, rope_theta)
+    c_new = x @ p["wdkv"]
+    kr_new = apply_rope((x @ p["wkr"])[:, :, None, :], posv, rope_theta)[:, :, 0, :]
+    slot = jnp.mod(pos, w).astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new, (zero, slot, zero))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, kr_new, (zero, slot, zero))
+    idx = jnp.arange(w)
+    valid = jnp.where(pos >= w, jnp.ones((w,), bool), idx <= jnp.minimum(pos, w - 1))
+
+    if not absorbed:
+        k, v = _expand_kv(p, c_kv, k_rope, num_heads, head_dim)
+        out = sdpa(q, k, v, jnp.broadcast_to(valid[None, None, :], (b, 1, w)))
+        return out @ p["wo"], MLACache(c_kv=c_kv, k_rope=k_rope)
+
+    q_c, q_r = q[..., :head_dim], q[..., head_dim:]
+    wuk = p["wuk"].reshape(r, num_heads, head_dim)
+    wuv = p["wuv"].reshape(r, num_heads, head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_c, wuk)  # absorbed query
+    scores = jnp.einsum("bshr,bwr->bhsw", q_lat, c_kv) + jnp.einsum(
+        "bshd,bwd->bhsw", q_r, k_rope
+    )
+    scores = scores.astype(jnp.float32) * (head_dim + rope_head_dim) ** -0.5
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhsw,bwr->bshr", probs, c_kv)  # latent context
+    out = jnp.einsum("bshr,rhd->bshd", ctx, wuv).reshape(b, 1, num_heads * head_dim)
+    return out @ p["wo"], MLACache(c_kv=c_kv, k_rope=k_rope)

@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD: within a chunk the recurrence is computed in its dual
+"attention" (matmul) form; chunk boundary states are carried by an
+associative scan. This is the TPU-friendly formulation (MXU matmuls over
+chunks instead of a length-S sequential scan) and is exactly what the
+Pallas kernel in ``repro.kernels.ssd_scan`` implements per block.
+
+Layer layout follows Mamba-2: in_proj → [z | x | B | C | dt], depthwise
+causal conv over (x, B, C), SSD core, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.parallel.sharding import constrain
+
+
+class SSMCache(NamedTuple):
+    """conv_state: (B, d_conv-1, conv_dim); ssd_state: (B, H, P, N)."""
+
+    conv_state: jnp.ndarray
+    ssd_state: jnp.ndarray
+
+
+def ssm_dims(d_model: int, ssm_state: int, head_dim: int = 64, expand: int = 2):
+    d_inner = expand * d_model
+    num_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * ssm_state  # x, B, C share the conv
+    return d_inner, num_heads, conv_dim
+
+
+def ssm_init(key, d_model, ssm_state, head_dim=64, expand=2, d_conv=4, dtype=jnp.float32) -> Dict:
+    d_inner, nh, conv_dim = ssm_dims(d_model, ssm_state, head_dim, expand)
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_inner + 2 * ssm_state + nh  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d_model, in_dim), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), fan_in=d_inner, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def segsum(dA):
+    """Cumulative within-chunk decay matrix: L[i,j] = exp(Σ_{j<r≤i} dA_r), j≤i.
+
+    dA: (..., cs). Returns (..., cs, cs) lower-triangular (inclusive of
+    the diagonal, which is exp(0)·decay contribution of position itself).
+    """
+    cs = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # Σ_{r≤i} − Σ_{r≤j}
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    # mask BEFORE exp: exp of masked (positive, unbounded) entries would be
+    # inf and poison the backward pass through where (0·∞ = NaN cotangent).
+    diff = jnp.where(mask, diff, -jnp.inf)
+    return jnp.exp(diff)
+
+
+def ssd_reference(x, dt, a, b_mat, c_mat, chunk: int, initial_state=None):
+    """Chunked SSD scan (pure jnp oracle; mirrors the Pallas kernel).
+
+    x:     (B, S, H, P)   inputs per head
+    dt:    (B, S, H)      positive step sizes (softplus already applied)
+    a:     (H,)           negative decay rates (−exp(a_log))
+    b_mat: (B, S, N)      input projection  (single group, broadcast to H)
+    c_mat: (B, S, N)      output projection
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    # keep everything in x's dtype: mixed f32/f64 inputs (x64 mode) would
+    # otherwise break the scan carry dtype below
+    dt = dt.astype(x.dtype)
+    a = a.astype(x.dtype)
+    b_mat = b_mat.astype(x.dtype)
+    c_mat = c_mat.astype(x.dtype)
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    dA = dtc * a  # (B,nc,cs,H) negative
+    dA_h = jnp.moveaxis(dA, -1, 2)  # (B,nc,H,cs)
+    L = segsum(dA_h)  # (B,nc,H,cs,cs)
+
+    # Intra-chunk (dual attention form): Y[i] = Σ_{j≤i} (C_i·B_j) L[i,j] dt_j x_j
+    cb = jnp.einsum("bzin,bzjn->bzij", cc, bc)  # (B,nc,cs,cs)
+    m = cb[:, :, None] * L  # (B,nc,H,cs,cs)
+    y_intra = jnp.einsum("bzhij,bzjh,bzjhp->bzihp", m, dtc, xc)
+
+    # Chunk-final states: S_z = Σ_j exp(Σ_{r>j} dA_r) dt_j B_j ⊗ x_j
+    cum = jnp.cumsum(dA_h, axis=-1)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,nc,H,cs)
+    sdec = jnp.einsum("bzhj,bzjh,bzjn,bzjhp->bzhpn", decay_to_end, dtc, bc, xc)
+
+    # Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,nc,H)
+
+    def scan_fn(state, inp):
+        dec, s_new = inp  # (B,H), (B,H,P,N)
+        state = state * dec[..., None, None] + s_new
+        return state, state
+
+    init = (
+        jnp.zeros((bsz, h, p, n), x.dtype)
+        if initial_state is None
+        else initial_state
+    )
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    s_t = jnp.moveaxis(sdec, 1, 0)  # (nc,B,H,P,N)
+    final, states_after = jax.lax.scan(scan_fn, init, (dec_t, s_t))
+    # State *entering* chunk z is the state after chunk z-1.
+    states_in = jnp.concatenate([init[None], states_after[:-1]], axis=0)
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (B,nc,H,P,N)
+
+    # Inter-chunk output: Y_inter[i] = C_i · state_in · exp(Σ_{r≤i} dA_r)
+    decay_from_start = jnp.exp(cum)  # (B,nc,H,cs)
+    y_inter = jnp.einsum("bzin,bzhpn,bzhi->bzihp", cc, states_in, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssm_apply(p: Dict, x, *, ssm_state: int, head_dim=64, expand=2, chunk=128,
+              return_state: bool = False):
+    """Full-sequence SSD block. x: (B, S, D) → (B, S, D)."""
+    bsz, s, d_model = x.shape
+    d_inner, nh, conv_dim = ssm_dims(d_model, ssm_state, head_dim, expand)
+    proj = x @ p["in_proj"]
+    # layout: [z (d_inner) | x+B+C (conv_dim) | dt (H)]
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + conv_dim]
+    dt_raw = proj[..., d_inner + conv_dim :]
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = constrain(xbc[..., :d_inner].reshape(bsz, s, nh, head_dim),
+                   ("fsdp", None, "model", "model"))
+    b_mat = xbc[..., d_inner : d_inner + ssm_state]
+    c_mat = xbc[..., d_inner + ssm_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, final = ssd_reference(
+        xs.astype(jnp.float32), dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), chunk
+    )
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, final
+    return out
+
+
+def init_ssm_cache(batch, d_model, ssm_state, head_dim=64, expand=2, d_conv=4, dtype=jnp.float32):
+    d_inner, nh, conv_dim = ssm_dims(d_model, ssm_state, head_dim, expand)
+    return SSMCache(
+        conv_state=jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+        ssd_state=jnp.zeros((batch, nh, head_dim, ssm_state), jnp.float32),
+    )
+
+
+def ssm_decode(p: Dict, x, cache: SSMCache, *, ssm_state: int, head_dim=64, expand=2):
+    """One-token recurrent step. x: (B, 1, D)."""
+    bsz, _, d_model = x.shape
+    d_inner, nh, conv_dim = ssm_dims(d_model, ssm_state, head_dim, expand)
+    proj = (x @ p["in_proj"])[:, 0]  # (B, in_dim)
+    z = proj[..., :d_inner]
+    xbc_new = proj[..., d_inner : d_inner + conv_dim]
+    dt_raw = proj[..., d_inner + conv_dim :]
+
+    window = jnp.concatenate([cache.conv_state, xbc_new[:, None, :]], axis=1)  # (B,K,C)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv_state = window[:, 1:, :]
+
+    xs = conv[..., :d_inner].reshape(bsz, nh, head_dim)
+    b_mat = conv[..., d_inner : d_inner + ssm_state]
+    c_mat = conv[..., d_inner + ssm_state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    upd = dt[..., None, None] * b_mat[:, None, None, :] * xs[..., :, None].astype(jnp.float32)
+    state = cache.ssd_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_mat.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, SSMCache(conv_state=new_conv_state, ssd_state=state)

@@ -1,0 +1,402 @@
+"""Generic multi-family transformer: init / train / prefill / decode.
+
+One code path covers all 10 assigned architectures through ModelConfig
+flags: dense GQA, MoE(+MLA), SSM (Mamba-2), hybrid (attn‖SSM), encoder-
+decoder (audio stub) and VLM (vision stub). Layers are stacked and applied
+with ``jax.lax.scan`` so HLO size / compile time stay bounded at 61 layers.
+
+Conventions
+-----------
+- Parameters: a pytree of dicts; per-layer leaves carry a leading L axis.
+- ``batch`` dicts: {"tokens", "labels"} (+"frames" for audio, "patches"
+  for vlm). Labels < 0 are masked out of the loss.
+- Decode uses ring-buffer caches (see attention.py / mla.py / ssm.py)
+  stacked over layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense_init, embed_init, mlp_apply, mlp_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _gated(cfg: ModelConfig) -> bool:
+    return cfg.activation == "swiglu"
+
+
+def _init_layer(cfg: ModelConfig, key, dtype, kind: str = "decoder") -> Params:
+    """kind: decoder | encoder | xdecoder (decoder with cross-attention)."""
+    keys = jax.random.split(key, 8)
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(
+            keys[0], cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_expand, dtype=dtype
+        )
+        return p  # Mamba-2 block: norm + SSD only
+    if cfg.hybrid:
+        p["ssm"] = ssm_mod.ssm_init(
+            keys[0], cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_expand, dtype=dtype
+        )
+    if cfg.mla:
+        p["attn"] = mla_mod.mla_init(
+            keys[1], cfg.d_model, cfg.num_heads, hd, cfg.kv_lora_rank,
+            cfg.q_lora_rank, cfg.rope_head_dim, dtype,
+        )
+    else:
+        p["attn"] = attn.gqa_init(keys[1], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd, dtype)
+    if kind == "xdecoder":
+        p["cross"] = attn.gqa_init(keys[2], cfg.d_model, cfg.num_heads, cfg.num_heads, hd, dtype)
+        p["ln_cross"] = jnp.zeros((cfg.d_model,), dtype)
+    p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.moe:
+        p["ff"] = moe_mod.moe_init(
+            keys[3], cfg.d_model, cfg.num_experts, cfg.d_ff_expert,
+            cfg.num_shared_experts, cfg.d_ff, dtype,
+        )
+    elif cfg.d_ff > 0:
+        p["ff"] = mlp_init(keys[3], cfg.d_model, cfg.d_ff, _gated(cfg), dtype)
+    return p
+
+
+def _stacked_layers(cfg: ModelConfig, key, n_layers: int, dtype, kind: str) -> Params:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: _init_layer(cfg, k, dtype, kind))(keys)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    k_embed, k_layers, k_head, k_extra, k_enc = jax.random.split(key, 5)
+    p: Params = {"embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)}
+    kind = "xdecoder" if cfg.encoder_decoder else "decoder"
+    p["layers"] = _stacked_layers(cfg, k_layers, cfg.num_layers, dtype, kind)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    p["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=dtype)
+    if cfg.encoder_decoder:
+        p["enc_layers"] = _stacked_layers(cfg, k_enc, cfg.num_encoder_layers, dtype, "encoder")
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.vlm_stub:
+        ka, kb = jax.random.split(k_extra)
+        p["projector"] = {
+            "w1": dense_init(ka, (cfg.vision_dim, cfg.d_model), dtype=dtype),
+            "w2": dense_init(kb, (cfg.d_model, cfg.d_model), dtype=dtype),
+        }
+    if cfg.mtp:
+        km1, km2 = jax.random.split(k_extra)
+        p["mtp"] = {
+            "proj": dense_init(km1, (2 * cfg.d_model, cfg.d_model), dtype=dtype),
+            "layer": _init_layer(
+                # MTP block is a dense layer even in MoE models
+                _dense_like(cfg), km2, dtype, "decoder",
+            ),
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return p
+
+
+def _dense_like(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(cfg, moe=False, hybrid=False, d_ff=cfg.d_ff or cfg.d_ff_expert)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    import numpy as np
+
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    if not cfg.moe:
+        return param_count(cfg)
+    total = param_count(cfg)
+    tree = abstract_params(cfg)
+    import numpy as np
+
+    routed = sum(
+        int(np.prod(l.shape))
+        for name in ("w1", "w2", "w3")
+        for l in [tree["layers"]["ff"][name]]
+    )
+    active = routed * cfg.top_k / cfg.num_experts
+    return int(total - routed + active)
+
+
+# --------------------------------------------------------------------------
+# layer application (full sequence)
+# --------------------------------------------------------------------------
+
+def _mix_seq(cfg: ModelConfig, p: Params, h, positions, mask):
+    """Sequence mixer: attention / SSD / both (hybrid)."""
+    outs = []
+    if cfg.family == "ssm" or cfg.hybrid:
+        outs.append(
+            ssm_mod.ssm_apply(
+                p["ssm"], h, ssm_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, chunk=cfg.ssm_chunk,
+            )
+        )
+    if cfg.family != "ssm":
+        hd = cfg.resolved_head_dim
+        if cfg.mla:
+            a, _ = mla_mod.mla_apply(
+                p["attn"], h, num_heads=cfg.num_heads, head_dim=hd,
+                rope_head_dim=cfg.rope_head_dim, positions=positions, mask=mask,
+                rope_theta=cfg.rope_theta, causal=True, window=cfg.sliding_window,
+            )
+        else:
+            a, _ = attn.gqa_apply(
+                p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=hd, positions=positions, mask=mask, rope_theta=cfg.rope_theta,
+                causal=True, window=cfg.sliding_window,
+            )
+        outs.append(a)
+    return sum(outs) / len(outs)
+
+
+def _layer_seq(cfg: ModelConfig, p: Params, x, positions, mask, enc_out=None,
+               encoder: bool = False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if encoder:  # bidirectional self-attention (whisper encoder)
+        a, _ = attn.gqa_apply(
+            p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=positions, mask=mask,
+            rope_theta=cfg.rope_theta, causal=False,
+        )
+        x = x + a
+    else:
+        x = x + _mix_seq(cfg, p, h, positions, mask)
+    aux = jnp.zeros((), jnp.float32)
+    if "cross" in p and enc_out is not None:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        t = enc_out.shape[1]
+        k = enc_out @ p["cross"]["wk"]
+        v = enc_out @ p["cross"]["wv"]
+        hd = cfg.resolved_head_dim
+        k = k.reshape(k.shape[:2] + (cfg.num_heads, hd))
+        v = v.reshape(v.shape[:2] + (cfg.num_heads, hd))
+        c, _ = attn.gqa_apply(
+            p["cross"], hc, num_heads=cfg.num_heads, num_kv_heads=cfg.num_heads,
+            head_dim=hd, positions=positions,
+            mask=attn.full_mask(hc.shape[1], t), kv_override=(k, v, None),
+            causal=False,
+        )
+        x = x + c
+    if "ff" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            ff, aux = moe_mod.moe_apply(p["ff"], h2, top_k=cfg.top_k, activation=cfg.activation,
+                                        capacity_factor=cfg.moe_capacity_factor)
+        else:
+            ff = mlp_apply(p["ff"], h2, cfg.activation)
+        x = x + ff
+    return x, aux
+
+
+def _run_stack(cfg: ModelConfig, layers: Params, x, positions, mask, enc_out=None,
+               remat: bool = False, encoder: bool = False):
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_seq(cfg, lp, x, positions, mask, enc_out, encoder)
+        return (x, aux + a), None
+
+    fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), layers)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _embed_tokens(params, tokens):
+    return params["embed"][tokens]
+
+
+def encode_frames(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings (B, S_enc, D)."""
+    s = frames.shape[1]
+    pos = jnp.arange(s)[None, :]
+    x, _ = _run_stack(cfg, params["enc_layers"], frames, pos, attn.full_mask(s, s),
+                      encoder=True)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def hidden_states(params, cfg: ModelConfig, batch: Dict, remat: bool = False):
+    """Returns (hidden (B,S,D), aux_loss, token_positions)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens)
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = encode_frames(params, cfg, batch["frames"])
+    if cfg.vlm_stub:
+        pre = jax.nn.gelu(batch["patches"] @ params["projector"]["w1"]) @ params["projector"]["w2"]
+        x = jnp.concatenate([pre.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    mask = attn.causal_mask(s, cfg.sliding_window)
+    x, aux = _run_stack(cfg, params["layers"], x, positions, mask, enc_out, remat)
+    if cfg.vlm_stub:
+        x = x[:, -tokens.shape[1]:]  # drop image-prefix positions for the LM loss
+    return x, aux, positions
+
+
+def _cross_entropy(logits, labels):
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, aux_weight: float = 0.01,
+            mtp_weight: float = 0.3, remat: bool = False):
+    h, aux, _ = hidden_states(params, cfg, batch, remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    loss = _cross_entropy(logits, batch["labels"])
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.moe:
+        loss = loss + aux_weight * aux
+    if cfg.mtp:
+        # Depth-1 MTP (DeepSeek-V3): predict token t+2 from (h_t, emb_{t+1}).
+        tokens = batch["tokens"]
+        hm = jnp.concatenate([h[:, :-1], _embed_tokens(params, tokens[:, 1:])], axis=-1)
+        hm = hm @ params["mtp"]["proj"]
+        s = hm.shape[1]
+        pos = jnp.arange(s)[None, :]
+        hm, _ = _layer_seq(_dense_like(cfg), params["mtp"]["layer"], hm, pos, attn.causal_mask(s))
+        hm = rms_norm(hm, params["mtp"]["norm"], cfg.norm_eps)
+        mtp_logits = hm @ params["lm_head"]
+        mtp_loss = _cross_entropy(mtp_logits, batch["labels"][:, 1:])
+        metrics["mtp"] = mtp_loss
+        loss = loss + mtp_weight * mtp_loss
+    return loss, metrics
+
+
+def prefill_logits(params, cfg: ModelConfig, batch: Dict):
+    """Full-sequence forward returning last-token logits (inference prefill)."""
+    h, _, _ = hidden_states(params, cfg, batch)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    return h @ params["lm_head"]
+
+
+# --------------------------------------------------------------------------
+# decode (single token against caches)
+# --------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Stacked-over-layers caches; unused fields are None."""
+
+    kv: Optional[Any] = None  # attention KVCache / MLACache, leaves (L, ...)
+    ssm: Optional[Any] = None  # SSMCache, leaves (L, ...)
+    cross: Optional[Any] = None  # whisper (k, v): (L, B, S_enc, H, Dh)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, window: int, enc_len: int = 0,
+                      dtype=jnp.bfloat16) -> DecodeCache:
+    l = cfg.num_layers
+    stack = lambda tree: jax.tree.map(lambda x: jnp.broadcast_to(x[None], (l,) + x.shape), tree)
+    kv = ssm_cache = cross = None
+    hd = cfg.resolved_head_dim
+    if cfg.family != "ssm":
+        if cfg.mla:
+            kv = stack(mla_mod.init_mla_cache(batch, window, cfg.kv_lora_rank, cfg.rope_head_dim, dtype))
+        else:
+            kv = stack(attn.init_kv_cache(batch, window, cfg.num_kv_heads, hd, dtype))
+    if cfg.family == "ssm" or cfg.hybrid:
+        ssm_cache = stack(
+            ssm_mod.init_ssm_cache(batch, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_expand, dtype=dtype)
+        )
+    if cfg.encoder_decoder:
+        cross = (
+            jnp.zeros((l, batch, enc_len, cfg.num_heads, hd), dtype),
+            jnp.zeros((l, batch, enc_len, cfg.num_heads, hd), dtype),
+        )
+    return DecodeCache(kv=kv, ssm=ssm_cache, cross=cross)
+
+
+def _mix_decode(cfg: ModelConfig, p: Params, h, kv, ssm_cache, pos):
+    outs, new_kv, new_ssm = [], kv, ssm_cache
+    if cfg.family == "ssm" or cfg.hybrid:
+        o, new_ssm = ssm_mod.ssm_decode(
+            p["ssm"], h, ssm_cache, ssm_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+        )
+        outs.append(o)
+    if cfg.family != "ssm":
+        hd = cfg.resolved_head_dim
+        if cfg.mla:
+            o, new_kv = mla_mod.mla_decode(
+                p["attn"], h, kv, pos, num_heads=cfg.num_heads, head_dim=hd,
+                rope_head_dim=cfg.rope_head_dim, rope_theta=cfg.rope_theta,
+            )
+        else:
+            o, new_kv = attn.decode_attend(
+                p["attn"], h, kv, pos, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=hd, rope_theta=cfg.rope_theta,
+            )
+        outs.append(o)
+    return sum(outs) / len(outs), new_kv, new_ssm
+
+
+def _layer_decode(cfg: ModelConfig, p: Params, x, kv, ssm_cache, cross, pos):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    mix, new_kv, new_ssm = _mix_decode(cfg, p, h, kv, ssm_cache, pos)
+    x = x + mix
+    if "cross" in p and cross is not None:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        ck, cv = cross
+        hd = cfg.resolved_head_dim
+        c, _ = attn.gqa_apply(
+            p["cross"], hc, num_heads=cfg.num_heads, num_kv_heads=cfg.num_heads,
+            head_dim=hd, positions=jnp.full((hc.shape[0], 1), pos, jnp.int32),
+            mask=attn.full_mask(1, ck.shape[1]), kv_override=(ck, cv, None),
+        )
+        x = x + c
+    if "ff" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            ff, _ = moe_mod.moe_apply(p["ff"], h2, top_k=cfg.top_k, activation=cfg.activation,
+                                      capacity_factor=cfg.moe_capacity_factor)
+        else:
+            ff = mlp_apply(p["ff"], h2, cfg.activation)
+        x = x + ff
+    return x, new_kv, new_ssm
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache, pos):
+    """One token for the whole batch. tokens: (B, 1) int32; pos: scalar."""
+    x = _embed_tokens(params, tokens)
+
+    def body(x, scanned):
+        lp, kv, ssm_cache, cross = scanned
+        x, new_kv, new_ssm = _layer_decode(cfg, lp, x, kv, ssm_cache, cross, pos)
+        return x, (new_kv, new_ssm)
+
+    xs = (params["layers"], cache.kv, cache.ssm, cache.cross)
+    x, (new_kv, new_ssm) = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, DecodeCache(kv=new_kv, ssm=new_ssm, cross=cache.cross)

@@ -1,0 +1,256 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per mesh.
+
+Scheme (DESIGN.md §6): FSDP along the data axes (("pod","data") when the
+pod axis exists, else ("data",)) + tensor parallel along "model".
+
+- in-projections  (wq/wk/wv/w1/w3/in_proj/lora ups/lm_head):  (fsdp, model)
+- out-projections (wo/w2/out_proj):                            (model, fsdp)
+- embedding (V, D): (model, fsdp) — vocab on model keeps logits sharded.
+- MoE expert weights (E, ·, ·): expert-parallel — E over (fsdp+model) when
+  divisible (DeepSeek-V3: 256 = 16·16), else E over model with the wide
+  inner dim over fsdp.
+- Every dim is sharded only if divisible by the axis size; otherwise left
+  replicated (hymba's 25 heads, mamba's odd in_proj width stay safe).
+
+Caches: batch over fsdp when divisible; for batch-1 long-context decode
+the cache length axis takes the fsdp axes instead (sequence-parallel KV).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+IN_PROJ = {"wq", "wk", "wv", "w1", "w3", "in_proj", "wdq", "wuq", "wdkv", "wkr",
+           "wuk", "wuv", "lm_head", "proj"}
+OUT_PROJ = {"wo", "w2", "out_proj"}
+STACKED = {"layers", "enc_layers"}
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints. The launch layer installs the mesh here;
+# model code calls ``constrain`` with symbolic axes and the helper applies
+# only the divisible ones. With no mesh installed (CPU smoke tests) it is a
+# no-op, so model code never needs to know whether it is distributed.
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_MESH = None
+
+
+def set_activation_mesh(mesh) -> None:
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def activation_mesh():
+    return _ACTIVATION_MESH
+
+
+def constrain(x, spec):
+    """Best-effort with_sharding_constraint.
+
+    ``spec``: per-dim entries in {None, "fsdp", "model"}. "fsdp" expands to
+    ("pod","data") when a pod axis exists. If several dims ask for "model",
+    only the first divisible one gets it (first-fit); non-divisible dims
+    are silently left replicated.
+    """
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    fs = fsdp_axes(mesh)
+    fsdp = fs if len(fs) > 1 else fs[0]
+    model_used = False
+    out = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "fsdp" and dim % _size(mesh, fs) == 0 and dim >= _size(mesh, fs):
+            out.append(fsdp)
+        elif ax == "model" and not model_used and dim % mesh.shape["model"] == 0 \
+                and dim >= mesh.shape["model"]:
+            out.append("model")
+            model_used = True
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
+
+
+def constrain_expert(x):
+    """Expert-parallel constraint for (E, capacity, D) MoE blocks: E over
+    the widest divisible combination of (fsdp+model) > model > fsdp."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    fs = fsdp_axes(mesh)
+    e = x.shape[0]
+    for axes in (tuple(fs) + ("model",), ("model",), fs):
+        sz = _size(mesh, axes)
+        if sz > 1 and e % sz == 0 and e >= sz:
+            entry = axes if len(axes) > 1 else axes[0]
+            spec = [entry] + [None] * (x.ndim - 1)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+    return x
+
+
+def fsdp_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def expert_axis_candidates(mesh) -> Tuple[Tuple[str, ...], ...]:
+    """Expert-parallel axis groupings to try, widest first."""
+    fs = fsdp_axes(mesh)
+    cands = [tuple(fs) + ("model",)]
+    if "pod" in mesh.axis_names:
+        cands.append(("data", "model"))
+    cands.append(("model",))
+    return tuple(cands)
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _ok(dim: int, mesh, axes) -> bool:
+    s = _size(mesh, axes)
+    return s > 1 and dim % s == 0
+
+
+def _leaf_spec(path, shape, mesh) -> P:
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    fs = fsdp_axes(mesh)
+    fsdp = fs if len(fs) > 1 else fs[0]
+    stacked = any(n in STACKED for n in names)
+    dims = list(shape[1:]) if stacked else list(shape)
+    lead = [None] if stacked else []
+
+    def guard(spec_entries):
+        out = []
+        for dim, ax in zip(dims, spec_entries):
+            out.append(ax if ax is not None and _ok(dim, mesh, ax) else None)
+        return P(*(lead + out))
+
+    is_moe_w = "ff" in names and name in ("w1", "w2", "w3") and len(dims) == 3
+    if is_moe_w:
+        # Expert-parallel only (no inner-dim FSDP): the a2a dispatch path
+        # needs whole experts resident. Widest divisible expert grouping
+        # wins; on multi-pod meshes experts may shard (data×model) with the
+        # pod axis replicating (DeepSeek-V3: 256 = 16·16).
+        e = dims[0]
+        for axes in expert_axis_candidates(mesh):
+            if _ok(e, mesh, axes):
+                entry = axes if len(axes) > 1 else axes[0]
+                return P(*(lead + [entry, None, None]))
+        return P(*(lead + [None, None, None]))
+
+    if name == "embed":
+        return guard(["model", fsdp])
+    if name == "router":
+        return guard([fsdp, None])
+    if name == "conv_w":
+        return guard([None, "model"])
+    if len(dims) == 2 and name in IN_PROJ:
+        return guard([fsdp, "model"])
+    if len(dims) == 2 and name in OUT_PROJ:
+        return guard(["model", fsdp])
+    if len(dims) == 2:
+        return guard([None, "model"])
+    if len(dims) == 3:  # e.g. vlm projector variants
+        return guard([None, fsdp, "model"])
+    return P(*(lead + [None] * len(dims)))
+
+
+def param_shardings(abstract_params: Any, mesh, fsdp: bool = True,
+                    mode: str = None) -> Any:
+    """Parameter shardings by mode (§Perf serving-layout options):
+
+    - "fsdp" (training default): FSDP over data axes + tensor over model.
+    - "resident": drop pure-FSDP factors — weights stay model/expert-
+      sharded, no per-step parameter all-gather. Entries combining fsdp
+      axes WITH the model axis (expert parallelism) are kept: those are
+      layout shards, not FSDP.
+    - "replicated": full weight replication (small models, prefill) —
+      zero parameter collectives; expert sharding is still kept so MoE
+      stacks that cannot replicate keep working.
+    """
+    if mode is None:
+        mode = "fsdp" if fsdp else "resident"
+    fs = set(fsdp_axes(mesh))
+
+    def strip(spec: P, drop_model: bool) -> P:
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+                continue
+            axes = set(entry) if isinstance(entry, tuple) else {entry}
+            if axes <= fs:
+                out.append(None)  # pure FSDP factor
+            elif drop_model and axes == {"model"}:
+                out.append(None)
+            else:
+                out.append(entry)  # tensor/expert shards
+        return P(*out)
+
+    def f(path, leaf):
+        spec = _leaf_spec(path, leaf.shape, mesh)
+        if mode == "resident":
+            spec = strip(spec, drop_model=False)
+        elif mode == "replicated":
+            names = [getattr(p, "key", "") for p in path]
+            is_expert = "ff" in names and len(leaf.shape) >= 3
+            spec = spec if is_expert else strip(spec, drop_model=True)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, abstract_params)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh, batch_dim: int, ndim: int) -> NamedSharding:
+    fs = fsdp_axes(mesh)
+    fsdp = fs if len(fs) > 1 else fs[0]
+    spec = [None] * ndim
+    if batch_dim % _size(mesh, fs) == 0:
+        spec[0] = fsdp
+    return NamedSharding(mesh, P(*spec))
+
+
+def batch_shardings(mesh, batch_abstract: Any) -> Any:
+    return jax.tree.map(
+        lambda l: batch_sharding(mesh, l.shape[0], l.ndim), batch_abstract
+    )
+
+
+def cache_shardings(mesh, cache_abstract: Any) -> Any:
+    """Caches: leaves stacked over L. (L, B, W/T, heads?, dh?) or SSM states."""
+    fs = fsdp_axes(mesh)
+    fsdp = fs if len(fs) > 1 else fs[0]
+    fsdp_sz = _size(mesh, fs)
+    model_sz = mesh.shape["model"]
+
+    def f(path, leaf):
+        shape = leaf.shape
+        spec = [None] * leaf.ndim  # dim 0 = layers, never sharded
+        if leaf.ndim >= 3:
+            b, length = shape[1], shape[2]
+            if b % fsdp_sz == 0 and b >= fsdp_sz:
+                spec[1] = fsdp
+            elif length % fsdp_sz == 0:
+                spec[2] = fsdp  # sequence-parallel cache (batch-1 long ctx)
+            # Shard the HEADS dim over model when divisible. Never shard the
+            # trailing feature dim: a sharded head_dim turns every decode
+            # step into a full-cache re-gather (measured: §Perf iteration A1).
+            if leaf.ndim >= 5 and shape[3] % model_sz == 0 and shape[3] >= model_sz:
+                spec[3] = "model"
+            elif spec[2] is None and length % model_sz == 0 and length >= model_sz:
+                spec[2] = "model"  # sequence-parallel KV over the model axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, cache_abstract)

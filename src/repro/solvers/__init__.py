@@ -1,0 +1,23 @@
+"""JAX-native numerical solvers used by the robust planner.
+
+Everything in this package is pure-JAX (jit/vmap friendly) and runs in
+float64 — the chance-constrained subproblems mix quantities spanning many
+orders of magnitude (Hz, W, J, s), so we enable x64 on import. Model code
+elsewhere in `repro` declares its dtypes explicitly (bf16/f32) and is not
+affected beyond defaults.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.solvers.scalar import bisect, golden_section  # noqa: E402,F401
+from repro.solvers.nls import levenberg_marquardt  # noqa: E402,F401
+from repro.solvers.ipm import barrier_solve, BarrierSpec  # noqa: E402,F401
+
+__all__ = [
+    "bisect",
+    "golden_section",
+    "levenberg_marquardt",
+    "barrier_solve",
+    "BarrierSpec",
+]

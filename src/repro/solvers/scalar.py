@@ -1,0 +1,91 @@
+"""Scalar root-finding and 1-D minimization, vmap-friendly.
+
+Both routines use fixed iteration counts (``lax.fori_loop``) so they can be
+jitted, vmapped and nested inside other solvers without dynamic shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+_INV_PHI = 0.6180339887498949  # 1/phi
+_INV_PHI2 = 0.3819660112501051  # 1/phi^2
+
+
+def bisect(fn: Callable, lo, hi, iters: int = 80):
+    """Find a root of ``fn`` on [lo, hi] by bisection.
+
+    Assumes ``fn(lo)`` and ``fn(hi)`` bracket a root (sign change). If they
+    do not, the result converges to one of the endpoints, which is the
+    correct behaviour for the monotone complementarity searches we use it
+    for (e.g. a Lagrange-multiplier price that is 0 at an inactive
+    constraint).
+    """
+    lo = jnp.asarray(lo, dtype=jnp.float64)
+    hi = jnp.asarray(hi, dtype=jnp.float64)
+    f_lo = fn(lo)
+
+    def body(_, state):
+        lo, hi, f_lo = state
+        mid = 0.5 * (lo + hi)
+        f_mid = fn(mid)
+        go_right = jnp.sign(f_mid) == jnp.sign(f_lo)
+        new_lo = jnp.where(go_right, mid, lo)
+        new_f_lo = jnp.where(go_right, f_mid, f_lo)
+        new_hi = jnp.where(go_right, hi, mid)
+        return new_lo, new_hi, new_f_lo
+
+    lo, hi, _ = jax.lax.fori_loop(0, iters, body, (lo, hi, f_lo))
+    return 0.5 * (lo + hi)
+
+
+def golden_section(fn: Callable, lo, hi, iters: int = 72):
+    """Minimize a (quasi-)convex scalar ``fn`` on [lo, hi].
+
+    Returns the argmin. 72 iterations shrink the bracket by
+    ~phi^-72 ≈ 1e-15, i.e. to float64 resolution for O(1) intervals.
+    """
+    lo = jnp.asarray(lo, dtype=jnp.float64)
+    hi = jnp.asarray(hi, dtype=jnp.float64)
+    a, b = lo, hi
+    h = b - a
+    c = a + _INV_PHI2 * h
+    d = a + _INV_PHI * h
+    fc, fd = fn(c), fn(d)
+
+    def body(_, state):
+        a, b, c, d, fc, fd = state
+        shrink_right = fc < fd
+        new_b = jnp.where(shrink_right, d, b)
+        new_a = jnp.where(shrink_right, a, c)
+        h = new_b - new_a
+        new_c = new_a + _INV_PHI2 * h
+        new_d = new_a + _INV_PHI * h
+        # Only one of (c, d) needs re-evaluation per iteration in the
+        # classic scheme; recomputing both keeps the state static-shaped
+        # and fn is cheap in our uses (closed-form energy expressions).
+        return new_a, new_b, new_c, new_d, fn(new_c), fn(new_d)
+
+    a, b, c, d, fc, fd = jax.lax.fori_loop(0, iters, body, (a, b, c, d, fc, fd))
+    return 0.5 * (a + b)
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def minimize_grid_then_golden(fn: Callable, lo, hi, grid: int = 64):
+    """Global-ish 1-D minimization: coarse grid to localize, then golden.
+
+    Useful when ``fn`` is only piecewise-convex (e.g. clipped frequency
+    requirement inside an energy expression).
+    """
+    lo = jnp.asarray(lo, dtype=jnp.float64)
+    hi = jnp.asarray(hi, dtype=jnp.float64)
+    xs = jnp.linspace(lo, hi, grid)
+    vals = jax.vmap(fn)(xs)
+    i = jnp.argmin(vals)
+    cell = (hi - lo) / (grid - 1)
+    a = jnp.clip(xs[i] - cell, lo, hi)
+    b = jnp.clip(xs[i] + cell, lo, hi)
+    return golden_section(fn, a, b)

@@ -1,0 +1,40 @@
+"""Pytree checkpointing: msgpack tree structure + raw npz tensor payload."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "tensors.npz"), **leaves)
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {"step": step, "treedef": str(treedef), "keys": list(leaves)}
+    with open(os.path.join(path, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+
+
+def load(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (keys must match)."""
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "tensors.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathk, leaf in flat_like[0]:
+        key = jax.tree_util.keystr(pathk)
+        arr = jnp.asarray(data[key]).astype(leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves), int(meta["step"])

@@ -1,0 +1,72 @@
+"""Training loop: jit'd train_step + host loop with checkpointing."""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticTokens, make_batch
+from repro.models import transformer as T
+from repro.train import checkpoint
+from repro.train.optimizer import AdamWConfig, AdamWState, apply_updates, init_state
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, remat: bool = False,
+                    donate: bool = True):
+    """Returns jit'd (params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, remat=remat), has_aux=True
+        )(params)
+        params, opt_state, opt_metrics = apply_updates(opt, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    kw = dict(donate_argnums=(0, 1)) if donate else {}
+    return jax.jit(train_step, **kw)
+
+
+def train(
+    cfg: ModelConfig,
+    opt: AdamWConfig,
+    num_steps: int,
+    *,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    seed: int = 0,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    log_every: int = 10,
+    remat: bool = False,
+    log_fn=print,
+) -> Tuple[Any, AdamWState, Dict]:
+    """End-to-end host training loop on the synthetic pipeline."""
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(cfg, key)
+    opt_state = init_state(opt, params)
+    step_fn = make_train_step(cfg, opt, remat=remat)
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, seq_len, global_batch, seed))
+
+    history = {"loss": [], "step_time": []}
+    t_last = time.perf_counter()
+    for step in range(num_steps):
+        batch = make_batch(cfg, data, step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if log_every and (step % log_every == 0 or step == num_steps - 1):
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t_last
+            t_last = time.perf_counter()
+            history["loss"].append((step, loss))
+            history["step_time"].append(dt / max(log_every, 1))
+            log_fn(f"step {step:5d} loss {loss:.4f} lr {float(metrics['lr']):.2e} "
+                   f"gnorm {float(metrics['grad_norm']):.2f}")
+        if ckpt_dir and ckpt_every and step and step % ckpt_every == 0:
+            checkpoint.save(ckpt_dir, {"params": params}, step=step)
+    if ckpt_dir:
+        checkpoint.save(ckpt_dir, {"params": params}, step=num_steps)
+    return params, opt_state, history

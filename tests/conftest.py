@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device override lives only in launch/dryrun.py).
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

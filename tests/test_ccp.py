@@ -1,0 +1,46 @@
+"""Chance-constraint reformulation tests (Theorem 1 / ECR)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ccp
+
+
+def test_sigma_values():
+    assert abs(float(ccp.sigma_cantelli(0.02)) - np.sqrt(0.98 / 0.02)) < 1e-12
+    assert abs(float(ccp.sigma_gaussian(0.5))) < 1e-9
+    assert float(ccp.sigma_gaussian(0.02)) < float(ccp.sigma_cantelli(0.02))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.01, 0.3))
+def test_sigma_monotone_decreasing_in_eps(eps):
+    assert float(ccp.sigma_cantelli(eps)) > float(ccp.sigma_cantelli(eps + 0.05))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.floats(0.02, 0.2),
+    st.floats(0.05, 0.5),
+    st.floats(0.001, 0.05),
+    st.integers(0, 1000),
+)
+def test_cantelli_guarantee_distribution_free(eps, mean, std, seed):
+    """If the ECR margin is satisfied with equality, the violation
+    probability must be ≤ ε for ANY distribution with that mean/var."""
+    deadline = mean + float(ccp.sigma_cantelli(eps)) * std
+    key = jax.random.PRNGKey(seed)
+    n = 40000
+    # gamma (right-skewed, worst-ish for upper tails among common families)
+    k = mean**2 / std**2
+    samples = jax.random.gamma(key, k, (n,)) * (std**2 / mean)
+    viol = float(jnp.mean(samples > deadline))
+    assert viol <= eps + 3.0 / np.sqrt(n), (viol, eps)
+
+
+def test_margin_formula():
+    m = ccp.deterministic_deadline_margin(0.1, 0.0001, 0.02, 0.2)
+    expected = 0.1 + np.sqrt(0.98 / 0.02) * 0.01 - 0.2
+    assert abs(float(m) - expected) < 1e-12

@@ -1,0 +1,59 @@
+"""Joint inference-time + channel-state uncertainty (paper footnote 2).
+
+The paper assumes perfect CSI and notes the method "can be extended to
+scenarios that jointly consider inference time and channel state
+uncertainty" — this is that extension: the offload time inherits variance
+from the fading channel (delta method), enters the ECR variance term, and
+the planner's guarantee must survive lognormal channel draws.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet
+from repro.core import plan, violation_report
+from repro.core.channel import offload_time, offload_time_std, pathloss_gain
+
+CV = 0.3  # 30% channel-gain jitter
+
+
+def test_delta_method_matches_monte_carlo():
+    d, b, p = 1.44e6, 1.0e6, 1.0
+    h = pathloss_gain(150.0)
+    std = float(offload_time_std(d, b, p, h, CV))
+    rng = np.random.default_rng(0)
+    s2 = np.log1p(CV**2)
+    hs = float(h) * np.exp(rng.normal(-0.5 * s2, np.sqrt(s2), 200_000))
+    ts = np.asarray(offload_time(d, b, p, jnp.asarray(hs)))
+    assert abs(std - ts.std()) / ts.std() < 0.15  # delta method, small-cv
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 6)
+
+
+def test_channel_robust_plan_keeps_guarantee(fleet):
+    p = plan(fleet, 0.2, 0.04, 10e6, policy="robust_exact", outer_iters=3,
+             channel_cv=CV)
+    assert bool(p.feasible.all())
+    vr = violation_report(jax.random.PRNGKey(5), fleet, p.m_sel, p.alloc, 0.2,
+                          num_samples=20000, var_scale=1.0, channel_cv=CV)
+    assert float(vr.rate.max()) <= 0.04 + 0.005
+
+
+def test_channel_oblivious_plan_pays_under_fading(fleet):
+    """Ignoring channel uncertainty yields a cheaper plan whose margin is
+    thinner under fading; the channel-robust plan costs more energy."""
+    p0 = plan(fleet, 0.2, 0.04, 10e6, policy="robust_exact", outer_iters=3)
+    p1 = plan(fleet, 0.2, 0.04, 10e6, policy="robust_exact", outer_iters=3,
+              channel_cv=CV)
+    assert float(p1.total_energy) >= float(p0.total_energy) - 1e-9
+    v0 = violation_report(jax.random.PRNGKey(6), fleet, p0.m_sel, p0.alloc, 0.2,
+                          num_samples=20000, var_scale=1.0, channel_cv=CV)
+    v1 = violation_report(jax.random.PRNGKey(6), fleet, p1.m_sel, p1.alloc, 0.2,
+                          num_samples=20000, var_scale=1.0, channel_cv=CV)
+    # robust-to-channel plan never violates more than the oblivious one
+    assert float(v1.rate.max()) <= float(v0.rate.max()) + 1e-9
+    assert float(v1.rate.max()) <= 0.04 + 0.005

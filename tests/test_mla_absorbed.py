@@ -1,0 +1,41 @@
+"""Absorbed-MLA decode ≡ non-absorbed decode (§Perf D1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import mla as M
+
+
+@pytest.mark.parametrize("h,dh,r,dr,w", [(4, 32, 64, 16, 24), (2, 64, 128, 32, 16),
+                                         (8, 16, 32, 8, 40)])
+def test_absorbed_equals_expanded(h, dh, r, dr, w, rng):
+    d_model = 64
+    p = M.mla_init(rng, d_model, h, dh, r, 0, dr, jnp.float32)
+    cache0 = M.init_mla_cache(2, w, r, dr, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, d_model), jnp.float32)
+
+    ca, cb = cache0, cache0
+    for pos in range(6):
+        xi = x * (pos + 1)
+        oa, ca = M.mla_decode(p, xi, ca, jnp.int32(pos), num_heads=h, head_dim=dh,
+                              rope_head_dim=dr, absorbed=True)
+        ob, cb = M.mla_decode(p, xi, cb, jnp.int32(pos), num_heads=h, head_dim=dh,
+                              rope_head_dim=dr, absorbed=False)
+        np.testing.assert_allclose(np.asarray(oa), np.asarray(ob), atol=2e-5)
+    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_absorbed_ring_wrap(rng):
+    """Equivalence must survive the ring-buffer wrap (pos ≥ W)."""
+    h, dh, r, dr, w = 2, 16, 32, 8, 4
+    p = M.mla_init(rng, 32, h, dh, r, 0, dr, jnp.float32)
+    ca = cb = M.init_mla_cache(1, w, r, dr, jnp.float32)
+    for pos in range(9):  # wraps twice
+        xi = jax.random.normal(jax.random.PRNGKey(pos), (1, 1, 32), jnp.float32)
+        oa, ca = M.mla_decode(p, xi, ca, jnp.int32(pos), num_heads=h, head_dim=dh,
+                              rope_head_dim=dr, absorbed=True)
+        ob, cb = M.mla_decode(p, xi, cb, jnp.int32(pos), num_heads=h, head_dim=dh,
+                              rope_head_dim=dr, absorbed=False)
+        np.testing.assert_allclose(np.asarray(oa), np.asarray(ob), atol=2e-5)

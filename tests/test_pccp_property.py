@@ -1,0 +1,61 @@
+"""Property-based tests of the PCCP partitioning solver on random
+synthetic instances (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ccp import sigma_cantelli
+from repro.core.pccp import pccp_partition
+
+
+def _random_instance(seed, n, m1):
+    rng = np.random.default_rng(seed)
+    e = rng.uniform(0.01, 1.0, (n, m1))
+    t = rng.uniform(0.01, 0.15, (n, m1))
+    v = rng.uniform(1e-6, 2e-4, (n, m1))
+    return jnp.asarray(e), jnp.asarray(t), jnp.asarray(v)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(3, 8))
+def test_pccp_feasible_and_near_exact(seed, n, m1):
+    e, t, v = _random_instance(seed, n, m1)
+    eps = jnp.full((n,), 0.05)
+    sigma = sigma_cantelli(eps)
+    margin = t + sigma[:, None] * jnp.sqrt(v)
+    deadline = jnp.asarray(np.quantile(np.asarray(margin), 0.6, axis=1))  # some feasible
+    x0 = jnp.ones((n, m1)) / m1
+    res = pccp_partition(e, t, v, sigma, deadline, x0, num_iters=8)
+
+    feas_mask = np.asarray(margin <= deadline[:, None] + 1e-9)
+    any_feas = feas_mask.any(axis=1)
+    m_sel = np.asarray(res.m_sel)
+    # 1. whenever a feasible point exists, the chosen point is feasible
+    for i in range(n):
+        if any_feas[i]:
+            assert feas_mask[i, m_sel[i]], (i, m_sel[i])
+    # 2. relaxed x stays a distribution
+    x = np.asarray(res.x_relaxed)
+    assert np.allclose(x.sum(-1), 1.0, atol=1e-5)
+    assert (x >= -1e-6).all() and (x <= 1 + 1e-6).all()
+    # 3. chosen point exactly matches the per-device exact optimum
+    e_np = np.asarray(e)
+    for i in range(n):
+        if any_feas[i]:
+            best = np.where(feas_mask[i], e_np[i], np.inf).argmin()
+            assert abs(e_np[i, m_sel[i]] - e_np[i, best]) < 1e-9, (i, m_sel[i], best)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pccp_iteration_count_reported(seed):
+    e, t, v = _random_instance(seed, 3, 5)
+    eps = jnp.full((3,), 0.05)
+    sigma = sigma_cantelli(eps)
+    deadline = jnp.full((3,), 1.0)  # everything feasible
+    x0 = jnp.ones((3, 5)) / 5
+    res = pccp_partition(e, t, v, sigma, deadline, x0, num_iters=8)
+    it = np.asarray(res.iters_to_converge)
+    assert ((1 <= it) & (it <= 8)).all()

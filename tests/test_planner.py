@@ -1,0 +1,86 @@
+"""Algorithm 2 planner: paper claims as testable properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
+from repro.core import plan, plan_optimal, violation_report
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 6)
+
+
+@pytest.fixture(scope="module")
+def plans(fleet):
+    out = {}
+    for pol in ("robust_exact", "worst_case", "gaussian"):
+        out[pol] = plan(fleet, 0.2, 0.04, 10e6, policy=pol, outer_iters=4)
+    out["optimal"] = plan_optimal(fleet, 0.2, 0.04, 10e6)
+    return out
+
+
+def test_all_feasible(plans):
+    for name, p in plans.items():
+        assert bool(p.feasible.all()), name
+
+
+def test_robust_beats_worst_case_at_moderate_risk(fleet):
+    pr = plan(fleet, 0.2, 0.08, 10e6, policy="robust_exact", outer_iters=4)
+    pw = plan(fleet, 0.2, 0.08, 10e6, policy="worst_case", outer_iters=4)
+    assert float(pr.total_energy) < float(pw.total_energy)
+
+
+def test_optimal_lower_bound(plans):
+    assert float(plans["optimal"].total_energy) <= float(plans["robust_exact"].total_energy) + 1e-9
+
+
+def test_gaussian_cheaper_than_cantelli(plans):
+    """Φ⁻¹(1-ε) < √((1-ε)/ε) ⇒ less conservative ⇒ cheaper or equal."""
+    assert float(plans["gaussian"].total_energy) <= float(plans["robust_exact"].total_energy) + 1e-9
+
+
+def test_energy_decreases_with_risk_level(fleet):
+    es = [float(plan(fleet, 0.2, e, 10e6, policy="robust_exact", outer_iters=3).total_energy)
+          for e in (0.02, 0.05, 0.1)]
+    assert es[0] >= es[1] >= es[2]
+
+
+def test_energy_decreases_with_deadline(fleet):
+    es = [float(plan(fleet, d, 0.04, 10e6, policy="robust_exact", outer_iters=3).total_energy)
+          for d in (0.18, 0.22, 0.28)]
+    assert es[0] >= es[1] >= es[2]
+
+
+@pytest.mark.parametrize("dist", ["gamma", "lognormal", "truncnorm"])
+def test_violation_probability_below_risk(fleet, plans, dist):
+    """Fig. 13c/14c: empirical violation ≤ ε for any matched distribution."""
+    p = plans["robust_exact"]
+    vr = violation_report(jax.random.PRNGKey(7), fleet, p.m_sel, p.alloc, 0.2,
+                          dist=dist, num_samples=20000, var_scale=1.0)
+    assert float(vr.rate.max()) <= 0.04 + 0.005, dist
+
+
+def test_pccp_near_exact_and_stationary(fleet):
+    """Fig. 12: PCCP is 'very close to optimal'. We assert (i) feasibility,
+    (ii) a bounded gap to the exact per-device optimum, and (iii)
+    stationarity — PCCP started AT the exact optimum stays there."""
+    pe = plan(fleet, 0.2, 0.04, 10e6, policy="robust_exact", outer_iters=3)
+    pp = plan(fleet, 0.2, 0.04, 10e6, policy="robust", outer_iters=3, pccp_iters=8)
+    assert bool(pp.feasible.all())
+    gap = (float(pp.total_energy) - float(pe.total_energy)) / float(pe.total_energy)
+    assert gap <= 0.10, gap
+    ps = plan(fleet, 0.2, 0.04, 10e6, policy="robust", outer_iters=3, pccp_iters=8,
+              init_m=pe.m_sel, multi_start=False)
+    assert np.array_equal(np.asarray(ps.m_sel), np.asarray(pe.m_sel))
+    assert abs(float(ps.total_energy) - float(pe.total_energy)) < 1e-9
+
+
+def test_resnet_scenario_end_to_end():
+    fleet = resnet152_fleet(jax.random.PRNGKey(2), 6)
+    p = plan(fleet, 0.12, 0.04, 30e6, policy="robust_exact", outer_iters=3)
+    assert bool(p.feasible.all())
+    vr = violation_report(jax.random.PRNGKey(3), fleet, p.m_sel, p.alloc, 0.12)
+    assert float(vr.rate.max()) <= 0.04 + 0.005

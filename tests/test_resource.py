@@ -1,0 +1,63 @@
+"""Resource-allocation subproblem: dual solver vs paper-faithful IPM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
+from repro.core import allocate, allocate_ipm
+from repro.core.resource import deadline_budget, select_point
+from repro.core import channel, energy
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 6)
+
+
+def test_bandwidth_budget_respected(fleet):
+    m = jnp.full((6,), 7, jnp.int32)
+    a = allocate(fleet, m, 0.2, 0.02, 10e6)
+    assert float(jnp.sum(a.b)) <= 10e6 * (1 + 1e-9)
+    assert bool(jnp.all(a.b > 0))
+    assert bool(jnp.all((a.f >= fleet.platform.f_min - 1) & (a.f <= fleet.platform.f_max + 1)))
+
+
+def test_deadline_met_in_expectation_with_margin(fleet):
+    m = jnp.full((6,), 7, jnp.int32)
+    a = allocate(fleet, m, 0.2, 0.02, 10e6)
+    sel = select_point(fleet, m)
+    t = (
+        energy.mean_local_time(sel.w_flops, sel.g_eff, a.f)
+        + channel.offload_time(sel.d_bits, a.b, fleet.link.p_tx, fleet.link.gain)
+    )
+    budget = deadline_budget(sel, jnp.full((6,), 0.2), jnp.full((6,), 0.02))
+    assert bool(jnp.all(t <= budget + 1e-9))
+
+
+def test_dual_matches_interior_point(fleet):
+    """Strong duality: the dual-decomposition optimum equals the paper's
+    joint IPM optimum (within solver tolerance)."""
+    m = jnp.full((6,), 7, jnp.int32)
+    a = allocate(fleet, m, 0.2, 0.02, 10e6)
+    b = allocate_ipm(fleet, m, jnp.full((6,), 0.2), jnp.full((6,), 0.02), 10e6)
+    ea, eb = float(jnp.sum(a.energy)), float(jnp.sum(b.energy))
+    assert abs(ea - eb) / max(ea, 1e-12) < 5e-3, (ea, eb)
+    # IPM can only be >= (dual gives the true optimum; IPM feasible)
+    assert eb >= ea - 1e-6
+
+
+def test_energy_monotone_in_deadline(fleet):
+    m = jnp.full((6,), 7, jnp.int32)
+    es = []
+    for d in (0.16, 0.2, 0.26):
+        a = allocate(fleet, m, d, 0.02, 10e6)
+        es.append(float(jnp.sum(a.energy)))
+    assert es[0] >= es[1] >= es[2]
+
+
+def test_infeasible_point_flagged():
+    fleet = resnet152_fleet(jax.random.PRNGKey(1), 4)
+    m = jnp.full((4,), 9, jnp.int32)  # full local
+    a = allocate(fleet, m, 0.001, 0.02, 30e6)  # 1 ms deadline: impossible
+    assert not bool(jnp.any(a.feasible))

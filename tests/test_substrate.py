@@ -1,0 +1,71 @@
+"""Data pipeline, optimizer, train loop, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokens, make_batch
+from repro.models import transformer as T
+from repro.train import checkpoint
+from repro.train.loop import train
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state, lr_at
+
+
+def test_data_deterministic_and_learnable():
+    d = SyntheticTokens(DataConfig(vocab_size=512, seq_len=32, global_batch=4, seed=3))
+    a, b = d.batch(7), d.batch(7)
+    np.testing.assert_array_equal(a, b)
+    c = d.batch(8)
+    assert not np.array_equal(a, c)
+    # Markov structure: bigram entropy is far below uniform
+    big = d.batch(0)
+    assert len(np.unique(big)) < 512
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_at(cfg, 0)) < 2e-4
+    assert abs(float(lr_at(cfg, 10)) - 1e-3) < 2e-4
+    assert float(lr_at(cfg, 99)) < float(lr_at(cfg, 50))
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_state(cfg, params)
+    for _ in range(60):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state, _ = apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_train_loop_reduces_loss():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    _, _, hist = train(cfg, AdamWConfig(lr=2e-3, total_steps=60, warmup_steps=5),
+                       60, global_batch=8, seq_len=64, log_every=5, log_fn=lambda *_: None)
+    losses = [l for _, l in hist["loss"]]
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    cfg = get_config("mamba2-130m", smoke=True)
+    params = T.init_params(cfg, rng)
+    path = os.path.join(tmp_path, "ckpt")
+    checkpoint.save(path, {"params": params}, step=42)
+    like = {"params": jax.tree.map(jnp.zeros_like, params)}
+    restored, step = checkpoint.load(path, like)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_modality_stub_batches():
+    cfg = get_config("whisper-medium", smoke=True)
+    d = SyntheticTokens(DataConfig(cfg.vocab_size, 32, 2, seed=0))
+    b = make_batch(cfg, d, 0)
+    assert b["frames"].shape == (2, 8, cfg.d_model)
+    cfg = get_config("internvl2-2b", smoke=True)
+    b = make_batch(cfg, SyntheticTokens(DataConfig(cfg.vocab_size, 32, 2, 0)), 0)
+    assert b["patches"].shape == (2, cfg.num_patches, cfg.vision_dim)

@@ -1,0 +1,94 @@
+"""End-to-end system behaviour: the paper's technique driving two-tier
+serving of zoo architectures, engine measurement feedback, and the
+cost-model bridge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.models.costmodel import block_chain_from_config, model_flops_per_token
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.partitioned import TwoTierDeployment, measured_chain
+
+
+def test_cost_model_matches_2n_for_dense():
+    for arch in ("tinyllama-1.1b", "stablelm-1.6b", "minitron-4b"):
+        cfg = get_config(arch)
+        fl = model_flops_per_token(cfg, seq_len=512)
+        n = T.param_count(cfg)
+        assert 0.8 * 2 * n < fl < 1.6 * 2 * n, arch
+
+
+def test_block_chain_structure():
+    chain = block_chain_from_config(get_config("tinyllama-1.1b"), seq_len=256)
+    w = np.asarray(chain.w_flops)
+    assert (np.diff(w) > 0).all()  # cumulative work increases
+    t_vm = np.asarray(chain.t_vm)
+    assert (np.diff(t_vm) < 1e-12).all()  # edge share decreases
+    assert float(chain.t_vm[-1]) == 0.0
+    assert float(chain.w_flops[0]) == 0.0
+
+
+@pytest.mark.parametrize("arch", ["internvl2-2b", "mamba2-130m", "deepseek-v2-lite-16b"])
+def test_two_tier_deployment_plans_and_validates(arch):
+    dep = TwoTierDeployment(get_config(arch), num_devices=5, deadline_s=2.0,
+                            eps=0.05, bandwidth_hz=100e6)
+    p, fleet = dep.plan()
+    rep = dep.validate(p, fleet)
+    assert rep["max_violation"] <= dep.eps + 0.01
+    assert rep["total_energy_j"] >= 0.0
+    assert bool(p.feasible.all())
+
+
+def test_serving_engine_batches_and_measures(rng):
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = T.init_params(cfg, rng)
+    eng = ServingEngine(cfg, params, max_batch=3, window=64)
+    reqs = [Request(uid=i, prompt=np.arange(4 + i) % cfg.vocab_size,
+                    max_new_tokens=3, deadline_s=0.5 + 0.1 * i) for i in range(5)]
+    done, stats = eng.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.output) == 3 for r in done)
+    assert stats["decode_mean_s"] > 0
+
+    # engine measurements feed the planner's chain (paper §IV online path)
+    chain = block_chain_from_config(cfg, seq_len=64)
+    updated = measured_chain(chain, stats)
+    assert float(updated.t_vm[0]) == pytest.approx(stats["decode_mean_s"], rel=1e-6)
+    assert bool(jnp.all(updated.v_vm >= 0))
+
+
+def test_deadline_aware_scheduling(rng):
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = T.init_params(cfg, rng)
+    eng = ServingEngine(cfg, params, max_batch=2, window=32)
+    reqs = [Request(uid=i, prompt=np.ones(3, np.int32), deadline_s=d)
+            for i, d in enumerate([0.9, 0.1, 0.5])]
+    groups = eng.schedule(reqs)
+    assert [r.uid for r in groups[0]] == [1, 2]  # earliest deadlines first
+
+
+def test_congested_edge_regime_robust_beats_worst_case():
+    """DESIGN.md §5b: with a shared (contended) edge, the planner moves
+    work on-device and the robust policy still saves ≥20% energy vs the
+    worst-case baseline under the same probabilistic deadline."""
+    from repro.models.costmodel import TierProfile
+
+    dep = TwoTierDeployment(
+        get_config("tinyllama-1.1b"), num_devices=8, deadline_s=0.45,
+        eps=0.05, bandwidth_hz=60e6, seq_len=512, dedicated_vm=False,
+        device=TierProfile(flops_per_cycle=4000.0, cv=0.10, eff_jitter=0.10),
+        edge=TierProfile(flops_per_cycle=8000.0, cv=0.08, eff_jitter=0.05,
+                         clock_hz=1.5e9),
+        f_max_hz=2.5e9,
+    )
+    p, fleet = dep.plan(policy="robust_exact")
+    pw, _ = dep.plan(policy="worst_case")
+    assert bool(p.feasible.all())
+    assert int(p.m_sel.min()) > 0  # work stays on-device
+    saving = (float(pw.total_energy) - float(p.total_energy)) / float(pw.total_energy)
+    assert saving > 0.20, saving
+    rep = dep.validate(p, fleet)
+    assert rep["max_violation"] <= dep.eps + 0.01

@@ -1,0 +1,41 @@
+"""Inference-time statistics (paper §IV): NLS fit, max-variance rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.uncertainty import (
+    fit_g, max_covariance, max_variance, measure_profile, synth_samples,
+)
+
+
+def test_fit_recovers_g():
+    freqs = jnp.linspace(0.1e9, 1.2e9, 12)
+    w = 1.4214e9  # AlexNet full model GFLOPs
+    g_true = 7.1
+    times = w / (g_true * freqs)
+    out = fit_g(freqs, times, w)
+    assert abs(float(out.params[0]) - g_true) / g_true < 1e-9
+
+
+def test_profile_pipeline_close_to_truth(rng):
+    freqs = jnp.linspace(0.2e9, 0.8e9, 7)
+    w, g_true, cv = 23.1e9, 307.0, 0.08
+    samples = synth_samples(rng, freqs, w, g_true, cv=cv, num_samples=500)
+    prof = measure_profile(freqs, samples, w)
+    assert abs(float(prof.g_eff) - g_true) / g_true < 0.05
+    # max-over-frequency variance should be ≈ (cv · slowest mean)²
+    slow_mean = w / (g_true * float(freqs[0]))
+    assert 0.3 * (cv * slow_mean) ** 2 < float(prof.v_loc) < 3.0 * (cv * slow_mean) ** 2
+
+
+def test_max_variance_is_max():
+    x = jnp.stack([jnp.array([1.0, 1.0, 1.0, 1.0]), jnp.array([0.0, 2.0, 0.0, 2.0])])
+    assert float(max_variance(x)) == float(jnp.var(x[1], ddof=1))
+
+
+def test_max_covariance_bounds_pairwise(rng):
+    a = jax.random.normal(rng, (5, 200))
+    b = 0.5 * a + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (5, 200))
+    w = float(max_covariance(a, b))
+    per_freq = [float(jnp.cov(a[i], b[i])[0, 1]) for i in range(5)]
+    assert abs(w - max(per_freq)) < 1e-6
