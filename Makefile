@@ -1,0 +1,22 @@
+# Developer entry points. PYTHONPATH is set so the src layout works
+# without an editable install.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench dev-install
+
+# Tier-1 verification (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# Quick perf smoke: planner runtime + PCCP convergence only.
+# bench_runtime writes the BENCH_planner.json artifact.
+bench-smoke:
+	$(PY) -m benchmarks.run --only runtime,convergence
+
+# Full paper-figure benchmark sweep
+bench:
+	$(PY) -m benchmarks.run
+
+dev-install:
+	pip install -r requirements-dev.txt

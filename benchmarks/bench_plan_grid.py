@@ -1,0 +1,41 @@
+"""Batched scenario-grid planning vs sequential seed planning.
+
+The ROADMAP north-star workload is multi-scenario traffic: deadline/ε/B
+sweeps (Fig. 13/14) and per-request planning in the two-tier engine. This
+bench pits a 3×3 deadline×ε ``plan_grid`` (9 scenarios, one compiled
+program) against sequential seed ``plan()`` calls — the seed Python loop
+with the seed's inner barrier schedule, via ``plan_reference`` — on the
+paper's robust (PCCP) policy. The acceptance bar is the 9-scenario grid
+beating just 3 sequential seed calls."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, timed, timed_compile
+from repro.configs.paper_tables import alexnet_fleet
+from repro.core import plan_grid
+from repro.core.pccp import SEED_SCHEDULE
+from repro.core.planner_ref import plan_reference
+
+DEADLINES = (0.18, 0.20, 0.22)
+EPSS = (0.02, 0.04, 0.06)
+KW = dict(policy="robust", outer_iters=2, pccp_iters=6)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    fleet = alexnet_fleet(jax.random.PRNGKey(0), 12)
+
+    t = timed_compile(lambda: plan_grid(fleet, DEADLINES, EPSS, 10e6, **KW),
+                      repeats=2)
+    _, seq3_us = timed(
+        lambda: [plan_reference(fleet, d, 0.04, 10e6,
+                                pccp_schedule=SEED_SCHEDULE, **KW)
+                 for d in DEADLINES],
+        repeats=1)
+    n_cells = len(DEADLINES) * len(EPSS)
+    rows.append((
+        f"plan_grid_{len(DEADLINES)}x{len(EPSS)}_alexnet", t.us,
+        f"per_scenario_us={t.us / n_cells:.0f};compile_us={t.compile_us:.0f};"
+        f"seed_3seq_us={seq3_us:.0f};grid9_vs_seed3seq={seq3_us / t.us:.2f}x"))
+    return rows

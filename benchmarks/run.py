@@ -5,10 +5,13 @@
 # Benches:
 #   bench_fit           — Fig. 6   (NLS fit of t̄ = w/(g·f))
 #   bench_convergence   — Fig. 9/10 (PCCP iterations; Alg.-2 trajectories)
-#   bench_runtime       — Fig. 11  (runtime vs N)
+#   bench_runtime       — Fig. 11  (runtime vs N; steady-state + compile,
+#                         seed-loop speedup at N=50 → BENCH_planner.json)
 #   bench_devices       — Fig. 12  (energy vs N; PCCP vs optimal)
-#   bench_risk_deadline — Fig. 13a/b, 14a/b (energy vs ε / deadline)
+#   bench_risk_deadline — Fig. 13a/b, 14a/b (energy vs ε / deadline,
+#                         one plan_grid call per sweep)
 #   bench_violation     — Fig. 13c/14c (violation probability ≤ ε)
+#   bench_plan_grid     — batched 3×3 scenario grid vs sequential seed loop
 #   bench_two_tier      — beyond-paper: planner over zoo architectures
 #   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
 #   bench_kernels       — Pallas kernels vs references
@@ -28,6 +31,7 @@ MODULES = [
     "bench_devices",
     "bench_risk_deadline",
     "bench_violation",
+    "bench_plan_grid",
     "bench_two_tier",
     "bench_channel",
     "bench_kernels",

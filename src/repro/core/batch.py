@@ -1,0 +1,94 @@
+"""Batched scenario-grid planning (DESIGN.md §planner).
+
+The fused planner traces deadline, ε and B (only fleet *shape*, policy and
+iteration counts are static), so whole scenario sweeps — Fig. 13/14's
+deadline×ε grids, per-request planning in the two-tier engine, bandwidth
+what-ifs — vmap over one compiled program instead of re-dispatching
+``plan()`` per scenario.
+
+``plan_grid`` evaluates the full cartesian product
+
+    deadlines (D,) × epss (E,) × Bs (K,)
+
+and returns a ``Plan`` whose every leaf carries leading axes (D, E, K):
+``out.m_sel[i, j, k]`` is the plan for ``(deadlines[i], epss[j], Bs[k])``.
+Scalars are treated as length-1 axes, so ``plan_grid(fleet, 0.2, eps_grid,
+B)`` sweeps ε only. Each scenario is planned exactly as ``plan()`` would
+(including the vmapped multi-start sweep and its feasibility-then-energy
+selection), so ``plan_grid(...)[i, j, k] == plan(...)`` leaf-for-leaf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import Fleet
+from repro.core.planner import (
+    Plan,
+    _POLICIES,
+    _alternation,
+    _multi_start,
+    initial_points,
+)
+
+_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv", "multi_start")
+
+
+@partial(jax.jit, static_argnames=_STATICS)
+def _grid_impl(fleet, deadlines, epss, Bs, m0, *, policy, outer_iters,
+               pccp_iters, channel_cv, multi_start):
+    dd, ee, bb = jnp.meshgrid(deadlines, epss, Bs, indexing="ij")
+    shape = dd.shape
+
+    if multi_start:
+        run = lambda d, e, b: _multi_start(
+            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
+    else:
+        run = lambda d, e, b: _alternation(
+            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
+
+    plans = jax.vmap(run)(dd.ravel(), ee.ravel(), bb.ravel())
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape(shape + x.shape[1:]), plans)
+
+
+def plan_grid(
+    fleet: Fleet,
+    deadlines,
+    epss,
+    Bs,
+    policy: str = "robust",
+    outer_iters: int = 6,
+    init_m: Optional[jnp.ndarray] = None,
+    pccp_iters: int = 10,
+    multi_start: bool = True,
+    channel_cv: float = 0.0,
+) -> Plan:
+    """Plan every scenario in deadlines × epss × Bs as ONE XLA program.
+
+    Returns a ``Plan`` with leading grid axes (len(deadlines), len(epss),
+    len(Bs)) on every leaf. See module docstring for semantics.
+    """
+    if policy not in _POLICIES or policy == "optimal":
+        raise ValueError(
+            f"policy must be one of {_POLICIES[:-1]} for grid planning, got {policy!r}")
+    if outer_iters < 1:
+        raise ValueError("outer_iters must be >= 1")
+
+    as_axis = lambda v: jnp.atleast_1d(jnp.asarray(v, jnp.float64))
+    deadlines, epss, Bs = as_axis(deadlines), as_axis(epss), as_axis(Bs)
+
+    m0, use_multi = initial_points(fleet, init_m, multi_start)
+    return _grid_impl(
+        fleet, deadlines, epss, Bs, m0,
+        policy=policy, outer_iters=int(outer_iters), pccp_iters=int(pccp_iters),
+        channel_cv=float(channel_cv), multi_start=use_multi,
+    )
+
+
+def plan_at(plans: Plan, i: int, j: int = 0, k: int = 0) -> Plan:
+    """Extract the single-scenario ``Plan`` at grid index (i, j, k)."""
+    return jax.tree_util.tree_map(lambda x: x[i, j, k], plans)

@@ -26,6 +26,18 @@ from repro.solvers.ipm import BarrierSpec, barrier_solve
 
 _Y_MIN = 1e-9
 
+#: Barrier schedule of the inner solves: (t0, mu, stages, newton_per_stage,
+#: ls_candidates). Every Newton step costs a batched Cholesky + line
+#: search, so the step COUNT is the planner's wall-clock; this is the
+#: fewest stages/steps that keep the golden seed plans
+#: (tests/golden/seed_plans.json) and the PCCP stationarity property intact
+#: (final gap bound: n_ineq / (t0·mu^(stages−1)) ≈ 2e-6 for M+1 = 10).
+#: The seed used (1.0, 8.0, 12, 14, 40) — 168 Newton steps per inner solve
+#: against 24 here; ``benchmarks/bench_runtime.py`` times that schedule via
+#: ``SEED_SCHEDULE`` for the speedup trajectory.
+DEFAULT_SCHEDULE = (1.0, 30.0, 6, 4, 24)
+SEED_SCHEDULE = (1.0, 8.0, 12, 14, 40)
+
 
 class PCCPResult(NamedTuple):
     m_sel: jnp.ndarray  # (N,) int32 chosen partition points
@@ -35,10 +47,18 @@ class PCCPResult(NamedTuple):
     feasible: jnp.ndarray  # (N,) bool — chosen point satisfies (28)
 
 
-def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev):
+def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev,
+                   schedule=DEFAULT_SCHEDULE):
     """Build problem (36) for one device and solve it with the barrier IPM.
 
     z = [x (M1), y, α, β, δ, γ (M1)] — dim 2·M1 + 4.
+
+    All constraints are affine except the two DC rows ((36c): Σ var·x²,
+    (36d): y²), so the system is assembled ONCE per PCCP iteration as
+    fi(z) = C z + c0 + q(z) with a constant (per-iterate) matrix C and a
+    two-entry quadratic correction q. Every barrier/Newton/line-search
+    evaluation is then a single matvec instead of a dozen concatenated
+    ops — the inner solve is where the whole planner's wall-clock goes.
     """
     m1 = e_vec.shape[0]
     dim = 2 * m1 + 4
@@ -49,33 +69,68 @@ def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev):
 
     rho_dl = 50.0 * rho
 
+    c_obj = (
+        jnp.zeros((dim,), jnp.float64)
+        .at[ix].set(e_vec)
+        .at[ia].set(rho)
+        .at[ib].set(rho)
+        .at[idl].set(rho_dl)
+        .at[ig].set(rho)
+    )
+
     def objective(z):
-        return (
-            jnp.dot(z[ix], e_vec)
-            + rho * (z[ia] + z[ib] + jnp.sum(z[ig]))
-            + rho_dl * z[idl]
-        )
+        return jnp.dot(c_obj, z)
+
+    # Row layout (same order as the paper's constraint list):
+    #   [0, m1)        −x ≤ 0
+    #   [m1, 2m1)      x − 1 ≤ 0
+    #   2m1            (33c)+δ:  tᵀx + σy − D − δ ≤ 0
+    #   2m1+1          (36c):    Σ var x² − 2y_prev y + y_prev² − α ≤ 0
+    #   2m1+2          (36d):    y² − 2(var⊙x_prev)ᵀx + Σ var x_prev² − β ≤ 0
+    #   [2m1+3, 3m1+3) (36e):    (1−2x_prev)⊙x + x_prev² − γ ≤ 0
+    #   3m1+3          y ≥ _Y_MIN
+    #   3m1+4..6       α, β, δ ≥ 0
+    #   [3m1+7, 4m1+7) γ ≥ 0
+    n_ineq = 4 * m1 + 7
+    r_ddl, r_c, r_d, r_e = 2 * m1, 2 * m1 + 1, 2 * m1 + 2, 2 * m1 + 3
+    r_y, r_a = 3 * m1 + 3, 3 * m1 + 4
+    r_g = 3 * m1 + 7
+    eye = jnp.eye(m1, dtype=jnp.float64)
+    ar = jnp.arange(m1)
+
+    C = (
+        jnp.zeros((n_ineq, dim), jnp.float64)
+        .at[0:m1, ix].set(-eye)
+        .at[m1:2 * m1, ix].set(eye)
+        .at[r_ddl, ix].set(t_vec)
+        .at[r_ddl, iy].set(sigma)
+        .at[r_ddl, idl].set(-1.0)
+        .at[r_c, iy].set(-2.0 * y_prev)
+        .at[r_c, ia].set(-1.0)
+        .at[r_d, ix].set(-2.0 * var_vec * x_prev)
+        .at[r_d, ib].set(-1.0)
+        .at[r_e + ar, ix].set(jnp.diag(1.0 - 2.0 * x_prev))
+        .at[r_e + ar, ig].add(-eye)
+        .at[r_y, iy].set(-1.0)
+        .at[r_a, ia].set(-1.0)
+        .at[r_a + 1, ib].set(-1.0)
+        .at[r_a + 2, idl].set(-1.0)
+        .at[r_g + ar, ig].set(-eye)
+    )
+    c0 = (
+        jnp.zeros((n_ineq,), jnp.float64)
+        .at[m1:2 * m1].set(-1.0)
+        .at[r_ddl].set(-deadline)
+        .at[r_c].set(y_prev**2)
+        .at[r_d].set(jnp.dot(var_vec, x_prev**2))
+        .at[r_e + ar].set(x_prev**2)
+        .at[r_y].set(_Y_MIN)
+    )
 
     def inequalities(z):
         x, y = z[ix], z[iy]
-        alpha, beta, delta, gamma = z[ia], z[ib], z[idl], z[ig]
-        quad = jnp.dot(var_vec, x * x)
-        lin_quad_prev = jnp.dot(var_vec, x_prev * (2.0 * x - x_prev))
-        return jnp.concatenate(
-            [
-                -x,  # x ≥ 0
-                x - 1.0,  # x ≤ 1
-                (jnp.dot(x, t_vec) + sigma * y - deadline - delta)[None],  # (33c)+δ
-                (quad - (2.0 * y_prev * y - y_prev**2) - alpha)[None],  # (36c)
-                (y * y - lin_quad_prev - beta)[None],  # (36d)
-                x * (1.0 - 2.0 * x_prev) + x_prev**2 - gamma,  # (36e)
-                (_Y_MIN - y)[None],
-                (-alpha)[None],
-                (-beta)[None],
-                (-delta)[None],
-                -gamma,
-            ]
-        )
+        fi = C @ z + c0
+        return fi.at[r_c].add(jnp.dot(var_vec, x * x)).at[r_d].add(y * y)
 
     A = jnp.zeros((1, dim), jnp.float64).at[0, ix].set(1.0)
 
@@ -91,18 +146,20 @@ def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev):
         [x0, y0[None], alpha0[None], beta0[None], delta0[None], gamma0]
     )
 
+    t0, mu, stages, newton, ls = schedule
     res = barrier_solve(
         BarrierSpec(objective=objective, inequalities=inequalities, eq_matrix=A, eq_rhs=jnp.ones((1,))),
         z0,
-        t0=1.0,
-        mu=8.0,
-        outer_iters=12,
-        newton_iters=14,
+        t0=t0,
+        mu=mu,
+        outer_iters=stages,
+        newton_iters=newton,
+        ls_iters=ls,
     )
     return res.z[ix], res.z[iy]
 
 
-@partial(jax.jit, static_argnames=("num_iters",))
+@partial(jax.jit, static_argnames=("num_iters", "schedule"))
 def pccp_partition(
     e_table: jnp.ndarray,  # (N, M+1) energy of each point at current (b, f)
     t_table: jnp.ndarray,  # (N, M+1) mean total time of each point
@@ -115,10 +172,14 @@ def pccp_partition(
     nu: float = 3.0,
     rho_max: float = 1e5,
     theta_err: float = 1e-3,
+    schedule: tuple = DEFAULT_SCHEDULE,  # inner barrier (t0, mu, stages, newton, ls)
 ) -> PCCPResult:
     n, m1 = e_table.shape
 
-    inner = jax.vmap(_inner_problem, in_axes=(0, 0, 0, 0, 0, None, 0, 0))
+    inner = jax.vmap(
+        lambda e, t, v, s, d, rho, xp, yp: _inner_problem(
+            e, t, v, s, d, rho, xp, yp, schedule),
+        in_axes=(0, 0, 0, 0, 0, None, 0, 0))
 
     def step(carry, _):
         x_prev, y_prev, rho = carry

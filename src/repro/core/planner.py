@@ -14,9 +14,18 @@ Policies (all share the same alternation skeleton):
                       price-based exact enumeration over (m, b, f)
                       (optimal because the problem decouples at a fixed
                       bandwidth price; see DESIGN.md).
+
+The whole planner is ONE compiled XLA program (DESIGN.md §planner): the
+outer Algorithm-2 alternation is a ``lax.scan``, the multi-start spread is
+a ``vmap`` over initial partition points with a traced
+feasibility-then-energy argmin, and all scenario parameters
+(deadline, ε, B) are traced — so repeated calls on same-shaped fleets hit
+the jit cache, and ``core.batch.plan_grid`` can vmap whole scenario grids
+over the same trace.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -25,7 +34,14 @@ import jax.numpy as jnp
 from repro.core import ccp, channel, energy
 from repro.core.blocks import Fleet
 from repro.core.pccp import pccp_partition
-from repro.core.resource import Allocation, _device_best_b, allocate, deadline_budget, select_point
+from repro.core.resource import (
+    Allocation,
+    _device_best_b_at,
+    _device_invariants,
+    allocate,
+    deadline_budget,
+    select_point,
+)
 from repro.solvers.scalar import bisect
 
 _POLICIES = ("robust", "robust_exact", "gaussian", "worst_case", "optimal")
@@ -88,44 +104,47 @@ def _sigma_model(policy: str) -> str:
     return {"gaussian": "gaussian", "worst_case": "hard"}.get(policy, "cantelli")
 
 
-def plan(
-    fleet: Fleet,
-    deadline: jnp.ndarray,
-    eps: jnp.ndarray,
-    B: float,
-    policy: str = "robust",
-    outer_iters: int = 6,
-    init_m: Optional[jnp.ndarray] = None,
-    pccp_iters: int = 10,
-    multi_start: bool = True,
-    channel_cv: float = 0.0,
-) -> Plan:
-    """Run Algorithm 2 (or a baseline policy) and return the plan.
+def default_starts(num_points: int) -> list[int]:
+    """Multi-start spread of initial partition points (Fig. 10)."""
+    m1 = num_points
+    return sorted({1, m1 // 2, (3 * m1) // 4, max(m1 - 2, 1), m1 - 1})
 
-    ``multi_start`` follows Fig. 10: the alternation converges to a
-    stationary point that depends on the initial partition point, so we run
-    it from a small spread of starts and keep the best feasible plan.
+
+def initial_points(fleet: Fleet, init_m, multi_start: bool):
+    """Resolve the planner's initial partition points → (m0, use_multi).
+
+    Shared by ``plan`` and ``batch.plan_grid`` so both resolve starts
+    identically (the grid contract is ``plan_grid(...)[i,j,k] == plan(...)``).
+
+    With ``multi_start`` and no explicit ``init_m``: the Fig. 10 spread as
+    an (S, N) batch. Otherwise a single (N,) start — ``init_m`` broadcast,
+    or full local inference (m = M). The alternation is sensitive to its
+    start (paper Fig. 10 uses interior points): m = 0 pins f at f_min
+    which makes every local prefix look deadline-infeasible in the
+    partitioning step, while full-local allocates a high frequency from
+    which all prefixes are reachable.
     """
-    if policy not in _POLICIES:
-        raise ValueError(f"policy must be one of {_POLICIES}, got {policy!r}")
-    if policy == "optimal":
-        return plan_optimal(fleet, deadline, eps, B)
-
+    n, m1 = fleet.num_devices, fleet.num_points
     if multi_start and init_m is None:
-        m1 = fleet.num_points
-        starts = sorted({1, m1 // 2, (3 * m1) // 4, max(m1 - 2, 1), m1 - 1})
-        plans = [
-            plan(fleet, deadline, eps, B, policy, outer_iters, jnp.int32(s),
-                 pccp_iters, multi_start=False, channel_cv=channel_cv)
-            for s in starts
-        ]
+        starts = default_starts(m1)
+        return jnp.broadcast_to(
+            jnp.asarray(starts, jnp.int32)[:, None], (len(starts), n)), True
+    m0 = (
+        jnp.full((n,), m1 - 1, jnp.int32)
+        if init_m is None
+        else jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))
+    )
+    return m0, False
 
-        def score(p: Plan):
-            # feasible plans first, then lowest energy
-            return (float(jnp.sum(~p.feasible)), float(p.total_energy))
 
-        return min(plans, key=score)
+def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: str,
+                 outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
+    """One Algorithm-2 alternation from initial points ``m0`` — fully traced.
 
+    The outer loop is a ``lax.scan`` carrying the partition decision; each
+    step re-allocates (b, f) at the current m and re-partitions at the new
+    (b, f). No host syncs, so the whole alternation stays one XLA program.
+    """
     n, m1 = fleet.num_devices, fleet.num_points
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
@@ -133,21 +152,7 @@ def plan(
     ub_k = _ub_k(policy)
     sigma = ccp.SIGMA_FNS[sig_model](eps)
 
-    # Default initial point: full local inference (m = M). The alternation
-    # is sensitive to its start (paper Fig. 10 uses interior points): m = 0
-    # pins f at f_min which makes every local prefix look deadline-
-    # infeasible in the partitioning step. Starting from full-local
-    # allocates a high frequency, from which all prefixes are reachable.
-    m = (
-        jnp.full((n,), m1 - 1, jnp.int32)
-        if init_m is None
-        else jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))
-    )
-
-    traces, pccp_trace = [], []
-    feasible = jnp.ones((n,), bool)
-    alloc = None
-    for _ in range(outer_iters):
+    def step(m, _):
         alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
         e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
         if ub_k > 0.0:  # worst-case baseline: inflate times, drop variance
@@ -161,13 +166,16 @@ def plan(
             res = pccp_partition(
                 e_table, t_table, var_table, sigma, deadline, x_init, num_iters=pccp_iters
             )
-            m, feasible = res.m_sel, res.feasible
-            pccp_trace.append(res.iters_to_converge)
+            m_new, feas, pc = res.m_sel, res.feasible, res.iters_to_converge
         else:  # robust_exact / gaussian / worst_case → exact enumeration
-            m, feasible = _exact_partition(e_table, t_table, var_table, sigma, deadline)
-            pccp_trace.append(jnp.ones((n,), jnp.int32))
-        obj = jnp.sum(jnp.take_along_axis(e_table, m[:, None], -1)[:, 0])
-        traces.append(obj)
+            m_new, feas = _exact_partition(e_table, t_table, var_table, sigma, deadline)
+            pc = jnp.ones((n,), jnp.int32)
+        obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
+        return m_new, (obj, pc, feas)
+
+    m = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (n,))
+    m, (traces, pccp_trace, feas_seq) = jax.lax.scan(step, m, None, length=outer_iters)
+    feasible = feas_seq[-1]
 
     alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
     sel = select_point(fleet, m)
@@ -184,10 +192,80 @@ def plan(
         alloc=alloc,
         total_energy=jnp.sum(alloc.energy),
         feasible=feasible & alloc.feasible,
-        objective_trace=jnp.stack(traces),
-        pccp_iters=jnp.stack(pccp_trace),
+        objective_trace=traces,
+        pccp_iters=pccp_trace,
         margins=margins,
     )
+
+
+def _select_best(plans: Plan) -> jnp.ndarray:
+    """Traced multi-start selection: feasible plans first, then lowest
+    energy — the same lexicographic key as the seed's
+    ``min(plans, key=(num_infeasible, energy))``, with first-occurrence
+    tie-breaking matching Python ``min`` over ascending starts."""
+    n_bad = jnp.sum(~plans.feasible, axis=-1)
+    best_bad = jnp.min(n_bad)
+    e_masked = jnp.where(n_bad == best_bad, plans.total_energy, jnp.inf)
+    return jnp.argmin(e_masked)
+
+
+def _multi_start(fleet: Fleet, deadline, eps, B, m0_batch, policy: str,
+                 outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
+    """vmapped multi-start alternation + traced best-plan selection."""
+    plans = jax.vmap(
+        lambda m0: _alternation(fleet, deadline, eps, B, m0, policy,
+                                outer_iters, pccp_iters, channel_cv)
+    )(m0_batch)
+    idx = _select_best(plans)
+    return jax.tree_util.tree_map(lambda x: x[idx], plans)
+
+
+_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv")
+
+#: Jitted entry points. Exposed at module level (not hidden in ``plan``) so
+#: tests can assert cache behaviour via ``_cache_size()``.
+plan_single_jit = partial(jax.jit, static_argnames=_STATICS)(_alternation)
+plan_multi_jit = partial(jax.jit, static_argnames=_STATICS)(_multi_start)
+
+
+def plan(
+    fleet: Fleet,
+    deadline: jnp.ndarray,
+    eps: jnp.ndarray,
+    B: float,
+    policy: str = "robust",
+    outer_iters: int = 6,
+    init_m: Optional[jnp.ndarray] = None,
+    pccp_iters: int = 10,
+    multi_start: bool = True,
+    channel_cv: float = 0.0,
+) -> Plan:
+    """Run Algorithm 2 (or a baseline policy) and return the plan.
+
+    ``multi_start`` follows Fig. 10: the alternation converges to a
+    stationary point that depends on the initial partition point, so we run
+    it from a small spread of starts (vmapped) and keep the best feasible
+    plan. The whole call — including the multi-start sweep — is a single
+    compiled XLA program; scenario parameters (deadline, ε, B) are traced,
+    so only a new fleet *shape* or new static (policy, iteration counts)
+    triggers recompilation.
+    """
+    if policy not in _POLICIES:
+        raise ValueError(f"policy must be one of {_POLICIES}, got {policy!r}")
+    if policy == "optimal":
+        return plan_optimal(fleet, deadline, eps, B)
+    if outer_iters < 1:
+        raise ValueError("outer_iters must be >= 1")
+
+    deadline = jnp.asarray(deadline, jnp.float64)
+    eps = jnp.asarray(eps, jnp.float64)
+    B = jnp.asarray(B, jnp.float64)
+    statics = dict(policy=policy, outer_iters=int(outer_iters),
+                   pccp_iters=int(pccp_iters), channel_cv=float(channel_cv))
+
+    m0, use_multi = initial_points(fleet, init_m, multi_start)
+    entry = plan_multi_jit if use_multi else plan_single_jit
+    return entry(fleet, deadline, eps, B, m0, **statics)
 
 
 def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") -> Plan:
@@ -198,6 +276,8 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
     every (n, m), take the per-device argmin over m, then bisect λ until
     Σ b ≤ B. Complexity O(N·M·log) — equivalent to the paper's exhaustive
     baseline (which is exponential only because it enumerates x jointly).
+    The λ-invariant feasibility bracket per (n, m) is hoisted out of the
+    price bisection (same hoist as ``resource.allocate``).
     """
     n, m1 = fleet.num_devices, fleet.num_points
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
@@ -211,19 +291,30 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
         - sigma[:, None] * jnp.sqrt(jnp.maximum(c.v_loc + c.v_vm, 0.0))
     )  # (N, M+1)
 
-    def per_point(lam, bud, d, w, g, k, fmin, fmax, p, h):
-        b, f, feas = _device_best_b(lam, bud, d, w, g, k, fmin, fmax, p, h, B)
+    inv_points = jax.vmap(
+        lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B),
+        in_axes=(0, 0, 0, 0, None, None, None),
+    )
+    inv_devices = jax.vmap(inv_points, in_axes=(0, 0, 0, 0, 0, 0, 0))
+    b_lo_all, feas0_all = inv_devices(
+        budget_all, c.d_bits, c.w_flops, c.g_eff, plat.f_max, link.p_tx, link.gain
+    )  # (N, M+1) each
+
+    def per_point(lam, bud, d, w, g, k, fmin, fmax, p, h, blo, fe):
+        b, f, feas = _device_best_b_at(lam, bud, d, w, g, k, fmin, fmax, p, h, B, blo, fe)
         e = energy.expected_local_energy(k, w, g, f) + channel.offload_energy(d, b, p, h)
         cost = jnp.where(feas, e + lam * b, jnp.inf)
         return cost, b, f, e, feas
 
-    vm_points = jax.vmap(per_point, in_axes=(None, 0, 0, 0, 0, None, None, None, None, None))
-    vm_devices = jax.vmap(vm_points, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+    vm_points = jax.vmap(
+        per_point, in_axes=(None, 0, 0, 0, 0, None, None, None, None, None, 0, 0))
+    vm_devices = jax.vmap(vm_points, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
 
     def solve_at(lam):
         cost, b, f, e, feas = vm_devices(
             lam, budget_all, c.d_bits, c.w_flops, c.g_eff,
             plat.kappa, plat.f_min, plat.f_max, link.p_tx, link.gain,
+            b_lo_all, feas0_all,
         )
         any_feas = jnp.any(feas, axis=-1)
         m_sel = jnp.where(any_feas, jnp.argmin(cost, -1), jnp.argmax(budget_all, -1))

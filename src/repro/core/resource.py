@@ -86,30 +86,31 @@ def deadline_budget(sel: Selected, deadline, eps, sigma_model="cantelli", ub_k=0
     )
 
 
-def _device_best_b(lam, budget, d, w, g, kappa, f_min, f_max, p_tx, gain, B,
-                   sigma=0.0, v_base=0.0, channel_cv=0.0):
-    """Optimal (cost, b, f) for one device at bandwidth price λ.
+def _budget_eff(b, budget, d, p_tx, gain, sigma, v_base, channel_cv):
+    """Effective ECR budget at bandwidth b (paper footnote 2).
 
-    For fixed b: t_off = d/R(b); the deadline forces
-    f ≥ f_req(b) = w / (g·(budget_eff(b) − t_off)); energy rises with f, so
-    f*(b) = clip(f_req, f_min, f_max). The remaining 1-D problem in b is
-    convex (1/R is convex); we restrict to the feasible interval
-    [b_feas, B] computed by bisection on the concave rate R.
-
-    With channel uncertainty (paper footnote 2; ``channel_cv`` > 0) the
-    offload time is random too: Var[T] = v_base + v_off(b) and the ECR
-    budget shrinks by σ·(√(v_base+v_off(b)) − √v_base). The golden search
-    handles the (quasi-convex) extra term.
+    With channel uncertainty (``channel_cv`` > 0) the offload time is
+    random too: Var[T] = v_base + v_off(b) and the budget shrinks by
+    σ·(√(v_base+v_off(b)) − √v_base). ``channel_cv`` is a static Python
+    float, so the branch resolves at trace time.
     """
+    if channel_cv <= 0.0:
+        return budget
+    std_off = channel.offload_time_std(d, b, p_tx, gain, channel_cv)
+    return budget - sigma * (
+        jnp.sqrt(jnp.maximum(v_base + std_off**2, 0.0))
+        - jnp.sqrt(jnp.maximum(v_base, 0.0))
+    )
 
-    def _budget_eff(b):
-        if channel_cv <= 0.0:
-            return budget
-        std_off = channel.offload_time_std(d, b, p_tx, gain, channel_cv)
-        return budget - sigma * (
-            jnp.sqrt(jnp.maximum(v_base + std_off**2, 0.0))
-            - jnp.sqrt(jnp.maximum(v_base, 0.0))
-        )
+
+def _device_invariants(budget, d, w, g, f_max, p_tx, gain, B):
+    """λ-invariant per-device quantities of the dual inner problem.
+
+    The feasible-bandwidth bracket and the feasibility flag depend only on
+    (budget, chain, link) — not on the bandwidth price λ — so they are
+    computed once per ``allocate`` call and reused across all ~60 dual
+    bisection steps (the λ search then only re-runs the golden section).
+    """
     # Smallest feasible b: R(b) ≥ d / (budget − w/(g·f_max)).
     slack_at_fmax = budget - w / (jnp.maximum(g, 1e-30) * f_max)
     need_rate = d / jnp.maximum(slack_at_fmax, 1e-12)
@@ -117,10 +118,26 @@ def _device_best_b(lam, budget, d, w, g, kappa, f_min, f_max, p_tx, gain, B,
     b_feas = bisect(rate_fn, _TINY_B, B)
     feasible = (slack_at_fmax > 0.0) & (channel.uplink_rate(B, p_tx, gain) >= need_rate)
     b_lo = jnp.where(feasible, jnp.minimum(b_feas * (1.0 + 1e-9) + _TINY_B, B), B * 0.5)
+    return b_lo, feasible
+
+
+def _device_best_b_at(lam, budget, d, w, g, kappa, f_min, f_max, p_tx, gain, B,
+                      b_lo, feas0, sigma=0.0, v_base=0.0, channel_cv=0.0):
+    """Optimal (b, f, feasible) for one device at bandwidth price λ, given
+    the precomputed λ-invariants from ``_device_invariants``.
+
+    For fixed b: t_off = d/R(b); the deadline forces
+    f ≥ f_req(b) = w / (g·(budget_eff(b) − t_off)); energy rises with f, so
+    f*(b) = clip(f_req, f_min, f_max). The remaining 1-D problem in b is
+    convex (1/R is convex); we restrict to the feasible interval
+    [b_lo, B]. The golden search handles the (quasi-convex) extra term
+    that channel uncertainty adds to budget_eff.
+    """
+    beff = lambda b: _budget_eff(b, budget, d, p_tx, gain, sigma, v_base, channel_cv)
 
     def cost_fn(b):
         t_off = channel.offload_time(d, b, p_tx, gain)
-        local_slack = jnp.maximum(_budget_eff(b) - t_off, 1e-12)
+        local_slack = jnp.maximum(beff(b) - t_off, 1e-12)
         f_req = w / (jnp.maximum(g, 1e-30) * local_slack)
         f = jnp.clip(f_req, f_min, f_max)
         e = energy.expected_local_energy(kappa, w, g, f) + channel.offload_energy(
@@ -130,11 +147,11 @@ def _device_best_b(lam, budget, d, w, g, kappa, f_min, f_max, p_tx, gain, B,
 
     b_star = golden_section(cost_fn, b_lo, B)
     t_off = channel.offload_time(d, b_star, p_tx, gain)
-    local_slack = jnp.maximum(_budget_eff(b_star) - t_off, 1e-12)
+    local_slack = jnp.maximum(beff(b_star) - t_off, 1e-12)
     f_req = w / (jnp.maximum(g, 1e-30) * local_slack)
     f_star = jnp.clip(f_req, f_min, f_max)
     t_loc = energy.mean_local_time(w, g, f_star)
-    feasible = feasible & (t_loc + t_off <= _budget_eff(b_star) + 1e-9)
+    feasible = feas0 & (t_loc + t_off <= beff(b_star) + 1e-9)
     return b_star, f_star, feasible
 
 
@@ -161,12 +178,18 @@ def allocate(
     v_base = jnp.maximum(sel.v_loc + sel.v_vm, 0.0)
     plat, link = fleet.platform, fleet.link
 
+    # λ-invariant work (b_feas bisection, feasibility flags) — once, not
+    # once per dual-bisection step.
+    b_lo, feas0 = jax.vmap(
+        lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B)
+    )(budget, sel.d_bits, sel.w_flops, sel.g_eff, plat.f_max, link.p_tx, link.gain)
+
     per_device = jax.vmap(
-        lambda lam, bud, d, w, g, k, fmin, fmax, p, h, sg, vb: _device_best_b(
-            lam, bud, d, w, g, k, fmin, fmax, p, h, B,
+        lambda lam, bud, d, w, g, k, fmin, fmax, p, h, blo, fe, sg, vb: _device_best_b_at(
+            lam, bud, d, w, g, k, fmin, fmax, p, h, B, blo, fe,
             sigma=sg, v_base=vb, channel_cv=channel_cv,
         ),
-        in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
+        in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
     )
 
     def solve_at(lam):
@@ -181,6 +204,8 @@ def allocate(
             plat.f_max,
             link.p_tx,
             link.gain,
+            b_lo,
+            feas0,
             sigma,
             v_base,
         )
@@ -199,10 +224,23 @@ def allocate(
     # (bisection leaves O(1e-14 B) slack; harmless but keep Σb ≤ B exact).
     total = jnp.sum(b)
     b = jnp.where(need_price & (total > B), b * (B / total), b)
+    # The rescale shrinks b, which lengthens t_off — recheck the deadline
+    # at the final (b, f) so ``feasible`` reflects what is returned.
+    feas = feas & _deadline_ok(
+        b, f, sel, budget, link.p_tx, link.gain, sigma, v_base, channel_cv)
 
     e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
     e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
     return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas, lam=lam)
+
+
+def _deadline_ok(b, f, sel: Selected, budget, p_tx, gain, sigma, v_base,
+                 channel_cv=0.0, tol=1e-9):
+    """ECR deadline check t_loc(f) + t_off(b) ≤ budget_eff(b) at given (b, f)."""
+    t_off = channel.offload_time(sel.d_bits, b, p_tx, gain)
+    t_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, f)
+    beff = _budget_eff(b, budget, sel.d_bits, p_tx, gain, sigma, v_base, channel_cv)
+    return t_loc + t_off <= beff + tol
 
 
 def allocate_ipm(

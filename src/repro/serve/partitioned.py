@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import plan as core_plan
+from repro.core import plan_at, plan_grid
 from repro.core import violation_report
 from repro.core.blocks import BlockChain, Fleet, Link, Platform
 from repro.core.channel import pathloss_gain
@@ -80,9 +81,32 @@ class TwoTierDeployment:
         )
 
     def plan(self, policy: str = "robust_exact", **kw):
+        """Plan the deployment's default scenario (a 1×1×1 grid)."""
+        if policy == "optimal":  # exact baseline — not grid-batchable
+            fleet = self.fleet()
+            return core_plan(fleet, self.deadline_s, self.eps,
+                             self.bandwidth_hz, policy=policy, **kw), fleet
+        plans, fleet = self.plan_grid(policy=policy, **kw)
+        return plan_at(plans, 0, 0, 0), fleet
+
+    def plan_grid(self, deadlines=None, epss=None, Bs=None,
+                  policy: str = "robust_exact", **kw):
+        """Plan a deadline×ε×B scenario grid in one compiled program.
+
+        Axes default to the deployment's configured scalars; pass any
+        combination of sweeps (e.g. SLO tiers as ``deadlines``, per-tenant
+        risk levels as ``epss``) — the returned ``Plan`` has leading axes
+        (len(deadlines), len(epss), len(Bs)).
+        """
         fleet = self.fleet()
-        return core_plan(fleet, self.deadline_s, self.eps, self.bandwidth_hz,
-                         policy=policy, **kw), fleet
+        plans = plan_grid(
+            fleet,
+            self.deadline_s if deadlines is None else deadlines,
+            self.eps if epss is None else epss,
+            self.bandwidth_hz if Bs is None else Bs,
+            policy=policy, **kw,
+        )
+        return plans, fleet
 
     def validate(self, p, fleet, key=None, dist: str = "gamma") -> Dict[str, float]:
         key = jax.random.PRNGKey(self.seed + 1) if key is None else key

@@ -4,6 +4,10 @@ import pytest
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
 # (the 512-device override lives only in launch/dryrun.py).
 
+# Property-based tests import hypothesis through tests/_hyp.py, which
+# degrades to per-test skips when hypothesis is absent (bare jax-only
+# env) — plain tests in the same modules still collect and run.
+
 
 @pytest.fixture
 def rng():

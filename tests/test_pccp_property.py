@@ -3,8 +3,7 @@ synthetic instances (hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.ccp import sigma_cantelli
 from repro.core.pccp import pccp_partition

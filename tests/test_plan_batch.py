@@ -1,0 +1,78 @@
+"""Batched scenario-grid planning + fused-planner cache behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet
+from repro.core import plan, plan_at, plan_grid
+from repro.core import planner
+from repro.core.planner_ref import plan_reference
+
+DEADLINES = (0.18, 0.20, 0.22)
+EPSS = (0.02, 0.04, 0.06)
+B = 10e6
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 6)
+
+
+def test_plan_grid_matches_per_scenario_plan(fleet):
+    """(a) 3×3 deadline×ε grid == per-scenario plan() calls."""
+    grid = plan_grid(fleet, DEADLINES, EPSS, B, policy="robust_exact", outer_iters=3)
+    assert grid.m_sel.shape == (3, 3, 1, fleet.num_devices)
+    for i, d in enumerate(DEADLINES):
+        for j, eps in enumerate(EPSS):
+            p = plan(fleet, d, eps, B, policy="robust_exact", outer_iters=3)
+            cell = plan_at(grid, i, j, 0)
+            np.testing.assert_array_equal(np.asarray(cell.m_sel), np.asarray(p.m_sel))
+            np.testing.assert_allclose(
+                float(cell.total_energy), float(p.total_energy), rtol=1e-12)
+            np.testing.assert_array_equal(
+                np.asarray(cell.feasible), np.asarray(p.feasible))
+
+
+def test_plan_grid_bandwidth_axis(fleet):
+    grid = plan_grid(fleet, 0.2, 0.04, (8e6, 10e6), policy="robust_exact",
+                     outer_iters=3)
+    assert grid.total_energy.shape == (1, 1, 2)
+    for k, b in enumerate((8e6, 10e6)):
+        p = plan(fleet, 0.2, 0.04, b, policy="robust_exact", outer_iters=3)
+        np.testing.assert_allclose(
+            float(grid.total_energy[0, 0, k]), float(p.total_energy), rtol=1e-12)
+
+
+def test_multi_start_vmap_matches_sequential_min(fleet):
+    """(b) the traced feasibility-then-energy argmin picks the same plan as
+    the seed's sequential ``min(plans, key=score)``."""
+    for d in (0.17, 0.2, 0.24):
+        p = plan(fleet, d, 0.04, B, policy="robust_exact", outer_iters=3)
+        r = plan_reference(fleet, d, 0.04, B, policy="robust_exact", outer_iters=3)
+        np.testing.assert_array_equal(np.asarray(p.m_sel), np.asarray(r.m_sel))
+        assert float(jnp.abs(p.total_energy - r.total_energy)) == 0.0
+
+
+def test_same_shape_fleet_hits_jit_cache(fleet):
+    """(c) a second plan() on a same-shaped fleet must not retrace."""
+    other = alexnet_fleet(jax.random.PRNGKey(99), 6)
+    kw = dict(policy="robust_exact", outer_iters=3)
+    plan(fleet, 0.2, 0.04, B, **kw)
+    size = planner.plan_multi_jit._cache_size()
+    plan(other, 0.21, 0.05, 12e6, **kw)  # new fleet, new scenario scalars
+    assert planner.plan_multi_jit._cache_size() == size
+
+    plan(fleet, 0.2, 0.04, B, multi_start=False, **kw)
+    size = planner.plan_single_jit._cache_size()
+    plan(other, 0.21, 0.05, 12e6, multi_start=False, **kw)
+    assert planner.plan_single_jit._cache_size() == size
+
+
+def test_plan_grid_scenario_scalars_hit_jit_cache(fleet):
+    from repro.core import batch
+    kw = dict(policy="robust_exact", outer_iters=3)
+    plan_grid(fleet, DEADLINES, EPSS, B, **kw)
+    size = batch._grid_impl._cache_size()
+    plan_grid(fleet, (0.19, 0.21, 0.23), (0.03, 0.05, 0.07), 12e6, **kw)
+    assert batch._grid_impl._cache_size() == size

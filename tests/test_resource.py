@@ -61,3 +61,42 @@ def test_infeasible_point_flagged():
     m = jnp.full((4,), 9, jnp.int32)  # full local
     a = allocate(fleet, m, 0.001, 0.02, 30e6)  # 1 ms deadline: impossible
     assert not bool(jnp.any(a.feasible))
+
+
+def test_feasible_flag_consistent_with_returned_bandwidth(fleet):
+    """Regression: the final Σb ≤ B rescale shrinks b (lengthening t_off);
+    ``feasible`` must be rechecked against the *returned* (b, f), not the
+    pre-rescale solution. Tight B makes the price active so the rescale
+    actually fires."""
+    from repro.core.ccp import SIGMA_FNS
+    m = jnp.full((6,), 7, jnp.int32)
+    for B in (2e6, 5e6, 10e6):
+        a = allocate(fleet, m, 0.2, 0.02, B)
+        sel = select_point(fleet, m)
+        t = (
+            energy.mean_local_time(sel.w_flops, sel.g_eff, a.f)
+            + channel.offload_time(sel.d_bits, a.b, fleet.link.p_tx, fleet.link.gain)
+        )
+        budget = deadline_budget(sel, jnp.full((6,), 0.2), jnp.full((6,), 0.02))
+        ok = np.asarray(t <= budget + 1e-9)
+        assert np.array_equal(np.asarray(a.feasible), np.asarray(a.feasible) & ok)
+
+
+def test_deadline_recheck_flags_shrunken_bandwidth(fleet):
+    """Unit check of the recheck predicate: halving an exactly-binding b
+    must flip the deadline check to False."""
+    from repro.core.resource import _deadline_ok
+    m = jnp.full((6,), 7, jnp.int32)
+    a = allocate(fleet, m, 0.2, 0.02, 10e6)
+    sel = select_point(fleet, m)
+    budget = deadline_budget(sel, jnp.full((6,), 0.2), jnp.full((6,), 0.02))
+    sigma = jnp.zeros((6,))
+    v_base = jnp.zeros((6,))
+    ok_full = _deadline_ok(a.b, a.f, sel, budget, fleet.link.p_tx,
+                           fleet.link.gain, sigma, v_base)
+    assert bool(jnp.all(ok_full == a.feasible)) or bool(jnp.all(ok_full))
+    ok_half = _deadline_ok(0.5 * a.b, a.f, sel, budget, fleet.link.p_tx,
+                           fleet.link.gain, sigma, v_base)
+    # the allocator drives (b, f) onto the deadline, so halving b must
+    # violate it wherever the constraint was active
+    assert not bool(jnp.all(ok_half))

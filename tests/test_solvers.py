@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.solvers import BarrierSpec, barrier_solve, bisect, golden_section
 from repro.solvers.nls import fit_inverse_frequency, levenberg_marquardt
