@@ -3,16 +3,22 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench dev-install
+.PHONY: test lint bench-smoke bench dev-install
 
 # Tier-1 verification (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
-# Quick perf smoke: planner runtime + PCCP convergence only.
-# bench_runtime writes the BENCH_planner.json artifact.
+# Static checks (config in pyproject.toml). CI installs ruff; locally:
+#   pip install ruff
+lint:
+	$(PY) -m ruff check src tests benchmarks examples
+
+# Quick perf smoke: planner runtime + PCCP convergence + scenario
+# batching. bench_runtime and bench_plan_grid write their sections of
+# the BENCH_planner.json artifact (ratio metrics).
 bench-smoke:
-	$(PY) -m benchmarks.run --only runtime,convergence
+	$(PY) -m benchmarks.run --only runtime,convergence,plan_grid
 
 # Full paper-figure benchmark sweep
 bench:

@@ -8,15 +8,16 @@ import jax
 
 from benchmarks.common import Row, timed
 from repro.configs.paper_tables import alexnet_fleet, mixed_fleet
-from repro.core import plan, violation_report
+from repro.core import Planner, PlannerConfig, Scenario, violation_report
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
     fleet = alexnet_fleet(jax.random.PRNGKey(0), 12)
     for cv in (0.0, 0.2, 0.4):
-        p, us = timed(lambda: plan(fleet, 0.2, 0.04, 10e6, policy="robust_exact",
-                                   outer_iters=3, channel_cv=cv))
+        planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                        channel_cv=cv))
+        p, us = timed(lambda: planner.plan(fleet, Scenario(0.2, 0.04, 10e6)))
         vr = violation_report(jax.random.PRNGKey(9), fleet, p.m_sel, p.alloc, 0.2,
                               num_samples=20000, var_scale=1.0,
                               channel_cv=max(cv, 0.4))  # stress at cv=0.4
@@ -25,8 +26,8 @@ def run() -> list[Row]:
                      f"viol_at_cv0.4={float(vr.rate.max()):.4f}"))
 
     fleet = mixed_fleet(jax.random.PRNGKey(1), 12)
-    p, us = timed(lambda: plan(fleet, 0.2, 0.04, 30e6, policy="robust_exact",
-                               outer_iters=3))
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    p, us = timed(lambda: planner.plan(fleet, Scenario(0.2, 0.04, 30e6)))
     vr = violation_report(jax.random.PRNGKey(2), fleet, p.m_sel, p.alloc, 0.2,
                           var_scale=1.0)
     rows.append(("hetero_fleet_mixed", us,

@@ -7,22 +7,25 @@ import jax.numpy as jnp
 
 from benchmarks.common import Row, timed
 from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
-from repro.core import plan
+from repro.core import Planner, PlannerConfig, Scenario
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
     # Fig. 9: average PCCP iterations vs number of devices
+    planner = Planner(PlannerConfig(policy="robust", outer_iters=2,
+                                    pccp_iters=8, multi_start=False))
     for name, fleet_fn, D, B in (("alexnet", alexnet_fleet, 0.22, 10e6),
                                  ("resnet152", resnet152_fleet, 0.16, 30e6)):
         for n in (6, 12, 18, 30):
             fleet = fleet_fn(jax.random.PRNGKey(n), n)
-            p, us = timed(lambda: plan(fleet, D, 0.04, B, policy="robust",
-                                       outer_iters=2, pccp_iters=8, multi_start=False))
+            p, us = timed(lambda: planner.plan(fleet, Scenario(D, 0.04, B)))
             iters = float(jnp.mean(p.pccp_iters[-1]))
             rows.append((f"fig9_pccp_iters_{name}_N{n}", us, f"avg_iters={iters:.2f}"))
 
     # Fig. 10: Algorithm-2 objective trajectories from different inits
+    # (init_m resolves to a traced start array, so the per-init configs
+    # all share one compiled program)
     for name, fleet_fn, D, B, inits in (
         ("alexnet", alexnet_fleet, 0.22, 10e6, (3, 7, 8)),
         ("resnet152", resnet152_fleet, 0.16, 30e6, (1, 8, 9)),
@@ -30,8 +33,9 @@ def run() -> list[Row]:
         fleet = fleet_fn(jax.random.PRNGKey(0), 12)
         finals = []
         for init in inits:
-            p, us = timed(lambda: plan(fleet, D, 0.04, B, policy="robust_exact",
-                                       outer_iters=5, init_m=init, multi_start=False))
+            pl = Planner(PlannerConfig(policy="robust_exact", outer_iters=5,
+                                       init_m=init, multi_start=False))
+            p, us = timed(lambda: pl.plan(fleet, Scenario(D, 0.04, B)))
             tr = [f"{float(v):.4f}" for v in p.objective_trace]
             finals.append(float(p.objective_trace[-1]))
             rows.append((f"fig10_traj_{name}_init{init}", us, "traj=" + "|".join(tr)))

@@ -1,6 +1,8 @@
 """Fig. 12 — total energy vs number of devices; PCCP vs optimal policy.
 
 Paper settings: AlexNet D=200 ms, B=5 MHz; ResNet152 D=150 ms, B=15 MHz.
+Both policies dispatch through the same registry/Planner entry point —
+``"optimal"`` is an ordinary policy with a ``solve`` override.
 """
 from __future__ import annotations
 
@@ -8,7 +10,10 @@ import jax
 
 from benchmarks.common import Row, timed
 from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
-from repro.core import plan, plan_optimal
+from repro.core import Planner, PlannerConfig, Scenario
+
+ROBUST = Planner(PlannerConfig(policy="robust", outer_iters=3, pccp_iters=6))
+OPTIMAL = Planner(PlannerConfig(policy="optimal"))
 
 
 def run() -> list[Row]:
@@ -17,9 +22,9 @@ def run() -> list[Row]:
                                  ("resnet152", resnet152_fleet, 0.150, 15e6)):
         for n in (4, 8, 12):
             fleet = fleet_fn(jax.random.PRNGKey(1), n)
-            p, us = timed(lambda: plan(fleet, D, 0.04, B, policy="robust",
-                                       outer_iters=3, pccp_iters=6))
-            po, _ = timed(lambda: plan_optimal(fleet, D, 0.04, B))
+            scenario = Scenario(D, 0.04, B)
+            p, us = timed(lambda: ROBUST.plan(fleet, scenario))
+            po, _ = timed(lambda: OPTIMAL.plan(fleet, scenario))
             gap = (float(p.total_energy) - float(po.total_energy)) / max(
                 float(po.total_energy), 1e-12)
             rows.append((f"fig12_energy_{name}_N{n}", us,

@@ -1,41 +1,87 @@
-"""Batched scenario-grid planning vs sequential seed planning.
+"""Zipped scenario batching (``Planner.plan_many``) vs sequential planning.
 
-The ROADMAP north-star workload is multi-scenario traffic: deadline/ε/B
-sweeps (Fig. 13/14) and per-request planning in the two-tier engine. This
-bench pits a 3×3 deadline×ε ``plan_grid`` (9 scenarios, one compiled
-program) against sequential seed ``plan()`` calls — the seed Python loop
-with the seed's inner barrier schedule, via ``plan_reference`` — on the
-paper's robust (PCCP) policy. The acceptance bar is the 9-scenario grid
-beating just 3 sequential seed calls."""
+The ROADMAP north-star workload is multi-scenario traffic: SLO tiers,
+per-tenant risk levels, bandwidth what-ifs, heterogeneous per-device
+deadlines. ``plan_many`` vmaps K *arbitrary* zipped scenarios over ONE
+compiled program; this bench pits a 9-scenario zipped batch against
+
+  * 9 sequential warmed ``Planner.plan`` calls (same compiled solver,
+    9 dispatches) — recorded as ``batched_vs_sequential_ratio`` (+ a
+    ``meets_2x`` flag) in the artifact. The ≥2× target is dispatch
+    amortization and needs a dispatch-bound host; on this compute-bound
+    2-core CPU the honest ratio is ~1× (DESIGN.md §api), and
+  * 3 sequential *seed-loop* calls (``plan_reference`` with the seed's
+    inner barrier schedule) — continuity with the PR-1 trajectory.
+
+Ratios — not raw wall-clock — go into the ``plan_grid`` section of
+``BENCH_planner.json`` (memory: planner perf is tracked as ratios).
+"""
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import Row, timed, timed_compile
+from benchmarks.common import Row, timed, update_artifact
 from repro.configs.paper_tables import alexnet_fleet
-from repro.core import plan_grid
+from repro.core import Planner, PlannerConfig, Scenario
 from repro.core.pccp import SEED_SCHEDULE
 from repro.core.planner_ref import plan_reference
 
 DEADLINES = (0.18, 0.20, 0.22)
 EPSS = (0.02, 0.04, 0.06)
-KW = dict(policy="robust", outer_iters=2, pccp_iters=6)
+B = 10e6
+KW = dict(outer_iters=2, pccp_iters=6)
+#: The zipped batch: all 9 (deadline, ε) combinations as K=9 scenarios.
+SCENARIOS = [Scenario(d, e, B) for d in DEADLINES for e in EPSS]
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
     fleet = alexnet_fleet(jax.random.PRNGKey(0), 12)
+    k = len(SCENARIOS)
+    section = {"k_scenarios": k, "config": KW, "policies": {}}
 
-    t = timed_compile(lambda: plan_grid(fleet, DEADLINES, EPSS, 10e6, **KW),
-                      repeats=2)
-    _, seq3_us = timed(
-        lambda: [plan_reference(fleet, d, 0.04, 10e6,
+    for policy in ("robust_exact", "robust"):
+        planner = Planner(PlannerConfig(policy=policy, **KW))
+        _, many_us = timed(lambda: planner.plan_many(fleet, SCENARIOS))
+        _, seq_us = timed(
+            lambda: [planner.plan(fleet, sc) for sc in SCENARIOS])
+        ratio = seq_us / many_us
+        section["policies"][policy] = {
+            "batched_us": many_us, "sequential_us": seq_us,
+            "batched_vs_sequential_ratio": ratio,
+        }
+        rows.append((
+            f"plan_many_{k}zip_{policy}_alexnet", many_us,
+            f"per_scenario_us={many_us / k:.0f};seq{k}_us={seq_us:.0f};"
+            f"batched_vs_sequential={ratio:.2f}x"))
+
+    # Target: the zipped batch beats sequential dispatch ≥ 2× steady-state.
+    # That win is dispatch amortization, so it materializes on
+    # accelerator-class hosts; on this 2-core CPU the solve is
+    # compute-bound (see DESIGN.md §api — transcendental-heavy
+    # golden-section/bisection chains dominate, and vmap width adds
+    # proportional compute), so the honest ratio here is ~1×. Recorded,
+    # not asserted: faking the baseline would poison the trajectory.
+    headline = section["policies"]["robust_exact"]["batched_vs_sequential_ratio"]
+    section["batched_vs_sequential_ratio"] = headline
+    section["meets_2x"] = headline >= 2.0
+    if headline < 2.0:
+        rows.append((f"plan_many_{k}zip_ratio_below_target", 0.0,
+                     f"batched_vs_sequential={headline:.2f}x;target=2x;"
+                     "compute_bound_cpu=see DESIGN.md §api"))
+
+    # PR-1 continuity: the 3×3 batch vs 3 sequential seed-loop plans
+    planner = Planner(PlannerConfig(policy="robust", **KW))
+    _, many_us = timed(lambda: planner.plan_many(fleet, SCENARIOS), repeats=1)
+    _, seed3_us = timed(
+        lambda: [plan_reference(fleet, d, 0.04, B, policy="robust",
                                 pccp_schedule=SEED_SCHEDULE, **KW)
                  for d in DEADLINES],
         repeats=1)
-    n_cells = len(DEADLINES) * len(EPSS)
-    rows.append((
-        f"plan_grid_{len(DEADLINES)}x{len(EPSS)}_alexnet", t.us,
-        f"per_scenario_us={t.us / n_cells:.0f};compile_us={t.compile_us:.0f};"
-        f"seed_3seq_us={seq3_us:.0f};grid9_vs_seed3seq={seq3_us / t.us:.2f}x"))
+    section["seed_3seq_vs_batch9_ratio"] = seed3_us / many_us
+    rows.append((f"plan_many_{k}zip_vs_seed3seq_alexnet", many_us,
+                 f"seed_3seq_us={seed3_us:.0f};"
+                 f"grid9_vs_seed3seq={seed3_us / many_us:.2f}x"))
+
+    update_artifact("plan_grid", section)
     return rows

@@ -4,9 +4,9 @@ robust policy vs worst-case baseline (+ Gaussian-σ beyond-paper variant).
 Paper settings: N=12; AlexNet B=10 MHz (D=180 ms for the ε sweep);
 ResNet152 B=30 MHz (D=120 ms).
 
-Each sweep is ONE ``plan_grid`` call (the fused planner vmapped over the
-scenario axis), so the reported µs/call is the whole figure's sweep, not
-a single scenario.
+Each sweep is ONE ``Planner.grid`` call (cartesian sugar over the zipped
+``plan_many`` batch), so the reported µs/call is the whole figure's
+sweep, not a single scenario.
 """
 from __future__ import annotations
 
@@ -14,9 +14,12 @@ import jax
 
 from benchmarks.common import Row, timed
 from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
-from repro.core import plan_grid
+from repro.core import Planner, PlannerConfig
 
 EPSS = (0.02, 0.04, 0.06, 0.08)
+
+PLANNERS = {pol: Planner(PlannerConfig(policy=pol, outer_iters=3))
+            for pol in ("robust_exact", "gaussian", "worst_case")}
 
 
 def run() -> list[Row]:
@@ -25,14 +28,15 @@ def run() -> list[Row]:
             ("resnet152", resnet152_fleet, 0.120, 30e6, (0.12, 0.14, 0.16, 0.18)))
     for name, fleet_fn, D, B, deadlines in scen:
         fleet = fleet_fn(jax.random.PRNGKey(0), 12)
-        grid = lambda pol: plan_grid(fleet, D, EPSS, B, policy=pol, outer_iters=3)
         # worst_case uses σ_hard ≡ 0, so ε never enters — one plan suffices.
         # Untimed calls (discarded `_`) skip the warmup: no point solving twice.
-        pw, _ = timed(lambda: plan_grid(fleet, D, EPSS[0], B, policy="worst_case",
-                                        outer_iters=3), repeats=1, warmup=0)
+        pw, _ = timed(lambda: PLANNERS["worst_case"].grid(fleet, D, EPSS[0], B),
+                      repeats=1, warmup=0)
         ew = float(pw.total_energy[0, 0, 0])
-        pr, us = timed(lambda: grid("robust_exact"), repeats=1)
-        pg, _ = timed(lambda: grid("gaussian"), repeats=1, warmup=0)
+        pr, us = timed(lambda: PLANNERS["robust_exact"].grid(fleet, D, EPSS, B),
+                       repeats=1)
+        pg, _ = timed(lambda: PLANNERS["gaussian"].grid(fleet, D, EPSS, B),
+                      repeats=1, warmup=0)
         for j, eps in enumerate(EPSS):
             e = float(pr.total_energy[0, j, 0])
             save = 100.0 * (ew - e) / max(ew, 1e-12)
@@ -41,10 +45,12 @@ def run() -> list[Row]:
                          f"gaussian_J={float(pg.total_energy[0, j, 0]):.4f}"))
 
         eps_d = 0.02 if name == "alexnet" else 0.04
-        grid_d = lambda pol, eps: plan_grid(
-            fleet, deadlines, eps, B, policy=pol, outer_iters=3)
-        pd, us = timed(lambda: grid_d("robust_exact", eps_d), repeats=1)
-        pwd, _ = timed(lambda: grid_d("worst_case", 0.02), repeats=1, warmup=0)
+        pd, us = timed(
+            lambda: PLANNERS["robust_exact"].grid(fleet, deadlines, eps_d, B),
+            repeats=1)
+        pwd, _ = timed(
+            lambda: PLANNERS["worst_case"].grid(fleet, deadlines, 0.02, B),
+            repeats=1, warmup=0)
         for i, D2 in enumerate(deadlines):
             rows.append((f"fig13b_energy_{name}_D{int(D2*1e3)}ms", us / len(deadlines),
                          f"robust_J={float(pd.total_energy[i, 0, 0]):.4f};"

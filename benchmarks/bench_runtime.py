@@ -11,37 +11,33 @@ dispatch. We report:
     (``planner_ref.plan_reference``), which shares every numerical
     building block and differs only in the Python-loop structure.
 
-Emits a ``BENCH_planner.json`` artifact so the perf trajectory is
-tracked across PRs.
+Writes the ``planner_runtime`` section of ``BENCH_planner.json`` so the
+perf trajectory is tracked across PRs as ratios (memory: wall-clock is
+machine-dependent; the seed-speedup ratio is not).
 """
 from __future__ import annotations
 
-import json
-import os
-
 import jax
 
-from benchmarks.common import Row, timed, timed_compile
+from benchmarks.common import Row, timed, timed_compile, update_artifact
 from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
-from repro.core import plan
+from repro.core import Planner, PlannerConfig, Scenario
 from repro.core.pccp import SEED_SCHEDULE
 from repro.core.planner_ref import plan_reference
 
-#: Where the machine-readable artifact lands (repo root by default).
-ARTIFACT = os.environ.get("BENCH_PLANNER_JSON", "BENCH_planner.json")
-
-_KW = dict(policy="robust", outer_iters=2, pccp_iters=6, multi_start=False)
+_CFG = dict(policy="robust", outer_iters=2, pccp_iters=6, multi_start=False)
+PLANNER = Planner(PlannerConfig(**_CFG))
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
-    artifact = {"bench": "planner_runtime", "config": _KW, "rows": []}
+    artifact = {"config": _CFG, "rows": []}
     for name, fleet_fn, D, B in (("alexnet", alexnet_fleet, 0.22, 10e6),
                                  ("resnet152", resnet152_fleet, 0.16, 30e6)):
         for n in (4, 8, 16, 24, 50):
             fleet = fleet_fn(jax.random.PRNGKey(n), n)
-            solve = lambda: plan(fleet, D, 0.04, B, **_KW)
-            t = timed_compile(solve)
+            scenario = Scenario(D, 0.04, B)
+            t = timed_compile(lambda: PLANNER.plan(fleet, scenario))
             derived = (f"compile_us={t.compile_us:.0f};"
                        f"energy={float(t.out.total_energy):.4f}")
             entry = {"model": name, "n_devices": n, "us": t.us,
@@ -50,12 +46,12 @@ def run() -> list[Row]:
                 # Python outer loop AND its 168-Newton-step inner barrier
                 _, ref_us = timed(
                     lambda: plan_reference(fleet, D, 0.04, B,
-                                           pccp_schedule=SEED_SCHEDULE, **_KW),
+                                           pccp_schedule=SEED_SCHEDULE, **_CFG),
                     repeats=2)
-                derived += f";seed_us={ref_us:.0f};speedup={ref_us / t.us:.2f}x"
                 entry["seed_us"] = ref_us
+                entry["seed_speedup_ratio"] = ref_us / t.us
+                derived += f";seed_us={ref_us:.0f};speedup={ref_us / t.us:.2f}x"
             artifact["rows"].append(entry)
             rows.append((f"fig11_runtime_{name}_N{n}", t.us, derived))
-    with open(ARTIFACT, "w") as f:
-        json.dump(artifact, f, indent=1)
+    update_artifact("planner_runtime", artifact)
     return rows

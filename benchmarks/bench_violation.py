@@ -2,17 +2,19 @@
 level, across deadlines and time distributions. The paper's claim: the
 violation probability always stays below the risk level ε.
 
-All deadline×ε plans per scenario come from ONE ``plan_grid`` call; the
-Monte-Carlo validation then runs per grid cell."""
+All deadline×ε plans per scenario come from ONE ``Planner.grid`` call;
+the Monte-Carlo validation then runs per grid cell."""
 from __future__ import annotations
 
 import jax
 
 from benchmarks.common import Row, timed
 from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
-from repro.core import plan_at, plan_grid, violation_report
+from repro.core import Planner, PlannerConfig, plan_at, violation_report
 
 EPSS = (0.02, 0.04, 0.06, 0.08)
+
+PLANNER = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
 
 
 def run() -> list[Row]:
@@ -23,9 +25,7 @@ def run() -> list[Row]:
     for name, fleet_fn, deadlines, B in scen:
         fleet = fleet_fn(jax.random.PRNGKey(0), 12)
         grid, grid_us = timed(
-            lambda: plan_grid(fleet, deadlines, EPSS, B,
-                              policy="robust_exact", outer_iters=3),
-            repeats=1)
+            lambda: PLANNER.grid(fleet, deadlines, EPSS, B), repeats=1)
         warmed = set()
         for i, D in enumerate(deadlines):
             for j, eps in enumerate(EPSS):

@@ -9,12 +9,36 @@ itself is part of the story (e.g. Fig. 11 cold vs warm).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List, NamedTuple, Tuple
 
 import jax
 
 Row = Tuple[str, float, str]
+
+#: Machine-readable planner-perf artifact (repo root by default). Multiple
+#: benches contribute sections via ``update_artifact`` so the perf
+#: trajectory (ratio metrics, not raw wall-clock) accumulates in one file.
+PLANNER_ARTIFACT = os.environ.get("BENCH_PLANNER_JSON", "BENCH_planner.json")
+
+
+def update_artifact(section: str, payload: dict, path: str = None) -> None:
+    """Read-modify-write ``payload`` under ``section`` in the JSON artifact."""
+    path = PLANNER_ARTIFACT if path is None else path
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    if not isinstance(data, dict) or "rows" in data:  # pre-PR2 flat layout
+        data = {}
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
 
 
 def _sync(out):

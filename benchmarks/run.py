@@ -11,7 +11,8 @@
 #   bench_risk_deadline — Fig. 13a/b, 14a/b (energy vs ε / deadline,
 #                         one plan_grid call per sweep)
 #   bench_violation     — Fig. 13c/14c (violation probability ≤ ε)
-#   bench_plan_grid     — batched 3×3 scenario grid vs sequential seed loop
+#   bench_plan_grid     — zipped 9-scenario plan_many vs sequential plans
+#                         (+ seed-loop continuity ratio → BENCH_planner.json)
 #   bench_two_tier      — beyond-paper: planner over zoo architectures
 #   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
 #   bench_kernels       — Pallas kernels vs references

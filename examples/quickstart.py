@@ -1,19 +1,27 @@
-"""Quickstart: the paper's robust planner on its own AlexNet scenario.
+"""Quickstart: the Scenario/Planner API on the paper's own AlexNet scenario.
+
+A ``Scenario`` is *data* (deadline, risk level ε, bandwidth budget B —
+scalars or per-device arrays); a ``Planner`` is one compiled entry point
+for a fixed ``PlannerConfig``. Policies (the paper's robust CCP+PCCP, the
+§VI baselines, beyond-paper variants) live in a registry, so they all
+dispatch — and batch — the same way.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
+import jax.numpy as jnp
 
 from repro.configs.paper_tables import alexnet_fleet
-from repro.core import plan, plan_optimal, violation_report
+from repro.core import Planner, PlannerConfig, Scenario, scenario_at, violation_report
 
-N, D, EPS, B = 12, 0.200, 0.04, 10e6
-
+N = 12
 fleet = alexnet_fleet(jax.random.PRNGKey(0), N)
+scenario = Scenario(deadline=0.200, eps=0.04, B=10e6)
 
-robust = plan(fleet, D, EPS, B, policy="robust")          # paper: CCP + PCCP
-worst = plan(fleet, D, EPS, B, policy="worst_case")        # §VI baseline
-optimal = plan_optimal(fleet, D, EPS, B)                   # §VI baseline
+# one compiled program per config; the scenario values are traced
+robust = Planner(PlannerConfig(policy="robust")).plan(fleet, scenario)
+worst = Planner(PlannerConfig(policy="worst_case")).plan(fleet, scenario)
+optimal = Planner(PlannerConfig(policy="optimal")).plan(fleet, scenario)
 
 print(f"robust  : E = {float(robust.total_energy):.4f} J, partition points {list(map(int, robust.m_sel))}")
 print(f"worst   : E = {float(worst.total_energy):.4f} J")
@@ -21,8 +29,23 @@ print(f"optimal : E = {float(optimal.total_energy):.4f} J")
 print(f"saving vs worst-case: "
       f"{100 * (float(worst.total_energy) - float(robust.total_energy)) / float(worst.total_energy):.1f}%")
 
-vr = violation_report(jax.random.PRNGKey(1), fleet, robust.m_sel, robust.alloc, D,
-                      dist="gamma", var_scale=1.0)
-print(f"empirical violation probability: {float(vr.rate.max()):.4f}  (risk level ε = {EPS})")
-assert float(vr.rate.max()) <= EPS + 0.01, "probabilistic guarantee broken!"
+# zipped scenario batches: K *arbitrary* scenarios (here: a tight fleet-wide
+# SLO, a relaxed one, and heterogeneous per-device deadlines) planned as ONE
+# XLA program — no cartesian grid required.
+mix = [
+    Scenario(0.180, 0.02, 10e6),
+    Scenario(0.240, 0.08, 10e6),
+    Scenario(jnp.linspace(0.17, 0.26, N), 0.04, 10e6),  # per-device SLOs
+]
+planner = Planner(PlannerConfig(policy="robust_exact"))
+batch = planner.plan_many(fleet, mix)
+for k, sc in enumerate(mix):
+    p = scenario_at(batch, k)
+    print(f"scenario {k}: E = {float(p.total_energy):.4f} J, "
+          f"feasible = {bool(p.feasible.all())}")
+
+vr = violation_report(jax.random.PRNGKey(1), fleet, robust.m_sel, robust.alloc,
+                      scenario.deadline, dist="gamma", var_scale=1.0)
+print(f"empirical violation probability: {float(vr.rate.max()):.4f}  (risk level ε = {scenario.eps})")
+assert float(vr.rate.max()) <= scenario.eps + 0.01, "probabilistic guarantee broken!"
 print("probabilistic deadline guarantee holds ✓")

@@ -5,10 +5,11 @@ planner (the paper's §IV online-measurement path).
 Run:  PYTHONPATH=src python examples/serve_two_tier.py
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import plan
+from repro.core import Scenario
 from repro.models import transformer as T
 from repro.models.costmodel import block_chain_from_config
 from repro.serve.engine import Request, ServingEngine
@@ -42,4 +43,14 @@ dep = TwoTierDeployment(get_config(ARCH), num_devices=6, deadline_s=1.0,
 p, fleet = dep.plan(policy="robust_exact")
 rep = dep.validate(p, fleet)
 print("robust two-tier plan:", list(map(int, p.m_sel)))
+print({k: round(v, 5) for k, v in rep.items()})
+
+# 4. the request population has heterogeneous deadlines — plan against
+#    per-device SLOs (Scenario leaves may be (N,)) in the same compiled
+#    program, and validate each device against its own deadline.
+dls = jnp.asarray(np.resize(sorted(r.deadline_s for r in done), dep.num_devices))
+het = dep.planner("robust_exact").plan(fleet, Scenario(dls, dep.eps, dep.bandwidth_hz))
+rep = dep.validate(het, fleet, deadline=dls)
+print("per-device SLO plan:", list(map(int, het.m_sel)),
+      f"deadlines={np.round(np.asarray(dls), 2).tolist()}")
 print({k: round(v, 5) for k, v in rep.items()})

@@ -4,7 +4,6 @@ below the unigram floor.
 
 Run:  PYTHONPATH=src python examples/train_small.py  (takes a few minutes on CPU)
 """
-import dataclasses
 
 from repro.configs.base import ModelConfig
 from repro.train.loop import train

@@ -7,8 +7,7 @@ d_model ≤ 512, ≤4 experts) built via ``reduced()``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -8,7 +8,16 @@ jax.config.update("jax_enable_x64", True)
 
 from repro.core.blocks import BlockChain, Fleet, Link, Platform, broadcast_fleet, covariance  # noqa: E402,F401
 from repro.core.ccp import SIGMA_FNS, sigma_cantelli, sigma_gaussian  # noqa: E402,F401
-from repro.core.planner import Plan, plan, plan_optimal  # noqa: E402,F401
+from repro.core.planner import (  # noqa: E402,F401
+    Plan,
+    Policy,
+    available_policies,
+    get_policy,
+    plan,
+    plan_optimal,
+    register_policy,
+)
+from repro.core.api import Planner, PlannerConfig, Scenario, scenario_at  # noqa: E402,F401
 from repro.core.batch import plan_at, plan_grid  # noqa: E402,F401
 from repro.core.resource import Allocation, allocate, allocate_ipm  # noqa: E402,F401
 from repro.core.pccp import pccp_partition  # noqa: E402,F401
@@ -18,6 +27,8 @@ __all__ = [
     "BlockChain", "Fleet", "Link", "Platform", "broadcast_fleet", "covariance",
     "SIGMA_FNS", "sigma_cantelli", "sigma_gaussian",
     "Plan", "plan", "plan_optimal", "plan_grid", "plan_at",
+    "Scenario", "PlannerConfig", "Planner", "scenario_at",
+    "Policy", "register_policy", "get_policy", "available_policies",
     "Allocation", "allocate", "allocate_ipm",
     "pccp_partition", "violation_report",
 ]

@@ -1,0 +1,294 @@
+"""First-class Scenario/Planner API (DESIGN.md §api).
+
+Three types carve the planning surface at its natural joint — *what is
+traced* vs *what is static*:
+
+- :class:`Scenario` — the traced leaves of one planning problem:
+  ``deadline``, ``eps`` (each scalar or per-device ``(N,)``) and the
+  bandwidth budget ``B``. A ``Scenario`` is a pytree; changing its values
+  never recompiles.
+- :class:`PlannerConfig` — the statics: policy, iteration counts,
+  multi-start, channel robustness. Changing any of these is a new XLA
+  program.
+- :class:`Planner` — one compiled entry point over both:
+  ``plan(fleet, scenario)`` for a single scenario,
+  ``plan_many(fleet, scenarios)`` for a **zipped** batch of K arbitrary
+  scenarios (heterogeneous per-device SLOs, arbitrary mixes — not just
+  cartesian grids) vmapped over one program, and
+  ``grid(fleet, deadlines, epss, Bs)`` as cartesian sugar over
+  ``plan_many``.
+
+Policies dispatch through the :class:`repro.core.planner.Policy` registry,
+so ``"optimal"`` batches like any other policy and new policies are a
+``register_policy`` call away.
+
+The legacy ``core.plan`` / ``core.batch.plan_grid`` functions are
+deprecated delegating wrappers over this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import Fleet
+from repro.core.planner import (
+    Plan,
+    Policy,
+    _alternation,
+    _multi_start,
+    _solve_entry,
+    available_policies,
+    get_policy,
+    initial_points,
+    plan_multi_jit,
+    plan_single_jit,
+    plan_solve_jit,
+    register_policy,
+)
+
+__all__ = [
+    "Scenario", "PlannerConfig", "Planner", "Policy",
+    "register_policy", "get_policy", "available_policies",
+    "plan_many_jit", "scenario_at",
+]
+
+
+class Scenario(NamedTuple):
+    """One planning problem's traced parameters (a pytree).
+
+    ``deadline`` / ``eps`` may be scalars or per-device ``(N,)`` arrays —
+    heterogeneous SLOs and risk levels per device are first-class. ``B``
+    is the fleet's total uplink bandwidth budget (scalar; it couples the
+    devices through Σ b_n ≤ B, so a per-device B has no meaning).
+    """
+
+    deadline: jnp.ndarray  # s — scalar or (N,)
+    eps: jnp.ndarray  # risk level in (0, 1) — scalar or (N,)
+    B: jnp.ndarray  # Hz — scalar bandwidth budget
+
+    def normalized(self, num_devices: int) -> "Scenario":
+        """Broadcast deadline/eps to ``(N,)`` and B to a scalar."""
+        f64 = lambda v: jnp.asarray(v, jnp.float64)
+
+        def per_device(v, name):
+            a = f64(v)
+            # size-1 arrays broadcast like scalars (legacy plan() accepted them)
+            if a.ndim > 1 or (a.ndim == 1 and a.shape[0] not in (1, num_devices)):
+                raise ValueError(
+                    f"Scenario.{name} must be a scalar or a per-device "
+                    f"({num_devices},) array, got shape {a.shape}")
+            return jnp.broadcast_to(a, (num_devices,))
+
+        b = f64(self.B)
+        if b.size != 1:
+            raise ValueError(
+                "Scenario.B is the fleet-wide bandwidth budget and must be "
+                f"a scalar, got shape {b.shape}")
+        return Scenario(
+            deadline=per_device(self.deadline, "deadline"),
+            eps=per_device(self.eps, "eps"),
+            B=jnp.reshape(b, ()),
+        )
+
+
+def stack_scenarios(
+    scenarios: Union["Scenario", Sequence["Scenario"]], num_devices: int
+) -> Scenario:
+    """Zip K scenarios into one ``Scenario`` with leading axis K.
+
+    Accepts a sequence of ``Scenario`` (each normalized to per-device
+    form, then stacked → leaves ``(K, N)``, ``(K, N)``, ``(K,)``) or an
+    already-stacked ``Scenario`` whose leaves carry a leading K axis.
+    """
+    if isinstance(scenarios, Scenario):
+        f64 = lambda v: jnp.asarray(v, jnp.float64)
+        d, e, b = f64(scenarios.deadline), f64(scenarios.eps), f64(scenarios.B)
+        if b.ndim != 1:
+            raise ValueError(
+                "a pre-stacked Scenario batch needs leaves with a leading "
+                f"scenario axis K: B must be (K,), got shape {b.shape}")
+        k = b.shape[0]
+
+        def fix(a, name):
+            if a.ndim == 0:  # same value for every scenario
+                return jnp.broadcast_to(a, (k,))
+            if a.ndim not in (1, 2) or a.shape[0] != k or (
+                    a.ndim == 2 and a.shape[1] != num_devices):
+                raise ValueError(
+                    f"scenario batch leaf {name!r} must be (K,) or (K, N) "
+                    f"with K={k}, N={num_devices}, got shape {a.shape}")
+            return a
+
+        return Scenario(fix(d, "deadline"), fix(e, "eps"), b)
+    if len(scenarios) == 0:
+        raise ValueError("plan_many needs at least one scenario")
+    norm = [Scenario(*s).normalized(num_devices) for s in scenarios]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *norm)
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    """The planner's static knobs.
+
+    ``policy``, the iteration counts, ``multi_start`` and ``channel_cv``
+    are jit cache keys — changing any of them compiles a new program.
+    ``init_m`` is the exception: it must be hashable here (an int start,
+    or None for the default) but is *resolved to a traced start array*,
+    so varying it — or passing array warm starts via the ``init_m=``
+    argument of ``Planner.plan*`` — never recompiles. ``policy`` is a
+    registry name (or a ``Policy`` record directly).
+    """
+
+    policy: Union[str, Policy] = "robust"
+    outer_iters: int = 6
+    pccp_iters: int = 10
+    multi_start: bool = True
+    init_m: Optional[int] = None
+    channel_cv: float = 0.0
+
+    def __post_init__(self):
+        if self.outer_iters < 1:
+            raise ValueError("outer_iters must be >= 1")
+        if self.pccp_iters < 1:
+            raise ValueError("pccp_iters must be >= 1")
+        get_policy(self.policy)  # fail fast on unknown policies
+
+    def resolved_policy(self) -> Policy:
+        return get_policy(self.policy)
+
+
+_BATCH_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv",
+                  "multi_start")
+
+
+@partial(jax.jit, static_argnames=_BATCH_STATICS)
+def _plan_many_impl(fleet, scenarios: Scenario, m0, *, policy: Policy,
+                    outer_iters, pccp_iters, channel_cv, multi_start):
+    """K zipped scenarios vmapped over ONE compiled program.
+
+    Each scenario is planned exactly as the single-scenario entry would
+    (including the vmapped multi-start sweep and its
+    feasibility-then-energy selection), so ``plan_many(...)[k]`` equals
+    ``plan(...)`` leaf-for-leaf.
+    """
+    if policy.solve is not None:
+        run = lambda d, e, b: _solve_entry(
+            fleet, d, e, b, policy, outer_iters, pccp_iters, channel_cv)
+    elif multi_start:
+        run = lambda d, e, b: _multi_start(
+            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
+    else:
+        run = lambda d, e, b: _alternation(
+            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
+    return jax.vmap(run)(scenarios.deadline, scenarios.eps, scenarios.B)
+
+
+#: Public alias — tests assert jit-cache behaviour via ``_cache_size()``.
+plan_many_jit = _plan_many_impl
+
+
+@dataclass(frozen=True)
+class Planner:
+    """One compiled planning entry point for a fixed :class:`PlannerConfig`.
+
+    All three methods share the same traced building blocks and jit
+    caches, so mixing ``plan`` / ``plan_many`` / ``grid`` calls on
+    same-shaped fleets never retraces.
+    """
+
+    config: PlannerConfig = PlannerConfig()
+
+    @property
+    def policy(self) -> Policy:
+        return self.config.resolved_policy()
+
+    def _statics(self):
+        c = self.config
+        return dict(policy=self.policy, outer_iters=int(c.outer_iters),
+                    pccp_iters=int(c.pccp_iters),
+                    channel_cv=float(c.channel_cv))
+
+    def _starts(self, fleet: Fleet, init_m):
+        if init_m is None:
+            init_m = self.config.init_m
+        return initial_points(fleet, init_m, self.config.multi_start)
+
+    def _dispatch(self, fleet: Fleet, init_m):
+        """Shared host-side dispatch: resolve (statics, m0, use_multi).
+
+        The single place that decides how a policy enters the compiled
+        program — solve overrides take a placeholder start (they never
+        alternate, so an explicit warm start is a caller error), everything
+        else resolves ``initial_points``. Both ``plan`` and ``plan_many``
+        go through here so they cannot diverge from the
+        ``plan_many(...)[k] == plan(...)`` contract.
+        """
+        statics = self._statics()
+        if statics["policy"].solve is not None:
+            if init_m is not None or self.config.init_m is not None:
+                raise ValueError(
+                    f"policy {statics['policy'].name!r} solves exactly "
+                    "(no alternation), so init_m warm starts have no effect "
+                    "— drop init_m or pick an alternating policy")
+            return statics, jnp.zeros((fleet.num_devices,), jnp.int32), False
+        m0, use_multi = self._starts(fleet, init_m)
+        return statics, m0, use_multi
+
+    def plan(self, fleet: Fleet, scenario: Scenario, init_m=None) -> Plan:
+        """Plan one scenario. ``init_m`` (scalar or (N,) array) overrides
+        the config's static start — it is traced, not a cache key."""
+        sc = Scenario(*scenario).normalized(fleet.num_devices)
+        statics, m0, use_multi = self._dispatch(fleet, init_m)
+        if statics["policy"].solve is not None:
+            return plan_solve_jit(fleet, sc.deadline, sc.eps, sc.B, **statics)
+        entry = plan_multi_jit if use_multi else plan_single_jit
+        return entry(fleet, sc.deadline, sc.eps, sc.B, m0, **statics)
+
+    def plan_many(self, fleet: Fleet,
+                  scenarios: Union[Scenario, Sequence[Scenario]],
+                  init_m=None) -> Plan:
+        """Plan K zipped scenarios as ONE XLA program.
+
+        ``scenarios`` is a sequence of :class:`Scenario` (heterogeneous
+        mixes welcome — per-device deadlines/eps in some, scalars in
+        others) or a pre-stacked ``Scenario`` with leading axis K on every
+        leaf. Returns a ``Plan`` whose every leaf has leading axis K;
+        ``plan_many(...)[k] == plan(fleet, scenarios[k])`` leaf-for-leaf.
+        """
+        batch = stack_scenarios(scenarios, fleet.num_devices)
+        statics, m0, use_multi = self._dispatch(fleet, init_m)
+        return plan_many_jit(fleet, batch, m0, multi_start=use_multi, **statics)
+
+    def grid(self, fleet: Fleet, deadlines, epss, Bs, init_m=None) -> Plan:
+        """Cartesian sugar over ``plan_many``: every scenario in
+        deadlines × epss × Bs, one compiled program.
+
+        Returns a ``Plan`` with leading axes (len(deadlines), len(epss),
+        len(Bs)) on every leaf; scalars are length-1 axes, so
+        ``grid(fleet, 0.2, eps_grid, B)`` sweeps ε only.
+        """
+        as_axis = lambda v: jnp.atleast_1d(jnp.asarray(v, jnp.float64))
+        dd, ee, bb = jnp.meshgrid(as_axis(deadlines), as_axis(epss),
+                                  as_axis(Bs), indexing="ij")
+        shape = dd.shape
+        batch = Scenario(dd.ravel(), ee.ravel(), bb.ravel())
+        plans = self.plan_many(fleet, batch, init_m=init_m)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(shape + x.shape[1:]), plans)
+
+
+def scenario_at(plans: Plan, k: int) -> Plan:
+    """Extract scenario ``k`` from a ``plan_many`` batch (leading axis K)."""
+    lead = jnp.shape(plans.total_energy)
+    if len(lead) != 1:
+        raise ValueError(
+            "scenario_at expects a plan_many batch (every leaf with one "
+            f"leading scenario axis); got total_energy shape {lead}. For "
+            "grid plans use plan_at(plans, i, j, k).")
+    if not -lead[0] <= k < lead[0]:
+        raise IndexError(f"scenario index {k} out of range for batch of {lead[0]}")
+    return jax.tree_util.tree_map(lambda x: x[k], plans)

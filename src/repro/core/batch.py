@@ -1,58 +1,28 @@
-"""Batched scenario-grid planning (DESIGN.md §planner).
+"""Batched scenario-grid planning — deprecated delegating wrappers.
 
-The fused planner traces deadline, ε and B (only fleet *shape*, policy and
-iteration counts are static), so whole scenario sweeps — Fig. 13/14's
-deadline×ε grids, per-request planning in the two-tier engine, bandwidth
-what-ifs — vmap over one compiled program instead of re-dispatching
-``plan()`` per scenario.
+``plan_grid``/``plan_at`` predate the first-class Scenario/Planner API
+(``repro.core.api``) and now delegate to it: ``plan_grid`` is
+``Planner(...).grid(...)`` (cartesian sugar over the zipped
+``plan_many``), so every policy in the registry — **including
+"optimal"**, which the old grid path rejected — batch-dispatches through
+one compiled program. Kept because the grid shape contract
+(``out.m_sel[i, j, k]`` is the plan for ``(deadlines[i], epss[j],
+Bs[k])``, leaf-identical to ``plan()``) is pinned by tests and used by
+the figure benchmarks.
 
-``plan_grid`` evaluates the full cartesian product
-
-    deadlines (D,) × epss (E,) × Bs (K,)
-
-and returns a ``Plan`` whose every leaf carries leading axes (D, E, K):
-``out.m_sel[i, j, k]`` is the plan for ``(deadlines[i], epss[j], Bs[k])``.
-Scalars are treated as length-1 axes, so ``plan_grid(fleet, 0.2, eps_grid,
-B)`` sweeps ε only. Each scenario is planned exactly as ``plan()`` would
-(including the vmapped multi-start sweep and its feasibility-then-energy
-selection), so ``plan_grid(...)[i, j, k] == plan(...)`` leaf-for-leaf.
+New code should call ``api.Planner.grid`` / ``api.Planner.plan_many``
+directly — zipped batches of arbitrary scenarios (heterogeneous
+per-device SLOs) are strictly more general than cartesian grids.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.blocks import Fleet
-from repro.core.planner import (
-    Plan,
-    _POLICIES,
-    _alternation,
-    _multi_start,
-    initial_points,
-)
-
-_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv", "multi_start")
-
-
-@partial(jax.jit, static_argnames=_STATICS)
-def _grid_impl(fleet, deadlines, epss, Bs, m0, *, policy, outer_iters,
-               pccp_iters, channel_cv, multi_start):
-    dd, ee, bb = jnp.meshgrid(deadlines, epss, Bs, indexing="ij")
-    shape = dd.shape
-
-    if multi_start:
-        run = lambda d, e, b: _multi_start(
-            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
-    else:
-        run = lambda d, e, b: _alternation(
-            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
-
-    plans = jax.vmap(run)(dd.ravel(), ee.ravel(), bb.ravel())
-    return jax.tree_util.tree_map(
-        lambda x: x.reshape(shape + x.shape[1:]), plans)
+from repro.core.planner import Plan
 
 
 def plan_grid(
@@ -69,26 +39,43 @@ def plan_grid(
 ) -> Plan:
     """Plan every scenario in deadlines × epss × Bs as ONE XLA program.
 
-    Returns a ``Plan`` with leading grid axes (len(deadlines), len(epss),
-    len(Bs)) on every leaf. See module docstring for semantics.
+    .. deprecated::
+        Delegates to ``api.Planner.grid``. Returns a ``Plan`` with leading
+        grid axes (len(deadlines), len(epss), len(Bs)) on every leaf; each
+        cell equals the corresponding single ``plan()`` leaf-for-leaf.
     """
-    if policy not in _POLICIES or policy == "optimal":
-        raise ValueError(
-            f"policy must be one of {_POLICIES[:-1]} for grid planning, got {policy!r}")
-    if outer_iters < 1:
-        raise ValueError("outer_iters must be >= 1")
+    import warnings
 
-    as_axis = lambda v: jnp.atleast_1d(jnp.asarray(v, jnp.float64))
-    deadlines, epss, Bs = as_axis(deadlines), as_axis(epss), as_axis(Bs)
+    from repro.core.api import Planner, PlannerConfig
 
-    m0, use_multi = initial_points(fleet, init_m, multi_start)
-    return _grid_impl(
-        fleet, deadlines, epss, Bs, m0,
-        policy=policy, outer_iters=int(outer_iters), pccp_iters=int(pccp_iters),
-        channel_cv=float(channel_cv), multi_start=use_multi,
-    )
+    warnings.warn(
+        "repro.core.plan_grid is deprecated; use "
+        "api.Planner(PlannerConfig(...)).grid(...) or .plan_many(...)",
+        DeprecationWarning, stacklevel=2)
+    cfg = PlannerConfig(policy=policy, outer_iters=outer_iters,
+                        pccp_iters=pccp_iters, multi_start=multi_start,
+                        channel_cv=channel_cv)
+    return Planner(cfg).grid(fleet, deadlines, epss, Bs, init_m=init_m)
 
 
 def plan_at(plans: Plan, i: int, j: int = 0, k: int = 0) -> Plan:
-    """Extract the single-scenario ``Plan`` at grid index (i, j, k)."""
+    """Extract the single-scenario ``Plan`` at grid index (i, j, k).
+
+    Only grid plans (leading ``(D, E, K)`` axes from ``plan_grid`` /
+    ``Planner.grid``) are indexable here; single plans need no indexing
+    and zipped ``plan_many`` batches use ``api.scenario_at``.
+    """
+    lead = jnp.shape(plans.total_energy)
+    if len(lead) != 3:
+        kind = ("a single plan" if len(lead) == 0 else
+                "a plan_many batch (use api.scenario_at)" if len(lead) == 1 else
+                f"a Plan with {len(lead)} leading axes")
+        raise ValueError(
+            "plan_at expects a grid Plan with (deadline, eps, B) leading "
+            f"axes on every leaf; got {kind} (total_energy shape {lead})")
+    for name, idx, dim in (("i", i, lead[0]), ("j", j, lead[1]), ("k", k, lead[2])):
+        if not -dim <= idx < dim:
+            raise IndexError(
+                f"grid index {name}={idx} out of range for axis of length "
+                f"{dim} (grid shape {lead})")
     return jax.tree_util.tree_map(lambda x: x[i, j, k], plans)

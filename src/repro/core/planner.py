@@ -1,6 +1,12 @@
 """Algorithm 2 — alternating robust partitioning + resource allocation.
 
-Policies (all share the same alternation skeleton):
+Policies are **strategy records** in a registry (``Policy`` /
+``register_policy``), not string if-chains: each policy bundles its
+ambiguity-set σ model, its worst-case time inflation, its partition step
+(PCCP vs exact enumeration), and — for baselines that bypass the
+alternation entirely, like ``"optimal"`` — a full-plan ``solve`` override.
+``_alternation`` dispatches through the record, so a new policy is a
+``register_policy`` call, not an edit to the solver. Built-ins:
 
 - ``"robust"``      — the paper: CCP margins (Cantelli σ) + PCCP partitioning.
 - ``"robust_exact"``— beyond-paper: CCP margins + *exact per-device
@@ -13,23 +19,31 @@ Policies (all share the same alternation skeleton):
 - ``"optimal"``     — §VI baseline: joint exhaustive search implemented as
                       price-based exact enumeration over (m, b, f)
                       (optimal because the problem decouples at a fixed
-                      bandwidth price; see DESIGN.md).
+                      bandwidth price; see DESIGN.md). Registered with a
+                      ``solve`` override, so it batch-dispatches through
+                      ``api.Planner.plan_many``/``grid`` like any policy.
 
 The whole planner is ONE compiled XLA program (DESIGN.md §planner): the
 outer Algorithm-2 alternation is a ``lax.scan``, the multi-start spread is
 a ``vmap`` over initial partition points with a traced
 feasibility-then-energy argmin, and all scenario parameters
 (deadline, ε, B) are traced — so repeated calls on same-shaped fleets hit
-the jit cache, and ``core.batch.plan_grid`` can vmap whole scenario grids
-over the same trace.
+the jit cache, and ``core.api.Planner.plan_many`` can vmap whole zipped
+scenario batches over the same trace.
+
+``plan`` below is the deprecated-but-working functional wrapper; new code
+should use ``repro.core.api`` (``Scenario`` / ``PlannerConfig`` /
+``Planner``).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ccp, channel, energy
 from repro.core.blocks import Fleet
@@ -39,12 +53,9 @@ from repro.core.resource import (
     _device_best_b_at,
     _device_invariants,
     allocate,
-    deadline_budget,
     select_point,
 )
 from repro.solvers.scalar import bisect
-
-_POLICIES = ("robust", "robust_exact", "gaussian", "worst_case", "optimal")
 
 
 class Plan(NamedTuple):
@@ -55,6 +66,74 @@ class Plan(NamedTuple):
     objective_trace: jnp.ndarray  # (outer_iters,) Algorithm-2 trajectory (Fig. 10)
     pccp_iters: jnp.ndarray  # (outer_iters, N) Algorithm-1 iterations (Fig. 9)
     margins: jnp.ndarray  # (N,) deadline margin (≤0 ⇒ guaranteed)
+
+
+# ---------------------------------------------------------------------------
+# Policy strategy registry
+# ---------------------------------------------------------------------------
+
+#: Worst-case baseline upper bound: mean + UB_K·std. Fig. 1/5 show
+#: heavy-tailed outliers (spikes ≫ mean); the empirical max of the paper's
+#: 500-sample campaigns corresponds to ≈ mean + 8·std for such tails.
+WORST_CASE_UB_K = 8.0
+
+
+@dataclass(frozen=True)
+class Policy:
+    """Strategy record for one planning policy.
+
+    Instances are hashable statics: they ride through ``jax.jit`` as
+    ``static_argnames`` entries, and the registry hands out singletons so
+    repeated lookups hit the same jit-cache key.
+
+    ``partition`` runs inside the Algorithm-2 alternation with signature
+    ``(m, e_table, t_table, var_table, sigma, deadline, pccp_iters) ->
+    (m_new, feasible, iters)``. ``solve``, when set, replaces the whole
+    alternation (signature ``(fleet, deadline, eps, B, policy, outer_iters,
+    pccp_iters, channel_cv) -> Plan``) — used by ``"optimal"``.
+    """
+
+    name: str
+    sigma_model: str = "cantelli"  # key into ccp.SIGMA_FNS
+    ub_k: float = 0.0  # worst-case time inflation (mean + ub_k·std)
+    partition: Optional[Callable] = None
+    solve: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.sigma_model not in ccp.SIGMA_FNS:
+            raise ValueError(
+                f"sigma_model must be one of {tuple(ccp.SIGMA_FNS)}, "
+                f"got {self.sigma_model!r}")
+        if self.partition is None and self.solve is None:
+            raise ValueError("a Policy needs a partition step or a solve override")
+
+
+_REGISTRY: dict[str, Policy] = {}
+
+
+def register_policy(policy: Policy, *, overwrite: bool = False) -> Policy:
+    """Add ``policy`` to the registry (returns it, for assignment)."""
+    if policy.name in _REGISTRY and not overwrite:
+        raise ValueError(f"policy {policy.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_policy(policy) -> Policy:
+    """Resolve a policy name (or pass through a ``Policy`` instance)."""
+    if isinstance(policy, Policy):
+        return policy
+    try:
+        return _REGISTRY[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; registered: {available_policies()}"
+        ) from None
+
+
+def available_policies() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
 
 
 def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
@@ -90,18 +169,22 @@ def _exact_partition(e_table, t_table, var_table, sigma, deadline):
     return m_sel, jnp.take_along_axis(feas, m_sel[:, None], -1)[:, 0]
 
 
-#: Worst-case baseline upper bound: mean + UB_K·std. Fig. 1/5 show
-#: heavy-tailed outliers (spikes ≫ mean); the empirical max of the paper's
-#: 500-sample campaigns corresponds to ≈ mean + 8·std for such tails.
-WORST_CASE_UB_K = 8.0
+def exact_partition_step(m, e_table, t_table, var_table, sigma, deadline,
+                         pccp_iters):
+    """Partition strategy: exact per-device enumeration (DESIGN.md §2)."""
+    del m, pccp_iters
+    m_new, feas = _exact_partition(e_table, t_table, var_table, sigma, deadline)
+    return m_new, feas, jnp.ones(m_new.shape, jnp.int32)
 
 
-def _ub_k(policy: str) -> float:
-    return WORST_CASE_UB_K if policy == "worst_case" else 0.0
-
-
-def _sigma_model(policy: str) -> str:
-    return {"gaussian": "gaussian", "worst_case": "hard"}.get(policy, "cantelli")
+def pccp_partition_step(m, e_table, t_table, var_table, sigma, deadline,
+                        pccp_iters):
+    """Partition strategy: the paper's penalty CCP (Algorithm 1)."""
+    x_init = jax.nn.one_hot(m, e_table.shape[-1], dtype=jnp.float64)
+    res = pccp_partition(
+        e_table, t_table, var_table, sigma, deadline, x_init, num_iters=pccp_iters
+    )
+    return res.m_sel, res.feasible, res.iters_to_converge
 
 
 def default_starts(num_points: int) -> list[int]:
@@ -113,8 +196,9 @@ def default_starts(num_points: int) -> list[int]:
 def initial_points(fleet: Fleet, init_m, multi_start: bool):
     """Resolve the planner's initial partition points → (m0, use_multi).
 
-    Shared by ``plan`` and ``batch.plan_grid`` so both resolve starts
-    identically (the grid contract is ``plan_grid(...)[i,j,k] == plan(...)``).
+    Shared by every planning entry point (``api.Planner``, the legacy
+    ``plan``/``plan_grid`` wrappers) so all resolve starts identically
+    (the batch contract is ``plan_many(...)[k] == plan(...)``).
 
     With ``multi_start`` and no explicit ``init_m``: the Fig. 10 spread as
     an (S, N) batch. Otherwise a single (N,) start — ``init_m`` broadcast,
@@ -129,47 +213,44 @@ def initial_points(fleet: Fleet, init_m, multi_start: bool):
         starts = default_starts(m1)
         return jnp.broadcast_to(
             jnp.asarray(starts, jnp.int32)[:, None], (len(starts), n)), True
-    m0 = (
-        jnp.full((n,), m1 - 1, jnp.int32)
-        if init_m is None
-        else jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))
-    )
-    return m0, False
+    if init_m is None:
+        return jnp.full((n,), m1 - 1, jnp.int32), False
+    if not isinstance(init_m, jax.core.Tracer):  # bounds-check concrete starts
+        arr = np.asarray(init_m)
+        if arr.size and (arr.min() < 0 or arr.max() > m1 - 1):
+            raise ValueError(
+                f"init_m must lie in [0, {m1 - 1}] (partition points 0..M for "
+                f"a {m1 - 1}-block chain); got {init_m!r}")
+    return jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,)), False
 
 
-def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: str,
+def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: Policy,
                  outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
     """One Algorithm-2 alternation from initial points ``m0`` — fully traced.
 
     The outer loop is a ``lax.scan`` carrying the partition decision; each
     step re-allocates (b, f) at the current m and re-partitions at the new
     (b, f). No host syncs, so the whole alternation stays one XLA program.
+    Policy behaviour (σ model, time inflation, partition step) comes from
+    the ``Policy`` record — no per-policy branches live here.
     """
-    n, m1 = fleet.num_devices, fleet.num_points
+    n = fleet.num_devices
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
-    sig_model = _sigma_model(policy)
-    ub_k = _ub_k(policy)
+    sig_model, ub_k = policy.sigma_model, policy.ub_k
     sigma = ccp.SIGMA_FNS[sig_model](eps)
 
     def step(m, _):
         alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
         e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
-        if ub_k > 0.0:  # worst-case baseline: inflate times, drop variance
+        if ub_k > 0.0:  # worst-case inflation: mean + ub_k·std, no variance
             t_table = t_table + ub_k * (
                 jnp.sqrt(jnp.maximum(fleet.chain.v_loc, 0.0))
                 + jnp.sqrt(jnp.maximum(fleet.chain.v_vm, 0.0))
             )
             var_table = jnp.zeros_like(var_table)
-        if policy == "robust":
-            x_init = jax.nn.one_hot(m, m1, dtype=jnp.float64)
-            res = pccp_partition(
-                e_table, t_table, var_table, sigma, deadline, x_init, num_iters=pccp_iters
-            )
-            m_new, feas, pc = res.m_sel, res.feasible, res.iters_to_converge
-        else:  # robust_exact / gaussian / worst_case → exact enumeration
-            m_new, feas = _exact_partition(e_table, t_table, var_table, sigma, deadline)
-            pc = jnp.ones((n,), jnp.int32)
+        m_new, feas, pc = policy.partition(
+            m, e_table, t_table, var_table, sigma, deadline, pccp_iters)
         obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
         return m_new, (obj, pc, feas)
 
@@ -209,7 +290,7 @@ def _select_best(plans: Plan) -> jnp.ndarray:
     return jnp.argmin(e_masked)
 
 
-def _multi_start(fleet: Fleet, deadline, eps, B, m0_batch, policy: str,
+def _multi_start(fleet: Fleet, deadline, eps, B, m0_batch, policy: Policy,
                  outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
     """vmapped multi-start alternation + traced best-plan selection."""
     plans = jax.vmap(
@@ -220,12 +301,22 @@ def _multi_start(fleet: Fleet, deadline, eps, B, m0_batch, policy: str,
     return jax.tree_util.tree_map(lambda x: x[idx], plans)
 
 
+def _solve_entry(fleet: Fleet, deadline, eps, B, policy: Policy,
+                 outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
+    """Entry for solve-override policies (no alternation, no starts)."""
+    return policy.solve(fleet, deadline, eps, B, policy,
+                        outer_iters, pccp_iters, channel_cv)
+
+
 _STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv")
 
 #: Jitted entry points. Exposed at module level (not hidden in ``plan``) so
-#: tests can assert cache behaviour via ``_cache_size()``.
+#: tests can assert cache behaviour via ``_cache_size()``. ``policy`` is a
+#: static ``Policy`` record; the registry hands out singletons so the cache
+#: key is stable across calls.
 plan_single_jit = partial(jax.jit, static_argnames=_STATICS)(_alternation)
 plan_multi_jit = partial(jax.jit, static_argnames=_STATICS)(_multi_start)
+plan_solve_jit = partial(jax.jit, static_argnames=_STATICS)(_solve_entry)
 
 
 def plan(
@@ -242,6 +333,13 @@ def plan(
 ) -> Plan:
     """Run Algorithm 2 (or a baseline policy) and return the plan.
 
+    .. deprecated::
+        Thin delegating wrapper over :class:`repro.core.api.Planner` —
+        prefer ``Planner(PlannerConfig(...)).plan(fleet, Scenario(...))``,
+        which also exposes zipped scenario batches (``plan_many``) and
+        grids. This wrapper is kept leaf-identical to the seed goldens
+        (``tests/golden/seed_plans.json``).
+
     ``multi_start`` follows Fig. 10: the alternation converges to a
     stationary point that depends on the initial partition point, so we run
     it from a small spread of starts (vmapped) and keep the best feasible
@@ -250,22 +348,18 @@ def plan(
     so only a new fleet *shape* or new static (policy, iteration counts)
     triggers recompilation.
     """
-    if policy not in _POLICIES:
-        raise ValueError(f"policy must be one of {_POLICIES}, got {policy!r}")
-    if policy == "optimal":
-        return plan_optimal(fleet, deadline, eps, B)
-    if outer_iters < 1:
-        raise ValueError("outer_iters must be >= 1")
+    import warnings
 
-    deadline = jnp.asarray(deadline, jnp.float64)
-    eps = jnp.asarray(eps, jnp.float64)
-    B = jnp.asarray(B, jnp.float64)
-    statics = dict(policy=policy, outer_iters=int(outer_iters),
-                   pccp_iters=int(pccp_iters), channel_cv=float(channel_cv))
+    from repro.core.api import Planner, PlannerConfig, Scenario
 
-    m0, use_multi = initial_points(fleet, init_m, multi_start)
-    entry = plan_multi_jit if use_multi else plan_single_jit
-    return entry(fleet, deadline, eps, B, m0, **statics)
+    warnings.warn(
+        "repro.core.plan is deprecated; use "
+        "api.Planner(PlannerConfig(...)).plan(fleet, Scenario(...))",
+        DeprecationWarning, stacklevel=2)
+    cfg = PlannerConfig(policy=policy, outer_iters=outer_iters,
+                        pccp_iters=pccp_iters, multi_start=multi_start,
+                        channel_cv=channel_cv)
+    return Planner(cfg).plan(fleet, Scenario(deadline, eps, B), init_m=init_m)
 
 
 def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") -> Plan:
@@ -278,8 +372,11 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
     baseline (which is exponential only because it enumerates x jointly).
     The λ-invariant feasibility bracket per (n, m) is hoisted out of the
     price bisection (same hoist as ``resource.allocate``).
+
+    Fully traced (fixed-iteration bisection), so the ``"optimal"`` policy
+    vmaps over zipped scenario batches like any other registry entry.
     """
-    n, m1 = fleet.num_devices, fleet.num_points
+    n = fleet.num_devices
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
     c, plat, link = fleet.chain, fleet.platform, fleet.link
@@ -353,3 +450,21 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
         pccp_iters=jnp.ones((1, fleet.num_devices), jnp.int32),
         margins=margins,
     )
+
+
+def _optimal_solve(fleet, deadline, eps, B, policy: Policy,
+                   outer_iters, pccp_iters, channel_cv) -> Plan:
+    """Registry ``solve`` adapter for the optimal baseline (iteration
+    counts and channel_cv do not apply to the exact search)."""
+    del outer_iters, pccp_iters, channel_cv
+    return plan_optimal(fleet, deadline, eps, B, sigma_model=policy.sigma_model)
+
+
+ROBUST = register_policy(Policy("robust", partition=pccp_partition_step))
+ROBUST_EXACT = register_policy(Policy("robust_exact", partition=exact_partition_step))
+GAUSSIAN = register_policy(
+    Policy("gaussian", sigma_model="gaussian", partition=exact_partition_step))
+WORST_CASE = register_policy(
+    Policy("worst_case", sigma_model="hard", ub_k=WORST_CASE_UB_K,
+           partition=exact_partition_step))
+OPTIMAL = register_policy(Policy("optimal", solve=_optimal_solve))

@@ -32,9 +32,8 @@ from repro.core.planner import (
     Plan,
     _exact_partition,
     _point_tables,
-    _sigma_model,
-    _ub_k,
     default_starts,
+    get_policy,
 )
 from repro.core.resource import allocate, select_point
 
@@ -76,8 +75,8 @@ def plan_reference(
     n, m1 = fleet.num_devices, fleet.num_points
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
-    sig_model = _sigma_model(policy)
-    ub_k = _ub_k(policy)
+    pol = get_policy(policy)
+    sig_model, ub_k = pol.sigma_model, pol.ub_k
     sigma = ccp.SIGMA_FNS[sig_model](eps)
 
     m = (

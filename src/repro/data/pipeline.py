@@ -13,7 +13,7 @@ uses label −1), plus modality-stub embeddings for audio/vlm configs.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ import time  # noqa: E402
 from typing import Dict, Optional  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.base import INPUT_SHAPES  # noqa: E402
 from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402

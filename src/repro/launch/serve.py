@@ -9,9 +9,11 @@ from __future__ import annotations
 import argparse
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.api import Scenario
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.partitioned import TwoTierDeployment
@@ -48,6 +50,17 @@ def main():
     plan, fleet = dep.plan()
     rep = dep.validate(plan, fleet)
     print("two-tier robust plan per device:", list(map(int, plan.m_sel)))
+    print({k: round(v, 5) for k, v in rep.items()})
+
+    # Heterogeneous per-device SLOs: each device inherits a deadline from
+    # the request population it serves (Scenario leaves may be (N,)), and
+    # the plan is validated against those per-device deadlines.
+    dls = jnp.asarray(np.resize([r.deadline_s for r in reqs], dep.num_devices),
+                      jnp.float64)
+    het = dep.planner().plan(fleet, Scenario(dls, args.eps, dep.bandwidth_hz))
+    rep = dep.validate(het, fleet, deadline=dls)
+    print("per-device SLO plan:", list(map(int, het.m_sel)),
+          f"(deadlines {np.round(np.asarray(dls), 2).tolist()})")
     print({k: round(v, 5) for k, v in rep.items()})
 
 

@@ -1,7 +1,7 @@
 """Step functions + abstract input specs for lowering/dry-runs and drivers."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

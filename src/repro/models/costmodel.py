@@ -15,7 +15,6 @@ planner partitions inference, so fwd is what matters here.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import _act, dense_init, mlp_apply, mlp_init
-from repro.parallel.sharding import constrain, constrain_expert
+from repro.parallel.sharding import constrain
 
 
 def constrain_expert_batched(x):

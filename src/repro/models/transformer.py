@@ -15,8 +15,7 @@ Conventions
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

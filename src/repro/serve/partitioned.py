@@ -12,6 +12,13 @@ minimizing total device energy subject to P{latency ≤ D} ≥ 1−ε with only
 (mean, variance) knowledge of block times — uncertain inference time is a
 measured reality on shared serving tiers (batching jitter, stragglers).
 
+Planning goes through the first-class Scenario/Planner API
+(``repro.core.api``): ``plan`` is the deployment's default scenario,
+``plan_grid`` a cartesian SLO sweep, and ``plan_many`` a zipped batch of
+arbitrary scenarios (heterogeneous per-device deadlines/risk levels) in
+one compiled program. All registry policies — including ``"optimal"`` —
+dispatch through every entry point.
+
 The per-block (FLOPs, boundary bytes) come from ``models.costmodel``; the
 (mean, variance) time statistics either from the analytic tier profiles or
 from ``ServingEngine`` measurements (``measured_chain``).
@@ -19,16 +26,15 @@ from ``ServingEngine`` measurements (``measured_chain``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import plan as core_plan
-from repro.core import plan_at, plan_grid
 from repro.core import violation_report
+from repro.core.api import Planner, PlannerConfig, Scenario
 from repro.core.blocks import BlockChain, Fleet, Link, Platform
 from repro.core.channel import pathloss_gain
 from repro.models.costmodel import DEVICE_TIER, EDGE_TIER, TierProfile, block_chain_from_config
@@ -80,14 +86,18 @@ class TwoTierDeployment:
             link=Link(p_tx=tile(1.0), gain=pathloss_gain(r)),
         )
 
+    def scenario(self) -> Scenario:
+        """The deployment's configured default scenario."""
+        return Scenario(self.deadline_s, self.eps, self.bandwidth_hz)
+
+    def planner(self, policy: str = "robust_exact", **kw) -> Planner:
+        """A ``Planner`` for this deployment (kw → ``PlannerConfig``)."""
+        return Planner(PlannerConfig(policy=policy, **kw))
+
     def plan(self, policy: str = "robust_exact", **kw):
-        """Plan the deployment's default scenario (a 1×1×1 grid)."""
-        if policy == "optimal":  # exact baseline — not grid-batchable
-            fleet = self.fleet()
-            return core_plan(fleet, self.deadline_s, self.eps,
-                             self.bandwidth_hz, policy=policy, **kw), fleet
-        plans, fleet = self.plan_grid(policy=policy, **kw)
-        return plan_at(plans, 0, 0, 0), fleet
+        """Plan the deployment's default scenario."""
+        fleet = self.fleet()
+        return self.planner(policy, **kw).plan(fleet, self.scenario()), fleet
 
     def plan_grid(self, deadlines=None, epss=None, Bs=None,
                   policy: str = "robust_exact", **kw):
@@ -99,18 +109,36 @@ class TwoTierDeployment:
         (len(deadlines), len(epss), len(Bs)).
         """
         fleet = self.fleet()
-        plans = plan_grid(
+        plans = self.planner(policy, **kw).grid(
             fleet,
             self.deadline_s if deadlines is None else deadlines,
             self.eps if epss is None else epss,
             self.bandwidth_hz if Bs is None else Bs,
-            policy=policy, **kw,
         )
         return plans, fleet
 
-    def validate(self, p, fleet, key=None, dist: str = "gamma") -> Dict[str, float]:
+    def plan_many(self, scenarios: Union[Scenario, Sequence[Scenario]],
+                  policy: str = "robust_exact", **kw):
+        """Plan K zipped scenarios (arbitrary mixes — heterogeneous
+        per-device SLOs, what-if bandwidths) as one compiled program.
+        Returns a ``Plan`` with leading axis K on every leaf."""
+        fleet = self.fleet()
+        return self.planner(policy, **kw).plan_many(fleet, scenarios), fleet
+
+    def validate(self, p, fleet, key=None, dist: str = "gamma",
+                 deadline=None) -> Dict[str, float]:
+        """Monte-Carlo validation of a plan against its own scenario.
+
+        ``deadline`` (scalar or per-device ``(N,)``) defaults to the
+        deployment's configured scalar — pass the cell's deadline when
+        validating plans from a grid/batch sweep, otherwise the report
+        would silently score every cell against ``self.deadline_s``.
+        """
         key = jax.random.PRNGKey(self.seed + 1) if key is None else key
-        vr = violation_report(key, fleet, p.m_sel, p.alloc, self.deadline_s, dist=dist)
+        deadline = self.deadline_s if deadline is None else deadline
+        deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64),
+                                    (fleet.num_devices,))
+        vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline, dist=dist)
         return {
             "total_energy_j": float(p.total_energy),
             "max_violation": float(vr.rate.max()),

@@ -19,7 +19,6 @@ Design notes
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple, Optional
 
 import jax

@@ -2,11 +2,9 @@
 from __future__ import annotations
 
 import time
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, SyntheticTokens, make_batch

@@ -1,0 +1,271 @@
+"""First-class Scenario/Planner API (DESIGN.md §api).
+
+Pins the tentpole contracts:
+
+- ``plan_many`` over K heterogeneous *zipped* scenarios (mixed scalar and
+  per-device ``(N,)`` deadlines/eps) equals K independent ``plan()``
+  calls leaf-for-leaf;
+- ``"optimal"`` dispatched through the Policy registry matches
+  ``plan_optimal`` and is grid/batch-dispatchable (the old grid path
+  rejected it);
+- statics-vs-traced: new scenario values never retrace the batched entry;
+- the satellite error paths (``init_m`` bounds, ``plan_at`` shape/bounds,
+  unknown policies, malformed scenario batches) raise actionable errors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet
+from repro.core import (
+    Planner,
+    PlannerConfig,
+    Policy,
+    Scenario,
+    api,
+    available_policies,
+    get_policy,
+    plan,
+    plan_at,
+    plan_grid,
+    plan_optimal,
+    scenario_at,
+)
+
+B = 10e6
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 6)
+
+
+def assert_plans_equal(a, b, rtol=0.0):
+    """Leaf-for-leaf Plan comparison (exact ints/bools, rtol floats)."""
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.dtype.kind in "fc" and rtol > 0.0:
+            np.testing.assert_allclose(x, y, rtol=rtol, atol=0.0)
+        else:
+            np.testing.assert_array_equal(x, y)
+
+
+#: K=4 heterogeneous zipped scenarios: fleet-wide scalars, per-device
+#: (N,) deadlines, and per-device (N,) risk levels — the workload shape
+#: cartesian grids cannot represent.
+def hetero_scenarios(n):
+    return [
+        Scenario(0.18, 0.02, B),
+        Scenario(0.22, 0.06, 8e6),
+        Scenario(jnp.linspace(0.17, 0.25, n), 0.04, B),
+        Scenario(0.20, jnp.asarray([0.02, 0.03, 0.04, 0.05, 0.06, 0.08][:n]), 12e6),
+    ]
+
+
+def test_plan_many_matches_sequential_plan(fleet):
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    scenarios = hetero_scenarios(fleet.num_devices)
+    many = planner.plan_many(fleet, scenarios)
+    assert many.m_sel.shape == (len(scenarios), fleet.num_devices)
+    for k, sc in enumerate(scenarios):
+        assert_plans_equal(scenario_at(many, k), planner.plan(fleet, sc),
+                           rtol=1e-10)
+
+
+def test_plan_many_robust_pccp_policy(fleet):
+    """The paper's PCCP path batches identically to per-scenario calls."""
+    planner = Planner(PlannerConfig(policy="robust", outer_iters=2,
+                                    pccp_iters=4))
+    scenarios = hetero_scenarios(fleet.num_devices)[1:3]  # keep it cheap
+    many = planner.plan_many(fleet, scenarios)
+    for k, sc in enumerate(scenarios):
+        assert_plans_equal(scenario_at(many, k), planner.plan(fleet, sc),
+                           rtol=1e-10)
+
+
+def test_plan_many_prestacked_scenario(fleet):
+    """A pre-stacked Scenario (leading K axis on every leaf) is accepted."""
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    stacked = Scenario(jnp.asarray([0.18, 0.20, 0.22]), 0.04,
+                       jnp.full((3,), B))
+    many = planner.plan_many(fleet, stacked)
+    for k, d in enumerate((0.18, 0.20, 0.22)):
+        assert_plans_equal(scenario_at(many, k),
+                           planner.plan(fleet, Scenario(d, 0.04, B)),
+                           rtol=1e-10)
+
+
+def test_optimal_via_registry_matches_plan_optimal(fleet):
+    p_reg = Planner(PlannerConfig(policy="optimal")).plan(
+        fleet, Scenario(0.2, 0.04, B))
+    p_fn = plan_optimal(fleet, 0.2, 0.04, B)
+    np.testing.assert_array_equal(np.asarray(p_reg.m_sel), np.asarray(p_fn.m_sel))
+    np.testing.assert_array_equal(np.asarray(p_reg.feasible),
+                                  np.asarray(p_fn.feasible))
+    np.testing.assert_allclose(float(p_reg.total_energy),
+                               float(p_fn.total_energy), rtol=1e-8)
+
+
+def test_optimal_is_batch_dispatchable(fleet):
+    """New capability: the old plan_grid rejected "optimal" outright."""
+    deadlines = (0.18, 0.22)
+    grid = plan_grid(fleet, deadlines, 0.04, B, policy="optimal")
+    assert grid.total_energy.shape == (2, 1, 1)
+    for i, d in enumerate(deadlines):
+        ref = plan_optimal(fleet, d, 0.04, B)
+        cell = plan_at(grid, i, 0, 0)
+        np.testing.assert_array_equal(np.asarray(cell.m_sel),
+                                      np.asarray(ref.m_sel))
+        np.testing.assert_allclose(float(cell.total_energy),
+                                   float(ref.total_energy), rtol=1e-8)
+
+
+def test_grid_is_sugar_over_plan_many(fleet):
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    deadlines, epss = (0.18, 0.22), (0.02, 0.06)
+    grid = planner.grid(fleet, deadlines, epss, B)
+    zipped = planner.plan_many(
+        fleet, [Scenario(d, e, B) for d in deadlines for e in epss])
+    for i in range(2):
+        for j in range(2):
+            assert_plans_equal(plan_at(grid, i, j, 0),
+                               scenario_at(zipped, 2 * i + j))
+
+
+def test_plan_many_new_values_hit_jit_cache(fleet):
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    planner.plan_many(fleet, hetero_scenarios(fleet.num_devices))
+    size = api.plan_many_jit._cache_size()
+    shifted = [Scenario(d + 0.01, e, b) for d, e, b in
+               [tuple(s) for s in hetero_scenarios(fleet.num_devices)]]
+    planner.plan_many(fleet, shifted)
+    assert api.plan_many_jit._cache_size() == size
+
+
+def test_policy_registry_contents():
+    assert set(available_policies()) >= {
+        "robust", "robust_exact", "gaussian", "worst_case", "optimal"}
+    pol = get_policy("worst_case")
+    assert pol.sigma_model == "hard" and pol.ub_k > 0.0
+    assert get_policy(pol) is pol  # Policy instances pass through
+    assert get_policy("optimal").solve is not None
+
+
+def test_custom_policy_registers_and_plans(fleet):
+    """New policies are a register_policy call — no _alternation edits."""
+    from repro.core.planner import exact_partition_step, register_policy
+
+    name = "gaussian_test_variant"
+    if name not in available_policies():
+        register_policy(Policy(name, sigma_model="gaussian",
+                               partition=exact_partition_step))
+    p = Planner(PlannerConfig(policy=name, outer_iters=3)).plan(
+        fleet, Scenario(0.2, 0.04, B))
+    ref = plan(fleet, 0.2, 0.04, B, policy="gaussian", outer_iters=3)
+    assert_plans_equal(p, ref)
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown policy"):
+        PlannerConfig(policy="does_not_exist")
+
+
+def test_invalid_iters_raise():
+    with pytest.raises(ValueError, match="outer_iters"):
+        PlannerConfig(outer_iters=0)
+    with pytest.raises(ValueError, match="pccp_iters"):
+        PlannerConfig(pccp_iters=0)
+
+
+def test_init_m_bounds_validated(fleet):
+    m_max = fleet.num_points - 1
+    for bad in (-1, m_max + 1, 99):
+        with pytest.raises(ValueError, match="init_m"):
+            plan(fleet, 0.2, 0.04, B, init_m=bad, multi_start=False)
+    # boundary values are fine
+    plan(fleet, 0.2, 0.04, B, policy="robust_exact", outer_iters=1,
+         init_m=m_max, multi_start=False)
+    plan(fleet, 0.2, 0.04, B, policy="robust_exact", outer_iters=1,
+         init_m=0, multi_start=False)
+
+
+def test_plan_at_validates_shape_and_bounds(fleet):
+    single = plan(fleet, 0.2, 0.04, B, policy="robust_exact", outer_iters=3)
+    with pytest.raises(ValueError, match="grid Plan"):
+        plan_at(single, 0)
+    grid = plan_grid(fleet, (0.18, 0.22), 0.04, B, policy="robust_exact",
+                     outer_iters=3)
+    with pytest.raises(IndexError, match="out of range"):
+        plan_at(grid, 5, 0, 0)
+    with pytest.raises(IndexError, match="out of range"):
+        plan_at(grid, 0, 0, 3)
+    zipped = Planner(PlannerConfig(policy="robust_exact", outer_iters=3)
+                     ).plan_many(fleet, [Scenario(0.2, 0.04, B)])
+    with pytest.raises(ValueError, match="scenario_at"):
+        plan_at(zipped, 0)
+    with pytest.raises(IndexError, match="out of range"):
+        scenario_at(zipped, 2)
+
+
+def test_malformed_scenario_batches_raise(fleet):
+    planner = Planner(PlannerConfig(policy="robust_exact"))
+    with pytest.raises(ValueError, match="at least one"):
+        planner.plan_many(fleet, [])
+    with pytest.raises(ValueError, match="leading"):
+        planner.plan_many(fleet, Scenario(0.2, 0.04, B))  # B not (K,)
+    with pytest.raises(ValueError, match="deadline"):
+        planner.plan_many(fleet, Scenario(jnp.zeros((5,)) + 0.2, 0.04,
+                                          jnp.full((3,), B)))
+    with pytest.raises(ValueError, match="deadline"):  # K ok, N wrong
+        planner.plan_many(fleet, Scenario(
+            jnp.full((3, fleet.num_devices + 1), 0.2), 0.04, jnp.full((3,), B)))
+    with pytest.raises(ValueError, match="per-device"):  # wrong-width leaf
+        planner.plan_many(fleet, [Scenario(jnp.full((2,), 0.2), 0.04, B)])
+    with pytest.raises(ValueError, match="scalar"):  # non-scalar budget
+        planner.plan(fleet, Scenario(0.2, 0.04, jnp.full((2,), B)))
+
+
+def test_solve_policy_rejects_warm_starts(fleet):
+    """init_m has no effect on solve-override policies — loud, not silent."""
+    with pytest.raises(ValueError, match="no alternation"):
+        Planner(PlannerConfig(policy="optimal")).plan(
+            fleet, Scenario(0.2, 0.04, B), init_m=3)
+    with pytest.raises(ValueError, match="no alternation"):
+        Planner(PlannerConfig(policy="optimal", init_m=3)).plan(
+            fleet, Scenario(0.2, 0.04, B))
+
+
+def test_size_one_arrays_broadcast_like_scalars(fleet):
+    """Legacy plan() accepted shape-(1,) deadline/eps; the API must too."""
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    a = planner.plan(fleet, Scenario(jnp.asarray([0.2]), jnp.asarray([0.04]),
+                                     jnp.asarray([B])))
+    b = planner.plan(fleet, Scenario(0.2, 0.04, B))
+    assert_plans_equal(a, b)
+
+
+def test_legacy_wrappers_warn_deprecation(fleet):
+    with pytest.warns(DeprecationWarning, match="core.plan is deprecated"):
+        plan(fleet, 0.2, 0.04, B, policy="robust_exact", outer_iters=1,
+             multi_start=False)
+    with pytest.warns(DeprecationWarning, match="plan_grid is deprecated"):
+        plan_grid(fleet, 0.2, 0.04, B, policy="robust_exact", outer_iters=1,
+                  multi_start=False)
+
+
+def test_traced_init_m_still_works(fleet):
+    """Bounds checking must not concretize traced warm starts."""
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=2,
+                                    multi_start=False))
+    sc = Scenario(0.2, 0.04, B)
+
+    @jax.jit
+    def warm(m0):
+        return planner.plan(fleet, sc, init_m=m0).total_energy
+
+    e_traced = float(warm(jnp.full((fleet.num_devices,), 4, jnp.int32)))
+    e_direct = float(planner.plan(fleet, sc, init_m=4).total_energy)
+    np.testing.assert_allclose(e_traced, e_direct, rtol=1e-10)

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.data.pipeline import DataConfig, SyntheticTokens, make_batch
 from repro.models import transformer as T

@@ -1,7 +1,6 @@
 """Loop-aware HLO analyzer: verify against a known scanned program."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze, split_computations
 

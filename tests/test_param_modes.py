@@ -1,7 +1,6 @@
 """Serving parameter-layout modes (§Perf A3/C3)."""
 from types import SimpleNamespace
 
-import pytest
 
 from repro.parallel import sharding as shd
 
@@ -26,7 +25,6 @@ def test_resident_strips_pure_fsdp_only():
     spec = _spec(["layers", "attn", "wq"], (22, 2048, 4096), m)
     assert spec == (None, "data", "model")
     # simulate the strip logic via param_shardings' mode handling:
-    from jax.sharding import PartitionSpec as P
     fs = {"data"}
     stripped = tuple(None if (e is not None and (set(e) if isinstance(e, tuple) else {e}) <= fs)
                      else e for e in spec)

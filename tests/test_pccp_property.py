@@ -1,6 +1,5 @@
 """Property-based tests of the PCCP partitioning solver on random
 synthetic instances (hypothesis)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from _hyp import given, settings, st

@@ -70,9 +70,11 @@ def test_same_shape_fleet_hits_jit_cache(fleet):
 
 
 def test_plan_grid_scenario_scalars_hit_jit_cache(fleet):
-    from repro.core import batch
+    """Grid planning is sugar over the zipped plan_many jit entry; new
+    scenario values (same shapes) must not retrace it."""
+    from repro.core import api
     kw = dict(policy="robust_exact", outer_iters=3)
     plan_grid(fleet, DEADLINES, EPSS, B, **kw)
-    size = batch._grid_impl._cache_size()
+    size = api.plan_many_jit._cache_size()
     plan_grid(fleet, (0.19, 0.21, 0.23), (0.03, 0.05, 0.07), 12e6, **kw)
-    assert batch._grid_impl._cache_size() == size
+    assert api.plan_many_jit._cache_size() == size

@@ -1,6 +1,5 @@
 """Algorithm 2 planner: paper claims as testable properties."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -68,7 +68,6 @@ def test_feasible_flag_consistent_with_returned_bandwidth(fleet):
     ``feasible`` must be rechecked against the *returned* (b, f), not the
     pre-rescale solution. Tight B makes the price active so the rescale
     actually fires."""
-    from repro.core.ccp import SIGMA_FNS
     m = jnp.full((6,), 7, jnp.int32)
     for B in (2e6, 5e6, 10e6):
         a = allocate(fleet, m, 0.2, 0.02, B)

@@ -1,7 +1,6 @@
 """End-to-end system behaviour: the paper's technique driving two-tier
 serving of zoo architectures, engine measurement feedback, and the
 cost-model bridge."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -40,6 +39,33 @@ def test_two_tier_deployment_plans_and_validates(arch):
     assert rep["max_violation"] <= dep.eps + 0.01
     assert rep["total_energy_j"] >= 0.0
     assert bool(p.feasible.all())
+
+
+def test_validate_scores_grid_cells_against_their_own_deadline():
+    """A grid sweep's cells must be validated against their cell deadline,
+    not silently against the deployment scalar (the old behaviour)."""
+    from repro.core import plan_at
+
+    dep = TwoTierDeployment(get_config("mamba2-130m"), num_devices=4,
+                            deadline_s=2.0, eps=0.05, bandwidth_hz=100e6)
+    deadlines = (0.5, 2.0)
+    grid, fleet = dep.plan_grid(deadlines=deadlines, policy="robust_exact",
+                                outer_iters=3)
+    for i, d in enumerate(deadlines):
+        p = plan_at(grid, i, 0, 0)
+        rep = dep.validate(p, fleet, deadline=d)
+        assert rep["max_violation"] <= dep.eps + 0.01, d
+    # default arg keeps the old behaviour (deployment scalar)
+    p = plan_at(grid, 1, 0, 0)
+    assert dep.validate(p, fleet) == dep.validate(p, fleet, deadline=2.0)
+    # per-device deadlines validate per device (Scenario leaves may be (N,))
+    from repro.core import Scenario, scenario_at
+
+    dls = jnp.linspace(1.0, 2.0, dep.num_devices)
+    het, fleet = dep.plan_many([Scenario(dls, dep.eps, dep.bandwidth_hz)],
+                               policy="robust_exact", outer_iters=3)
+    rep = dep.validate(scenario_at(het, 0), fleet, deadline=dls)
+    assert rep["max_violation"] <= dep.eps + 0.01
 
 
 def test_serving_engine_batches_and_measures(rng):

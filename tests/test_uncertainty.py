@@ -1,7 +1,6 @@
 """Inference-time statistics (paper §IV): NLS fit, max-variance rule."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.uncertainty import (
     fit_g, max_covariance, max_variance, measure_profile, synth_samples,
