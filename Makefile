@@ -15,10 +15,11 @@ lint:
 	$(PY) -m ruff check src tests benchmarks examples
 
 # Quick perf smoke: planner runtime + PCCP convergence + scenario
-# batching. bench_runtime and bench_plan_grid write their sections of
-# the BENCH_planner.json artifact (ratio metrics).
+# batching + heterogeneous fleets. bench_runtime, bench_plan_grid and
+# bench_hetero write their sections of the BENCH_planner.json artifact
+# (ratio metrics). CI runs this and uploads the artifact per PR.
 bench-smoke:
-	$(PY) -m benchmarks.run --only runtime,convergence,plan_grid
+	$(PY) -m benchmarks.run --only runtime,convergence,plan_grid,hetero
 
 # Full paper-figure benchmark sweep
 bench:

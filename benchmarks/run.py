@@ -13,6 +13,8 @@
 #   bench_violation     — Fig. 13c/14c (violation probability ≤ ε)
 #   bench_plan_grid     — zipped 9-scenario plan_many vs sequential plans
 #                         (+ seed-loop continuity ratio → BENCH_planner.json)
+#   bench_hetero        — ragged mixed-model fleet: one compiled plan vs
+#                         per-group sequential (ratios → BENCH_planner.json)
 #   bench_two_tier      — beyond-paper: planner over zoo architectures
 #   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
 #   bench_kernels       — Pallas kernels vs references
@@ -33,6 +35,7 @@ MODULES = [
     "bench_risk_deadline",
     "bench_violation",
     "bench_plan_grid",
+    "bench_hetero",
     "bench_two_tier",
     "bench_channel",
     "bench_kernels",

@@ -14,11 +14,10 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.blocks import BlockChain, Fleet, Link, Platform
-from repro.core.channel import pathloss_gain
+from repro.core.blocks import BlockChain, Fleet
+from repro.core.fleet import DeviceSpec, FleetSpec
 
 MB_TO_BITS = 8.0e6
 GHZ = 1.0e9
@@ -77,21 +76,16 @@ def resnet152_chain() -> BlockChain:
     )
 
 
+def _spec(chain: BlockChain, platform: dict, n_devices: int, name: str) -> DeviceSpec:
+    return DeviceSpec(chain=chain, kappa=platform["kappa"],
+                      f_min_hz=platform["f_min"], f_max_hz=platform["f_max"],
+                      p_tx_w=TX_POWER_W, count=n_devices, name=name)
+
+
 def _fleet(chain: BlockChain, platform: dict, key, n_devices: int) -> Fleet:
     """Devices uniform in a 400 m × 400 m square, edge node at the center."""
-    xy = jax.random.uniform(key, (n_devices, 2), jnp.float64, -AREA_M / 2, AREA_M / 2)
-    r = jnp.maximum(jnp.linalg.norm(xy, axis=-1), 5.0)  # ≥ 5 m
-    gain = pathloss_gain(r)
-    tile = lambda a: jnp.broadcast_to(jnp.asarray(a, jnp.float64), (n_devices,) + jnp.shape(a))
-    return Fleet(
-        chain=BlockChain(*[tile(x) for x in chain]),
-        platform=Platform(
-            kappa=tile(platform["kappa"]),
-            f_min=tile(platform["f_min"]),
-            f_max=tile(platform["f_max"]),
-        ),
-        link=Link(p_tx=tile(TX_POWER_W), gain=gain),
-    )
+    return FleetSpec((_spec(chain, platform, n_devices, "paper"),),
+                     area_m=AREA_M).build(key)
 
 
 def alexnet_fleet(key, n_devices: int) -> Fleet:
@@ -108,40 +102,20 @@ ALEXNET_SCENARIO = PaperScenario("alexnet", alexnet_fleet, 10e6, 0.180, 0.02)
 RESNET152_SCENARIO = PaperScenario("resnet152", resnet152_fleet, 30e6, 0.120, 0.04)
 
 
-def _pad_chain(chain: BlockChain, to_points: int) -> BlockChain:
-    """Pad a chain to ``to_points`` by repeating the terminal point (a
-    duplicate full-local partition point — harmless for the planner)."""
-    pad = to_points - chain.num_points
-    if pad <= 0:
-        return chain
-    rep = lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
-    return BlockChain(*[rep(x) for x in chain])
+def mixed_spec(n_devices: int) -> FleetSpec:
+    """Heterogeneous spec: AlexNet on the NX CPU (9 points) and ResNet152
+    on the NX GPU (10 points) sharing one bandwidth budget. A genuinely
+    *ragged* fleet — the AlexNet rows are padded to 10 points with a
+    ``valid`` mask (the paper's fleets are homogeneous; the planner
+    handles per-device chains/platforms/M_n natively)."""
+    n_alex = (n_devices + 1) // 2
+    return FleetSpec(
+        (_spec(alexnet_chain(), ALEXNET_PLATFORM, n_alex, "alexnet"),
+         _spec(resnet152_chain(), RESNET152_PLATFORM, n_devices - n_alex,
+               "resnet152")),
+        area_m=AREA_M)
 
 
 def mixed_fleet(key, n_devices: int) -> Fleet:
-    """Heterogeneous fleet: even devices run AlexNet on the NX CPU, odd
-    devices ResNet152 on the NX GPU (the paper's fleets are homogeneous;
-    the planner handles per-device chains/platforms natively)."""
-    a_chain = _pad_chain(alexnet_chain(), 10)
-    r_chain = resnet152_chain()
-    xy = jax.random.uniform(key, (n_devices, 2), jnp.float64, -AREA_M / 2, AREA_M / 2)
-    r = jnp.maximum(jnp.linalg.norm(xy, axis=-1), 5.0)
-    is_alex = (jnp.arange(n_devices) % 2) == 0
-
-    def pick(a_val, r_val):
-        a = jnp.broadcast_to(jnp.asarray(a_val, jnp.float64),
-                             (n_devices,) + jnp.shape(a_val))
-        b = jnp.broadcast_to(jnp.asarray(r_val, jnp.float64),
-                             (n_devices,) + jnp.shape(r_val))
-        mask = is_alex.reshape((n_devices,) + (1,) * (a.ndim - 1))
-        return jnp.where(mask, a, b)
-
-    chain = BlockChain(*[pick(a, b) for a, b in zip(a_chain, r_chain)])
-    plat = Platform(
-        kappa=pick(ALEXNET_PLATFORM["kappa"], RESNET152_PLATFORM["kappa"]),
-        f_min=pick(ALEXNET_PLATFORM["f_min"], RESNET152_PLATFORM["f_min"]),
-        f_max=pick(ALEXNET_PLATFORM["f_max"], RESNET152_PLATFORM["f_max"]),
-    )
-    return Fleet(chain=chain, platform=plat,
-                 link=Link(p_tx=jnp.full((n_devices,), TX_POWER_W, jnp.float64),
-                           gain=pathloss_gain(r)))
+    """Padded ragged two-model fleet (see ``mixed_spec``)."""
+    return mixed_spec(n_devices).build(key)

@@ -6,7 +6,8 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core.blocks import BlockChain, Fleet, Link, Platform, broadcast_fleet, covariance  # noqa: E402,F401
+from repro.core.blocks import BlockChain, Fleet, Link, Platform, broadcast_fleet, covariance, pad_chain  # noqa: E402,F401
+from repro.core.fleet import DeviceSpec, FleetSpec  # noqa: E402,F401
 from repro.core.ccp import SIGMA_FNS, sigma_cantelli, sigma_gaussian  # noqa: E402,F401
 from repro.core.planner import (  # noqa: E402,F401
     Plan,
@@ -25,6 +26,7 @@ from repro.core.montecarlo import violation_report  # noqa: E402,F401
 
 __all__ = [
     "BlockChain", "Fleet", "Link", "Platform", "broadcast_fleet", "covariance",
+    "pad_chain", "DeviceSpec", "FleetSpec",
     "SIGMA_FNS", "sigma_cantelli", "sigma_gaussian",
     "Plan", "plan", "plan_optimal", "plan_grid", "plan_at",
     "Scenario", "PlannerConfig", "Planner", "scenario_at",

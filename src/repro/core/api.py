@@ -22,6 +22,12 @@ Policies dispatch through the :class:`repro.core.planner.Policy` registry,
 so ``"optimal"`` batches like any other policy and new policies are a
 ``register_policy`` call away.
 
+Fleets may be **ragged** (mixed models with different partition-point
+counts ``M_n`` — DESIGN.md §fleet): the ``valid`` mask and per-device
+``num_points`` are ordinary *traced* pytree leaves of ``Fleet``, so two
+mixed fleets with the same padded shapes share one compiled program, and
+mask values never appear in the jit cache key.
+
 The legacy ``core.plan`` / ``core.batch.plan_grid`` functions are
 deprecated delegating wrappers over this module.
 """

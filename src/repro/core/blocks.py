@@ -18,10 +18,29 @@ The per-point arrays have length ``M+1`` (index = partition point):
 
 A ``Fleet`` stacks N devices (leading axis N) plus per-device platform and
 radio-link parameters; it is the single input bundle the planner consumes.
+
+Fleets may be **ragged** (DESIGN.md §fleet): devices can run different
+models with different numbers of partition points ``M_n``. Chains are
+padded to the fleet-wide ``max(M_n)+1`` width and two extra leaves mark
+the padding:
+
+- ``valid``      — (N, max_points) bool; True where the point is a real
+                   partition point of device n's chain, False on padding.
+- ``num_points`` — (N,) int32; ``M_n + 1`` valid points per device.
+
+Both are *traced pytree leaves* (not statics), so two mixed fleets with
+the same padded shapes share one compiled program. ``None`` (the default)
+means "all points valid" and is the homogeneous fast path: every consumer
+gates its masking on ``valid is None`` at trace time, and an all-valid
+mask is a numerical no-op (pure ``where``-selects — bit-identical to the
+unmasked program; pinned by ``tests/golden/seed_plans.json``).
+
+``repro.core.fleet`` (``DeviceSpec``/``FleetSpec``) is the builder layer
+that composes heterogeneous device groups into padded fleets.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 from jax import Array
@@ -40,6 +59,25 @@ class BlockChain(NamedTuple):
         return self.d_bits.shape[-1]
 
 
+def pad_chain(chain: BlockChain, to_points: int) -> BlockChain:
+    """Pad a single chain to ``to_points`` by repeating the terminal point.
+
+    The duplicated full-local points are *placeholders*: builders mark them
+    invalid in ``Fleet.valid`` and the planner masks them out. Repeating
+    the terminal point (rather than padding zeros/inf) keeps every padded
+    entry finite and physically plausible, so masked tables stay
+    well-conditioned inside the PCCP barrier solves.
+    """
+    pad = to_points - chain.num_points
+    if pad < 0:
+        raise ValueError(
+            f"cannot pad a {chain.num_points}-point chain down to {to_points}")
+    if pad == 0:
+        return chain
+    rep = lambda a: jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+    return BlockChain(*[rep(x) for x in chain])
+
+
 class Platform(NamedTuple):
     """Local compute platform (paper Table II + κ measurements)."""
 
@@ -56,35 +94,56 @@ class Link(NamedTuple):
 
 
 class Fleet(NamedTuple):
-    """N devices: chains (N, M+1), platforms (N,), links (N,)."""
+    """N devices: chains (N, max_points), platforms (N,), links (N,).
+
+    ``valid``/``num_points`` mark ragged per-device chains (module
+    docstring); ``None`` means every point is valid on every device.
+    """
 
     chain: BlockChain
     platform: Platform
     link: Link
+    valid: Optional[Array] = None  # (N, max_points) bool, or None
+    num_points: Optional[Array] = None  # (N,) int32 = M_n + 1, or None
 
     @property
     def num_devices(self) -> int:
         return self.chain.d_bits.shape[0]
 
     @property
-    def num_points(self) -> int:
+    def max_points(self) -> int:
+        """Padded point-table width max(M_n) + 1 (a static shape)."""
         return self.chain.d_bits.shape[-1]
+
+    @property
+    def points_per_device(self) -> Array:
+        """(N,) int32 valid-point counts (materialized when ``None``)."""
+        if self.num_points is not None:
+            return self.num_points
+        return jnp.full((self.num_devices,), self.max_points, jnp.int32)
+
+    @property
+    def valid_mask(self) -> Array:
+        """(N, max_points) bool mask (materialized when ``None``)."""
+        if self.valid is not None:
+            return self.valid
+        return jnp.ones((self.num_devices, self.max_points), bool)
 
 
 def broadcast_fleet(chain: BlockChain, platform: Platform, link_p: Array, link_gain: Array) -> Fleet:
-    """Tile a single chain/platform across N devices with per-device links."""
-    n = jnp.asarray(link_gain).shape[0]
+    """Tile a single chain/platform across N devices with per-device links.
 
-    def tile(a):
-        a = jnp.asarray(a, jnp.float64)
-        return jnp.broadcast_to(a, (n,) + a.shape)
+    Delegates to the ``FleetSpec`` builder (``repro.core.fleet``) — one
+    homogeneous group, explicit link gains.
+    """
+    from repro.core.fleet import DeviceSpec, FleetSpec
 
-    return Fleet(
-        chain=BlockChain(*[tile(x) for x in chain]),
-        platform=Platform(*[tile(jnp.asarray(x, jnp.float64)) for x in platform]),
-        link=Link(p_tx=jnp.broadcast_to(jnp.asarray(link_p, jnp.float64), (n,)),
-                  gain=jnp.asarray(link_gain, jnp.float64)),
-    )
+    gain = jnp.asarray(link_gain, jnp.float64)
+    spec = FleetSpec((DeviceSpec(chain=chain, kappa=platform.kappa,
+                                 f_min_hz=platform.f_min,
+                                 f_max_hz=platform.f_max,
+                                 count=int(gain.shape[0])),))
+    return spec.build(gains=gain, p_tx=jnp.asarray(link_p, jnp.float64))
 
 
 def covariance(chain: BlockChain, rho: float = 0.9) -> Array:

@@ -1,0 +1,197 @@
+"""Fleet builder layer: compose heterogeneous device groups into one
+padded :class:`~repro.core.blocks.Fleet` (DESIGN.md §fleet).
+
+The paper plans one DNN over N identical devices; the production regime
+is *mixed* populations — different models, different numbers of partition
+points ``M_n``, different compute platforms — sharing one uplink
+bandwidth budget. :class:`DeviceSpec` describes one homogeneous group
+(a chain — hand-measured or derived from a zoo ``ModelConfig`` via
+``DeviceSpec.from_model`` — plus DVFS platform and radio parameters);
+:class:`FleetSpec` stacks groups, pads every chain to the fleet-wide
+``max(M_n)+1`` points, and emits the ragged ``Fleet`` with its ``valid``
+mask and per-device ``num_points``.
+
+This is the single tiling implementation: ``blocks.broadcast_fleet`` and
+``serve.partitioned`` deployments both route through it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import BlockChain, Fleet, Link, Platform, pad_chain
+from repro.core.channel import pathloss_gain
+
+__all__ = ["DeviceSpec", "FleetSpec"]
+
+
+def _f64(v):
+    return jnp.asarray(v, jnp.float64)
+
+
+@dataclass(frozen=True, eq=False)
+class DeviceSpec:
+    """One homogeneous device group: ``count`` devices running the same
+    chain on the same platform class.
+
+    ``chain`` leaves are per-point ``(M_g+1,)`` arrays; link gains are
+    per-device and supplied (or sampled) by ``FleetSpec.build``.
+    """
+
+    chain: BlockChain
+    kappa: float = 2.8e-27  # W / (cycle/s)^3
+    f_min_hz: float = 0.2e9
+    f_max_hz: float = 1.4e9
+    p_tx_w: float = 1.0
+    count: int = 1
+    name: str = "device"
+
+    def __post_init__(self):
+        if self.count < 1:
+            raise ValueError(f"DeviceSpec.count must be >= 1, got {self.count}")
+
+    @classmethod
+    def from_model(
+        cls,
+        cfg,
+        *,
+        count: int = 1,
+        num_blocks: int = 8,
+        batch: int = 1,
+        seq_len: int = 256,
+        device=None,
+        edge=None,
+        kappa: float = 2.8e-27,
+        f_min_hz: float = 0.2e9,
+        f_max_hz: float = 1.4e9,
+        p_tx_w: float = 1.0,
+        seed: int = 0,
+        vm_time_scale: float = 1.0,
+        name: Optional[str] = None,
+    ) -> "DeviceSpec":
+        """Build a group from a zoo ``ModelConfig`` via the analytic cost
+        model (``models.costmodel``). ``device``/``edge`` are
+        ``TierProfile``s (defaulting to the costmodel tiers);
+        ``vm_time_scale`` models a congested shared edge (mean × s,
+        variance × s²).
+        """
+        # deferred import: core.fleet is imported by repro.core's __init__,
+        # models.costmodel imports core.blocks — keep the layering acyclic.
+        from repro.models.costmodel import (
+            DEVICE_TIER,
+            EDGE_TIER,
+            block_chain_from_config,
+        )
+
+        chain = block_chain_from_config(
+            cfg, batch=batch, seq_len=seq_len, num_blocks=num_blocks,
+            device=DEVICE_TIER if device is None else device,
+            edge=EDGE_TIER if edge is None else edge,
+            f_mid_hz=0.5 * (f_min_hz + f_max_hz), seed=seed,
+        )
+        if vm_time_scale != 1.0:
+            chain = chain._replace(t_vm=chain.t_vm * vm_time_scale,
+                                   v_vm=chain.v_vm * vm_time_scale**2)
+        return cls(chain=chain, kappa=kappa, f_min_hz=f_min_hz,
+                   f_max_hz=f_max_hz, p_tx_w=p_tx_w, count=count,
+                   name=name if name is not None else getattr(cfg, "name", "device"))
+
+
+@dataclass(frozen=True, eq=False)
+class FleetSpec:
+    """An ordered composition of :class:`DeviceSpec` groups.
+
+    ``build`` emits the padded ragged ``Fleet``: group g's devices occupy
+    the contiguous index range ``slice(*group_slices[g])``, chains are
+    padded to ``max_points`` with the terminal-point repeat of
+    ``blocks.pad_chain``, and ``valid``/``num_points`` record the real
+    per-device widths. A single-group spec builds a homogeneous fleet
+    whose mask is all-valid — leaf-identical to the legacy tiling.
+    """
+
+    groups: Tuple[DeviceSpec, ...]
+    area_m: float = 400.0  # device positions uniform in a square (§VI-A)
+    min_dist_m: float = 5.0
+
+    def __post_init__(self):
+        if not self.groups:
+            raise ValueError("FleetSpec needs at least one DeviceSpec group")
+        object.__setattr__(self, "groups", tuple(self.groups))
+
+    @property
+    def num_devices(self) -> int:
+        return sum(g.count for g in self.groups)
+
+    @property
+    def max_points(self) -> int:
+        return max(g.chain.num_points for g in self.groups)
+
+    def group_slices(self) -> list:
+        """Per-group (start, stop) device-index ranges."""
+        out, start = [], 0
+        for g in self.groups:
+            out.append((start, start + g.count))
+            start += g.count
+        return out
+
+    def device_names(self) -> list:
+        """(N,) group name per device (reporting/validation labels)."""
+        return [g.name for g in self.groups for _ in range(g.count)]
+
+    def build(self, key=None, *, gains=None, p_tx=None) -> Fleet:
+        """Materialize the padded ``Fleet``.
+
+        Link gains come from ``gains`` (explicit per-device array) or from
+        device positions sampled uniformly in the ``area_m`` square with
+        ``key`` (the §VI-A scenario; distance floored at ``min_dist_m``).
+        ``p_tx`` optionally overrides the per-group transmit powers with a
+        per-device array.
+        """
+        n, mp = self.num_devices, self.max_points
+        if gains is None:
+            if key is None:
+                raise ValueError("FleetSpec.build needs a PRNG key (to place "
+                                 "devices) or explicit link gains")
+            xy = jax.random.uniform(key, (n, 2), jnp.float64,
+                                    -self.area_m / 2, self.area_m / 2)
+            r = jnp.maximum(jnp.linalg.norm(xy, axis=-1), self.min_dist_m)
+            gains = pathloss_gain(r)
+        else:
+            gains = _f64(gains)
+            if gains.shape != (n,):
+                raise ValueError(
+                    f"gains must be ({n},) for this {n}-device spec, "
+                    f"got shape {gains.shape}")
+
+        def tile(a, count):
+            a = _f64(a)
+            return jnp.broadcast_to(a, (count,) + a.shape)
+
+        chains, plats, ptxs, valid, npts = [], [], [], [], []
+        for g in self.groups:
+            padded = pad_chain(g.chain, mp)
+            chains.append(BlockChain(*[tile(x, g.count) for x in padded]))
+            plats.append(Platform(kappa=tile(g.kappa, g.count),
+                                  f_min=tile(g.f_min_hz, g.count),
+                                  f_max=tile(g.f_max_hz, g.count)))
+            ptxs.append(tile(g.p_tx_w, g.count))
+            row = np.zeros(mp, bool)
+            row[: g.chain.num_points] = True
+            valid.append(np.broadcast_to(row, (g.count, mp)))
+            npts.append(np.full(g.count, g.chain.num_points, np.int32))
+
+        cat = lambda parts: jnp.concatenate(parts, axis=0)
+        chain = BlockChain(*[cat(xs) for xs in zip(*chains)])
+        platform = Platform(*[cat(xs) for xs in zip(*plats)])
+        p_tx = cat(ptxs) if p_tx is None else jnp.broadcast_to(_f64(p_tx), (n,))
+        return Fleet(
+            chain=chain,
+            platform=platform,
+            link=Link(p_tx=p_tx, gain=gains),
+            valid=jnp.asarray(np.concatenate(valid, axis=0)),
+            num_points=jnp.asarray(np.concatenate(npts, axis=0)),
+        )

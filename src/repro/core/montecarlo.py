@@ -58,6 +58,14 @@ def violation_report(
     var_scale: float = 0.8,
     channel_cv: float = 0.0,
 ) -> ViolationReport:
+    """Empirical per-device P{T > D} under moment-matched sampling.
+
+    Ragged fleets validate per device: the mask/``num_points`` leaves ride
+    in through ``fleet`` (traced, not static), ``select_point`` clamps
+    ``m_sel`` to each device's own chain so padded points are never
+    sampled, and ``deadline`` may be per-device ``(N,)`` so mixed
+    populations score against their own SLOs.
+    """
     sel = select_point(fleet, m_sel)
     n = m_sel.shape[0]
     mean_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)

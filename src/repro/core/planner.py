@@ -77,6 +77,14 @@ class Plan(NamedTuple):
 #: 500-sample campaigns corresponds to ≈ mean + 8·std for such tails.
 WORST_CASE_UB_K = 8.0
 
+#: Masking constants for ragged fleets (DESIGN.md §fleet): padded points
+#: get this energy/time in the per-point tables, so no argmin — feasible,
+#: least-bad, or PCCP-rounded — can ever select them (real times are
+#: ≪ 1e6 s, real energies ≪ 1e6 J), while staying finite so the PCCP
+#: inner barrier stays well-conditioned (∞ would poison its residuals).
+MASK_ENERGY_J = 1e6
+MASK_TIME_S = 1e6
+
 
 @dataclass(frozen=True)
 class Policy:
@@ -137,7 +145,14 @@ def available_policies() -> tuple[str, ...]:
 
 
 def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
-    """Per-(device, point) energy/time/variance tables at fixed (b, f)."""
+    """Per-(device, point) energy/time/variance tables at fixed (b, f).
+
+    For ragged fleets the padded points are masked here — the one place
+    every partition step (exact enumeration AND the PCCP barrier) reads
+    its tables from — with finite sentinel energy/time and zero variance,
+    so downstream selections can never land on padding. An all-valid mask
+    is a numerical no-op (pure selects).
+    """
     c, plat, link = fleet.chain, fleet.platform, fleet.link
     f = alloc.f[:, None]
     b = alloc.b[:, None]
@@ -152,6 +167,10 @@ def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
         std_off = channel.offload_time_std(
             c.d_bits, b, link.p_tx[:, None], link.gain[:, None], channel_cv)
         var_table = var_table + std_off**2
+    if fleet.valid is not None:  # ragged fleet: mask padded points
+        e_table = jnp.where(fleet.valid, e_table, MASK_ENERGY_J)
+        t_table = jnp.where(fleet.valid, t_table, MASK_TIME_S)
+        var_table = jnp.where(fleet.valid, var_table, 0.0)
     return e_table, t_table, var_table
 
 
@@ -207,21 +226,32 @@ def initial_points(fleet: Fleet, init_m, multi_start: bool):
     which makes every local prefix look deadline-infeasible in the
     partitioning step, while full-local allocates a high frequency from
     which all prefixes are reachable.
+
+    On ragged fleets every start is clamped to the device's own chain
+    (``m ≤ M_n``); the spread is derived from the padded width, so devices
+    with short chains see a denser spread near their terminal point.
     """
-    n, m1 = fleet.num_devices, fleet.num_points
+    n, m1 = fleet.num_devices, fleet.max_points
+
+    def clamp(m0):
+        if fleet.num_points is None:
+            return m0
+        return jnp.minimum(m0, fleet.num_points - 1)
+
     if multi_start and init_m is None:
         starts = default_starts(m1)
-        return jnp.broadcast_to(
-            jnp.asarray(starts, jnp.int32)[:, None], (len(starts), n)), True
+        m0 = jnp.broadcast_to(
+            jnp.asarray(starts, jnp.int32)[:, None], (len(starts), n))
+        return clamp(m0), True
     if init_m is None:
-        return jnp.full((n,), m1 - 1, jnp.int32), False
+        return clamp(jnp.full((n,), m1 - 1, jnp.int32)), False
     if not isinstance(init_m, jax.core.Tracer):  # bounds-check concrete starts
         arr = np.asarray(init_m)
         if arr.size and (arr.min() < 0 or arr.max() > m1 - 1):
             raise ValueError(
                 f"init_m must lie in [0, {m1 - 1}] (partition points 0..M for "
                 f"a {m1 - 1}-block chain); got {init_m!r}")
-    return jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,)), False
+    return clamp(jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))), False
 
 
 def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: Policy,
@@ -387,6 +417,10 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
         - c.t_vm
         - sigma[:, None] * jnp.sqrt(jnp.maximum(c.v_loc + c.v_vm, 0.0))
     )  # (N, M+1)
+    if fleet.valid is not None:  # ragged fleet: padded points are never
+        # feasible (negative budget ⇒ feas=False ⇒ cost=∞) nor the
+        # least-bad fallback (argmax over budgets)
+        budget_all = jnp.where(fleet.valid, budget_all, -MASK_TIME_S)
 
     inv_points = jax.vmap(
         lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B),

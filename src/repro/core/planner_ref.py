@@ -63,7 +63,7 @@ def plan_reference(
             plan_reference(fleet, deadline, eps, B, policy, outer_iters,
                            jnp.int32(s), pccp_iters, multi_start=False,
                            channel_cv=channel_cv, pccp_schedule=pccp_schedule)
-            for s in default_starts(fleet.num_points)
+            for s in default_starts(fleet.max_points)
         ]
 
         def score(p: Plan):
@@ -72,7 +72,7 @@ def plan_reference(
 
         return min(plans, key=score)
 
-    n, m1 = fleet.num_devices, fleet.num_points
+    n, m1 = fleet.num_devices, fleet.max_points
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
     pol = get_policy(policy)
@@ -84,6 +84,8 @@ def plan_reference(
         if init_m is None
         else jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))
     )
+    if fleet.num_points is not None:  # ragged fleet: clamp starts to M_n
+        m = jnp.minimum(m, fleet.num_points - 1)
 
     traces, pccp_trace = [], []
     feasible = jnp.ones((n,), bool)

@@ -57,8 +57,16 @@ class Allocation(NamedTuple):
 
 
 def select_point(fleet: Fleet, m_sel: jnp.ndarray) -> Selected:
-    """Gather chain columns at per-device partition points (N,)."""
+    """Gather chain columns at per-device partition points (N,).
+
+    On ragged fleets the gather index is clamped to each device's own
+    chain (``m ≤ M_n``), so a padded point can never be selected — every
+    consumer of a partition decision (``allocate``, the final plan
+    summary, ``montecarlo.violation_report``) inherits the guarantee.
+    """
     c = fleet.chain
+    if fleet.num_points is not None:
+        m_sel = jnp.minimum(m_sel, fleet.num_points - 1)
     take = lambda a: jnp.take_along_axis(a, m_sel[:, None], axis=-1)[:, 0]
     return Selected(
         d_bits=take(c.d_bits),

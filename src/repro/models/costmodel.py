@@ -92,8 +92,10 @@ class TierProfile:
 
 
 # A Jetson-class device tier and an RTX/TPU-class edge tier (defaults used
-# by examples/tests; launch scripts may override).
+# by examples/tests; launch scripts may override). PHONE_TIER is a weaker,
+# jitterier smartphone-class NPU for mixed-population deployments.
 DEVICE_TIER = TierProfile(flops_per_cycle=220.0, cv=0.10, eff_jitter=0.15)
+PHONE_TIER = TierProfile(flops_per_cycle=60.0, cv=0.18, eff_jitter=0.25)
 EDGE_TIER = TierProfile(flops_per_cycle=40_000.0, cv=0.03, eff_jitter=0.05, clock_hz=2.0e9)
 
 

@@ -55,8 +55,13 @@ class ServingEngine:
 
     # -- batching ----------------------------------------------------------
     def schedule(self, queue: List[Request]) -> List[List[Request]]:
-        """Greedy deadline-aware batching (EDF order, fixed max batch)."""
-        ordered = sorted(queue, key=lambda r: r.deadline_s)
+        """Greedy deadline-aware batching (EDF order, fixed max batch).
+
+        Deadline ties break by ``uid`` so batch composition is a function
+        of the queue's *contents*, not its arrival order (Python's sort is
+        stable, so equal deadlines would otherwise keep insertion order).
+        """
+        ordered = sorted(queue, key=lambda r: (r.deadline_s, r.uid))
         return [ordered[i : i + self.max_batch] for i in range(0, len(ordered), self.max_batch)]
 
     # -- execution ---------------------------------------------------------

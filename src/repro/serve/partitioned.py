@@ -2,8 +2,9 @@
 feature.
 
 A weak "device" tier (DVFS-scalable, battery-powered) and a strong "edge"
-tier serve the same model. For a population of devices (heterogeneous
-radio links), the robust planner picks per-device:
+tier serve model inference. For a population of devices (heterogeneous
+radio links, and — since the ragged-fleet refactor — heterogeneous
+*models and platforms*), the robust planner picks per-device:
 
   * the partition point m (how many transformer blocks run on-device),
   * the device clock f, and the uplink bandwidth share b,
@@ -11,6 +12,17 @@ radio links), the robust planner picks per-device:
 minimizing total device energy subject to P{latency ≤ D} ≥ 1−ε with only
 (mean, variance) knowledge of block times — uncertain inference time is a
 measured reality on shared serving tiers (batching jitter, stragglers).
+
+Two deployment shapes share one planning surface
+(:class:`_DeploymentBase`):
+
+- :class:`TwoTierDeployment` — one model on one device class (the
+  paper's setting), now built through the ``FleetSpec`` builder.
+- :class:`MixedTwoTierDeployment` — a mixed population
+  (:class:`Population` fractions of different models × tiers, e.g. 60%
+  tinyllama on Jetson-class + 40% mamba2 on phone-class) sharing ONE
+  bandwidth budget B; the planner solves the whole ragged fleet in one
+  compiled program, and Monte-Carlo validation reports per device.
 
 Planning goes through the first-class Scenario/Planner API
 (``repro.core.api``): ``plan`` is the deployment's default scenario,
@@ -25,7 +37,7 @@ from ``ServingEngine`` measurements (``measured_chain``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Union
 
 import jax
@@ -35,56 +47,35 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import violation_report
 from repro.core.api import Planner, PlannerConfig, Scenario
-from repro.core.blocks import BlockChain, Fleet, Link, Platform
-from repro.core.channel import pathloss_gain
-from repro.models.costmodel import DEVICE_TIER, EDGE_TIER, TierProfile, block_chain_from_config
+from repro.core.blocks import BlockChain, Fleet
+from repro.core.fleet import DeviceSpec, FleetSpec
+from repro.models.costmodel import DEVICE_TIER, EDGE_TIER, PHONE_TIER, TierProfile
+
+__all__ = [
+    "TwoTierDeployment", "MixedTwoTierDeployment", "Population",
+    "measured_chain", "PHONE_TIER",
+]
 
 
-@dataclass
-class TwoTierDeployment:
-    cfg: ModelConfig
-    num_devices: int = 12
-    num_blocks: int = 8
-    batch: int = 1
-    seq_len: int = 256
-    bandwidth_hz: float = 50e6
-    deadline_s: float = 1.0
-    eps: float = 0.05
-    device: TierProfile = DEVICE_TIER
-    edge: TierProfile = EDGE_TIER
-    f_min_hz: float = 0.2e9
-    f_max_hz: float = 1.4e9
-    kappa: float = 2.8e-27
-    area_m: float = 400.0
-    seed: int = 0
-    #: the paper assumes one dedicated VM per device (§III-B). With a
-    #: *shared* edge accelerator the effective VM time scales with the
-    #: fleet — this is what makes interior splits pay off for transformers
-    #: (whose boundary activations, unlike CNN features, never shrink).
-    dedicated_vm: bool = True
+class _DeploymentBase:
+    """Shared planning/validation surface over ``self.spec()``.
+
+    Subclasses provide ``spec() -> FleetSpec`` plus the scenario scalars
+    (``deadline_s``, ``eps``, ``bandwidth_hz``, ``seed``).
+    """
+
+    def spec(self) -> FleetSpec:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def device_names(self) -> list:
+        """(N,) population label per device. Subclasses override with a
+        chain-free implementation — the default builds the full spec,
+        which runs the analytic cost model per group."""
+        return self.spec().device_names()
 
     def fleet(self) -> Fleet:
-        chain = block_chain_from_config(
-            self.cfg, batch=self.batch, seq_len=self.seq_len,
-            num_blocks=self.num_blocks, device=self.device, edge=self.edge,
-            f_mid_hz=0.5 * (self.f_min_hz + self.f_max_hz), seed=self.seed,
-        )
-        if not self.dedicated_vm:
-            scale = float(self.num_devices)
-            chain = chain._replace(t_vm=chain.t_vm * scale,
-                                   v_vm=chain.v_vm * scale**2)
-        key = jax.random.PRNGKey(self.seed)
-        xy = jax.random.uniform(key, (self.num_devices, 2), jnp.float64,
-                                -self.area_m / 2, self.area_m / 2)
-        r = jnp.maximum(jnp.linalg.norm(xy, axis=-1), 5.0)
-        n = self.num_devices
-        tile = lambda a: jnp.broadcast_to(jnp.asarray(a, jnp.float64), (n,) + jnp.shape(a))
-        return Fleet(
-            chain=BlockChain(*[tile(x) for x in chain]),
-            platform=Platform(kappa=tile(self.kappa), f_min=tile(self.f_min_hz),
-                              f_max=tile(self.f_max_hz)),
-            link=Link(p_tx=tile(1.0), gain=pathloss_gain(r)),
-        )
+        """The deployment's (possibly ragged) padded fleet."""
+        return self.spec().build(jax.random.PRNGKey(self.seed))
 
     def scenario(self) -> Scenario:
         """The deployment's configured default scenario."""
@@ -134,11 +125,7 @@ class TwoTierDeployment:
         validating plans from a grid/batch sweep, otherwise the report
         would silently score every cell against ``self.deadline_s``.
         """
-        key = jax.random.PRNGKey(self.seed + 1) if key is None else key
-        deadline = self.deadline_s if deadline is None else deadline
-        deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64),
-                                    (fleet.num_devices,))
-        vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline, dist=dist)
+        vr, _ = self._mc_report(p, fleet, key, dist, deadline)
         return {
             "total_energy_j": float(p.total_energy),
             "max_violation": float(vr.rate.max()),
@@ -146,6 +133,172 @@ class TwoTierDeployment:
             "mean_latency_s": float(vr.mean_time.mean()),
             "p95_latency_s": float(vr.p95_time.max()),
         }
+
+    def validate_per_device(self, p, fleet, key=None, dist: str = "gamma",
+                            deadline=None) -> Dict[str, object]:
+        """Per-device Monte-Carlo validation (mixed populations report
+        each device against its own deadline and model group).
+
+        Returns arrays of length N: ``violation`` (empirical P{T > D_n}),
+        ``mean_latency_s``, ``p95_latency_s``, ``m`` (partition points),
+        ``group`` (population name per device) and ``ok`` (violation ≤ ε).
+        """
+        vr, _ = self._mc_report(p, fleet, key, dist, deadline)
+        return {
+            "group": list(self.device_names()),
+            "m": np.asarray(p.m_sel).tolist(),
+            "violation": np.asarray(vr.rate),
+            "mean_latency_s": np.asarray(vr.mean_time),
+            "p95_latency_s": np.asarray(vr.p95_time),
+            "ok": np.asarray(vr.rate <= self.eps),
+        }
+
+    def _mc_report(self, p, fleet, key, dist, deadline):
+        key = jax.random.PRNGKey(self.seed + 1) if key is None else key
+        deadline = self.deadline_s if deadline is None else deadline
+        deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64),
+                                    (fleet.num_devices,))
+        vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline, dist=dist)
+        return vr, deadline
+
+
+@dataclass
+class TwoTierDeployment(_DeploymentBase):
+    cfg: ModelConfig
+    num_devices: int = 12
+    num_blocks: int = 8
+    batch: int = 1
+    seq_len: int = 256
+    bandwidth_hz: float = 50e6
+    deadline_s: float = 1.0
+    eps: float = 0.05
+    device: TierProfile = DEVICE_TIER
+    edge: TierProfile = EDGE_TIER
+    f_min_hz: float = 0.2e9
+    f_max_hz: float = 1.4e9
+    kappa: float = 2.8e-27
+    area_m: float = 400.0
+    seed: int = 0
+    #: the paper assumes one dedicated VM per device (§III-B). With a
+    #: *shared* edge accelerator the effective VM time scales with the
+    #: fleet — this is what makes interior splits pay off for transformers
+    #: (whose boundary activations, unlike CNN features, never shrink).
+    dedicated_vm: bool = True
+
+    def spec(self) -> FleetSpec:
+        ds = DeviceSpec.from_model(
+            self.cfg, count=self.num_devices, num_blocks=self.num_blocks,
+            batch=self.batch, seq_len=self.seq_len, device=self.device,
+            edge=self.edge, kappa=self.kappa, f_min_hz=self.f_min_hz,
+            f_max_hz=self.f_max_hz, seed=self.seed,
+            vm_time_scale=1.0 if self.dedicated_vm else float(self.num_devices),
+        )
+        return FleetSpec((ds,), area_m=self.area_m)
+
+    def device_names(self) -> list:
+        return [getattr(self.cfg, "name", "device")] * self.num_devices
+
+
+@dataclass(frozen=True)
+class Population:
+    """One slice of a mixed deployment: ``fraction`` of the devices run
+    ``cfg`` on the given device tier/platform (each population may have
+    its own DVFS range, κ, block count and sequence length)."""
+
+    cfg: ModelConfig
+    fraction: float
+    device: TierProfile = DEVICE_TIER
+    edge: TierProfile = EDGE_TIER
+    num_blocks: int = 8
+    batch: int = 1
+    seq_len: int = 256
+    f_min_hz: float = 0.2e9
+    f_max_hz: float = 1.4e9
+    kappa: float = 2.8e-27
+    p_tx_w: float = 1.0
+    name: str = ""
+
+    def __post_init__(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(
+                f"Population.fraction must be in (0, 1], got {self.fraction}")
+
+
+@dataclass
+class MixedTwoTierDeployment(_DeploymentBase):
+    """A mixed population sharing one edge and ONE bandwidth budget.
+
+    Fractions are apportioned to device counts by largest remainder (so
+    counts sum to ``num_devices`` and every population keeps ≥ 1 device).
+    The resulting fleet is ragged — per-device models, platforms and
+    partition-point counts — and plans as one compiled program through
+    every ``_DeploymentBase`` entry point.
+    """
+
+    populations: Sequence[Population] = field(default_factory=tuple)
+    num_devices: int = 12
+    bandwidth_hz: float = 50e6
+    deadline_s: float = 1.0
+    eps: float = 0.05
+    area_m: float = 400.0
+    seed: int = 0
+    dedicated_vm: bool = True
+
+    def __post_init__(self):
+        self.populations = tuple(self.populations)
+        if not self.populations:
+            raise ValueError("MixedTwoTierDeployment needs >= 1 Population")
+        if self.num_devices < len(self.populations):
+            raise ValueError(
+                f"{self.num_devices} devices cannot host "
+                f"{len(self.populations)} populations (each needs >= 1)")
+        total = sum(p.fraction for p in self.populations)
+        if abs(total - 1.0) > 1e-6:
+            raise ValueError(f"population fractions must sum to 1, got {total}")
+
+    def counts(self) -> list:
+        """Largest-remainder apportionment of fractions to device counts,
+        with every population floored at one device."""
+        quotas = [p.fraction * self.num_devices for p in self.populations]
+        counts = [max(int(q), 1) for q in quotas]
+        rema = sorted(range(len(quotas)), key=lambda i: quotas[i] - int(quotas[i]),
+                      reverse=True)
+        i = 0
+        while sum(counts) < self.num_devices:
+            counts[rema[i % len(rema)]] += 1
+            i += 1
+        while sum(counts) > self.num_devices:  # floors may overshoot
+            # shrink the most over-quota group that can still spare a device
+            cand = [k for k in range(len(counts)) if counts[k] > 1]
+            j = max(cand, key=lambda k: (counts[k] - quotas[k], counts[k]))
+            counts[j] -= 1
+        return counts
+
+    def spec(self) -> FleetSpec:
+        scale = 1.0 if self.dedicated_vm else float(self.num_devices)
+        groups = []
+        for idx, (pop, count) in enumerate(zip(self.populations, self.counts())):
+            groups.append(DeviceSpec.from_model(
+                pop.cfg, count=count, num_blocks=pop.num_blocks,
+                batch=pop.batch, seq_len=pop.seq_len, device=pop.device,
+                edge=pop.edge, kappa=pop.kappa, f_min_hz=pop.f_min_hz,
+                f_max_hz=pop.f_max_hz, p_tx_w=pop.p_tx_w,
+                seed=self.seed + idx, vm_time_scale=scale,
+                name=self._pop_name(pop, idx),
+            ))
+        return FleetSpec(tuple(groups), area_m=self.area_m)
+
+    @staticmethod
+    def _pop_name(pop: Population, idx: int) -> str:
+        return pop.name or getattr(pop.cfg, "name", f"pop{idx}")
+
+    def device_names(self) -> list:
+        """Per-device labels without running the cost model (cheap —
+        ``validate_per_device`` calls this on every report)."""
+        return [self._pop_name(pop, idx)
+                for idx, (pop, count) in enumerate(
+                    zip(self.populations, self.counts()))
+                for _ in range(count)]
 
 
 def measured_chain(base: BlockChain, decode_stats: Dict[str, float],

@@ -181,7 +181,7 @@ def test_invalid_iters_raise():
 
 
 def test_init_m_bounds_validated(fleet):
-    m_max = fleet.num_points - 1
+    m_max = fleet.max_points - 1
     for bad in (-1, m_max + 1, 99):
         with pytest.raises(ValueError, match="init_m"):
             plan(fleet, 0.2, 0.04, B, init_m=bad, multi_start=False)

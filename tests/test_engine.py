@@ -1,0 +1,40 @@
+"""ServingEngine batching: deterministic deadline-tie scheduling."""
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.serve.engine import Request, ServingEngine
+
+
+def _engine(max_batch=2):
+    return ServingEngine(get_config("tinyllama-1.1b", smoke=True), params=None,
+                         max_batch=max_batch)
+
+
+def _req(uid, deadline):
+    return Request(uid=uid, prompt=np.zeros(4, np.int32), deadline_s=deadline)
+
+
+def test_schedule_breaks_deadline_ties_by_uid():
+    eng = _engine()
+    reqs = [_req(u, 0.5) for u in (3, 1, 2, 0)]
+    batches = eng.schedule(reqs)
+    assert [[r.uid for r in b] for b in batches] == [[0, 1], [2, 3]]
+
+
+def test_schedule_is_arrival_order_independent():
+    """Batch composition must be a function of queue contents only —
+    the old sort by deadline alone kept insertion order on ties."""
+    eng = _engine()
+    reqs = [_req(0, 0.5), _req(1, 0.2), _req(2, 0.5), _req(3, 0.2)]
+    want = [[r.uid for r in b] for b in eng.schedule(reqs)]
+    assert want == [[1, 3], [0, 2]]  # EDF first, uid on ties
+    for perm in ([3, 2, 1, 0], [2, 0, 3, 1], [1, 3, 0, 2]):
+        shuffled = [reqs[i] for i in perm]
+        assert [[r.uid for r in b] for b in eng.schedule(shuffled)] == want
+
+
+def test_schedule_edf_order_dominates_uid():
+    eng = _engine(max_batch=3)
+    reqs = [_req(0, 0.9), _req(1, 0.1), _req(2, 0.9), _req(3, 0.1)]
+    batches = eng.schedule(reqs)
+    assert [[r.uid for r in b] for b in batches] == [[1, 3, 0], [2]]

@@ -1,0 +1,232 @@
+"""Ragged heterogeneous fleets (DESIGN.md §fleet).
+
+Pins the tentpole contracts of the multi-model Fleet core:
+
+- **No-op mask invariant** — an all-valid mask/num_points is numerically
+  invisible: planning a masked homogeneous fleet equals planning the same
+  arrays with ``valid=None`` leaf-for-leaf (the golden seed plans stay
+  pinned by ``test_plan_golden.py`` on top of this).
+- **Builder layer** — ``FleetSpec`` composes ``DeviceSpec`` groups into a
+  padded fleet; ``broadcast_fleet`` routes through it unchanged.
+- **Masked partition enumeration** — at ragged ``M_n`` no entry point
+  (exact enumeration, PCCP, optimal baseline) ever selects a padded
+  point, and the exact step picks the cheapest *valid* feasible point.
+- **One compiled program** — a mixed two-model fleet plans through
+  ``Planner.plan`` / ``plan_many`` / ``grid``; mask/num_points are traced
+  leaves, so same-shaped mixed fleets hit the jit cache.
+- **Reference agreement** — ``planner_ref`` matches the fused path
+  bit-exactly on a mixed fleet (acceptance criterion).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import (
+    ALEXNET_PLATFORM,
+    alexnet_chain,
+    alexnet_fleet,
+    mixed_fleet,
+)
+from repro.core import (
+    DeviceSpec,
+    Fleet,
+    FleetSpec,
+    Planner,
+    PlannerConfig,
+    Scenario,
+    broadcast_fleet,
+    pad_chain,
+    violation_report,
+)
+from repro.core.blocks import Platform
+from repro.core.planner import MASK_TIME_S, _point_tables, _exact_partition, plan_multi_jit
+from repro.core.planner_ref import plan_reference
+from repro.core.resource import allocate, select_point
+from repro.core import ccp
+
+B = 30e6
+SC = Scenario(0.2, 0.04, B)
+
+
+@pytest.fixture(scope="module")
+def mixed():
+    return mixed_fleet(jax.random.PRNGKey(1), 8)
+
+
+# ---------------------------------------------------------------- builders
+
+def test_fleet_spec_shapes_and_mask(mixed):
+    assert mixed.num_devices == 8
+    assert mixed.max_points == 10
+    npts = np.asarray(mixed.num_points)
+    assert npts.tolist() == [9, 9, 9, 9, 10, 10, 10, 10]
+    valid = np.asarray(mixed.valid)
+    for n in range(8):
+        assert valid[n, : npts[n]].all() and not valid[n, npts[n]:].any()
+    # padding repeats the terminal point (finite, physically plausible)
+    d = np.asarray(mixed.chain.d_bits)
+    assert d[0, 9] == d[0, 8]
+
+
+def test_broadcast_fleet_routes_through_builder():
+    chain = alexnet_chain()
+    gains = jnp.asarray([1e-9, 2e-9, 3e-9])
+    plat = Platform(kappa=ALEXNET_PLATFORM["kappa"],
+                    f_min=ALEXNET_PLATFORM["f_min"],
+                    f_max=ALEXNET_PLATFORM["f_max"])
+    fl = broadcast_fleet(chain, plat, 1.0, gains)
+    assert fl.num_devices == 3
+    np.testing.assert_array_equal(np.asarray(fl.link.gain), np.asarray(gains))
+    np.testing.assert_array_equal(
+        np.asarray(fl.chain.w_flops),
+        np.broadcast_to(np.asarray(chain.w_flops, np.float64), (3, 9)))
+    assert np.asarray(fl.valid).all()
+    assert np.asarray(fl.num_points).tolist() == [9, 9, 9]
+
+
+def test_builder_validation_errors():
+    chain = alexnet_chain()
+    with pytest.raises(ValueError, match="at least one"):
+        FleetSpec(())
+    with pytest.raises(ValueError, match="count"):
+        DeviceSpec(chain=chain, count=0)
+    spec = FleetSpec((DeviceSpec(chain=chain, count=2),))
+    with pytest.raises(ValueError, match="gains"):
+        spec.build(gains=jnp.ones((3,)))
+    with pytest.raises(ValueError, match="PRNG key"):
+        spec.build()
+    with pytest.raises(ValueError, match="pad"):
+        pad_chain(chain, 5)
+
+
+def test_group_slices_and_names(mixed):
+    from repro.configs.paper_tables import mixed_spec
+
+    spec = mixed_spec(8)
+    assert spec.group_slices() == [(0, 4), (4, 8)]
+    assert spec.device_names() == ["alexnet"] * 4 + ["resnet152"] * 4
+
+
+# ------------------------------------------------- no-op mask invariant
+
+def test_all_valid_mask_is_numerical_noop():
+    """Planning with (all-ones valid, num_points) equals valid=None
+    leaf-for-leaf — the invariant that keeps the seed goldens pinned."""
+    masked = alexnet_fleet(jax.random.PRNGKey(0), 6)  # built via FleetSpec
+    assert masked.valid is not None
+    bare = Fleet(chain=masked.chain, platform=masked.platform,
+                 link=masked.link)  # same arrays, no mask leaves
+    for policy in ("robust_exact", "robust", "optimal"):
+        planner = Planner(PlannerConfig(policy=policy, outer_iters=2,
+                                        pccp_iters=4))
+        pm, pb = planner.plan(masked, SC), planner.plan(bare, SC)
+        for lm, lb in zip(jax.tree_util.tree_leaves(pm),
+                          jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(lm), np.asarray(lb))
+
+
+# ------------------------------------------------- masked partition steps
+
+def test_masked_tables_sentinel_values(mixed):
+    m0 = jnp.minimum(jnp.full((8,), 9, jnp.int32), mixed.num_points - 1)
+    al = allocate(mixed, m0, jnp.full((8,), 0.2), jnp.full((8,), 0.04), B)
+    e, t, v = _point_tables(mixed, al)
+    valid = np.asarray(mixed.valid)
+    assert (np.asarray(t)[~valid] == MASK_TIME_S).all()
+    assert (np.asarray(v)[~valid] == 0.0).all()
+    assert np.isfinite(np.asarray(e)).all()  # finite — PCCP-safe
+
+
+def test_exact_partition_never_selects_padding(mixed):
+    """Masked argmin at ragged M_n: the chosen point is the cheapest valid
+    feasible one, verified against a numpy enumeration over valid prefixes."""
+    deadline = jnp.full((8,), 0.2)
+    eps = jnp.full((8,), 0.04)
+    m0 = jnp.minimum(jnp.full((8,), 9, jnp.int32), mixed.num_points - 1)
+    al = allocate(mixed, m0, deadline, eps, B)
+    e, t, v = _point_tables(mixed, al)
+    sigma = ccp.SIGMA_FNS["cantelli"](eps)
+    m_sel, feas = _exact_partition(e, t, v, sigma, deadline)
+    m_np, npts = np.asarray(m_sel), np.asarray(mixed.num_points)
+    assert (m_np < npts).all()
+    margin = np.asarray(t) + np.asarray(sigma)[:, None] * np.sqrt(
+        np.maximum(np.asarray(v), 0.0)) - np.asarray(deadline)[:, None]
+    for n in range(8):
+        ok = margin[n, : npts[n]] <= 1e-9
+        if ok.any():
+            want = np.flatnonzero(ok)[np.argmin(np.asarray(e)[n, : npts[n]][ok])]
+            assert m_np[n] == want, n
+
+
+def test_select_point_clamps_to_device_chain(mixed):
+    """A gather at the padded width lands on the device's own terminal
+    point, not the padding row."""
+    sel = select_point(mixed, jnp.full((8,), 9, jnp.int32))
+    want = np.asarray(mixed.chain.w_flops)[
+        np.arange(8), np.asarray(mixed.num_points) - 1]
+    np.testing.assert_array_equal(np.asarray(sel.w_flops), want)
+
+
+# ------------------------------------------------- planning entry points
+
+def test_mixed_fleet_plans_all_entry_points(mixed):
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
+    npts = np.asarray(mixed.num_points)
+
+    p = planner.plan(mixed, SC)
+    assert (np.asarray(p.m_sel) < npts).all()
+    assert bool(p.feasible.all())
+
+    many = planner.plan_many(mixed, [SC, Scenario(0.25, 0.06, B)])
+    assert many.m_sel.shape == (2, 8)
+    assert (np.asarray(many.m_sel) < npts[None, :]).all()
+    np.testing.assert_array_equal(np.asarray(many.m_sel[0]),
+                                  np.asarray(p.m_sel))
+
+    grid = planner.grid(mixed, (0.2, 0.25), 0.04, B)
+    assert grid.m_sel.shape == (2, 1, 1, 8)
+    assert (np.asarray(grid.m_sel) < npts).all()
+
+    # per-device Monte-Carlo guarantee on the mixed population
+    vr = violation_report(jax.random.PRNGKey(3), mixed, p.m_sel, p.alloc,
+                          0.2, var_scale=1.0)
+    assert float(vr.rate.max()) <= 0.04 + 0.005
+
+
+@pytest.mark.parametrize("policy", ["robust_exact", "robust"])
+def test_reference_matches_fused_on_mixed_fleet(mixed, policy):
+    """Acceptance criterion: planner_ref agrees bit-exact with the fused
+    path on a ragged fleet."""
+    kw = dict(outer_iters=2, pccp_iters=4)
+    planner = Planner(PlannerConfig(policy=policy, **kw))
+    p = planner.plan(mixed, SC)
+    r = plan_reference(mixed, 0.2, 0.04, B, policy=policy, **kw)
+    np.testing.assert_array_equal(np.asarray(p.m_sel), np.asarray(r.m_sel))
+    assert float(jnp.abs(p.total_energy - r.total_energy)) == 0.0
+    np.testing.assert_array_equal(np.asarray(p.alloc.b), np.asarray(r.alloc.b))
+    np.testing.assert_array_equal(np.asarray(p.alloc.f), np.asarray(r.alloc.f))
+    np.testing.assert_array_equal(np.asarray(p.feasible), np.asarray(r.feasible))
+
+
+def test_same_shape_mixed_fleets_hit_jit_cache(mixed):
+    """mask/num_points are traced leaves, not cache keys: a second mixed
+    fleet with the same padded shapes must not retrace."""
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=2))
+    planner.plan(mixed, SC)
+    size = plan_multi_jit._cache_size()
+    other = mixed_fleet(jax.random.PRNGKey(7), 8)  # new gains, same shapes
+    planner.plan(other, SC)
+    assert plan_multi_jit._cache_size() == size
+
+
+def test_ragged_multi_start_clamps_per_device(mixed):
+    """Explicit and spread starts stay inside each device's chain."""
+    from repro.core.planner import initial_points
+
+    m0, multi = initial_points(mixed, None, True)
+    assert multi and m0.shape[1] == 8
+    assert (np.asarray(m0) <= np.asarray(mixed.num_points) - 1).all()
+    m0, _ = initial_points(mixed, 9, False)
+    np.testing.assert_array_equal(np.asarray(m0),
+                                  np.asarray(mixed.num_points) - 1)

@@ -1,0 +1,114 @@
+"""Mixed-population two-tier deployments (DESIGN.md §fleet).
+
+A 60/40 tinyllama-on-Jetson + mamba2-on-phone population sharing one
+bandwidth budget plans as ONE ragged fleet in one compiled program, and
+validates per device against the probabilistic deadline.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import Scenario
+from repro.models.costmodel import PHONE_TIER
+from repro.serve.partitioned import (
+    MixedTwoTierDeployment,
+    Population,
+    TwoTierDeployment,
+)
+
+
+def _mixed(num_devices=5, **kw):
+    return MixedTwoTierDeployment(
+        populations=(
+            Population(get_config("tinyllama-1.1b"), fraction=0.6,
+                       name="tinyllama-jetson"),
+            Population(get_config("mamba2-130m"), fraction=0.4,
+                       device=PHONE_TIER, f_max_hz=1.0e9,
+                       name="mamba2-phone"),
+        ),
+        num_devices=num_devices, bandwidth_hz=100e6, deadline_s=2.0,
+        eps=0.05, **kw)
+
+
+def test_counts_largest_remainder():
+    assert _mixed(5).counts() == [3, 2]
+    assert _mixed(10).counts() == [6, 4]
+    assert _mixed(2).counts() == [1, 1]
+    # fractions that don't divide evenly still sum to N
+    dep = MixedTwoTierDeployment(
+        populations=(Population(get_config("mamba2-130m"), fraction=1 / 3),
+                     Population(get_config("mamba2-130m"), fraction=2 / 3)),
+        num_devices=7)
+    assert dep.counts() == [2, 5] and sum(dep.counts()) == 7
+    # floors overshooting N: tiny fractions are kept at their 1-device
+    # floor and the big group absorbs the decrement (regression: the
+    # overshoot argmax must skip groups already at 1)
+    cfg = get_config("mamba2-130m")
+    dep = MixedTwoTierDeployment(
+        populations=(Population(cfg, fraction=0.05),
+                     Population(cfg, fraction=0.05),
+                     Population(cfg, fraction=0.9)),
+        num_devices=3)
+    assert dep.counts() == [1, 1, 1]
+
+
+def test_mixed_fleet_is_ragged():
+    dep = _mixed(5)
+    fleet = dep.fleet()
+    assert fleet.num_devices == 5
+    assert np.asarray(fleet.num_points).shape == (5,)
+    assert dep.spec().device_names() == (["tinyllama-jetson"] * 3
+                                         + ["mamba2-phone"] * 2)
+    # per-population platforms land on the right devices
+    f_max = np.asarray(fleet.platform.f_max)
+    assert (f_max[:3] == 1.4e9).all() and (f_max[3:] == 1.0e9).all()
+
+
+def test_mixed_population_plans_and_validates_per_device():
+    dep = _mixed(5)
+    p, fleet = dep.plan(policy="robust_exact", outer_iters=3)
+    assert bool(p.feasible.all())
+    assert (np.asarray(p.m_sel) < np.asarray(fleet.num_points)).all()
+    rep = dep.validate(p, fleet)
+    assert rep["max_violation"] <= dep.eps + 0.01
+    per = dep.validate_per_device(p, fleet)
+    assert per["group"] == dep.spec().device_names()
+    assert per["violation"].shape == (5,)
+    assert per["ok"].all()  # MC violation ≤ ε on every device
+
+
+def test_mixed_population_grid_and_zipped_sweeps():
+    dep = _mixed(4)
+    grid, fleet = dep.plan_grid(deadlines=(1.0, 2.0), policy="robust_exact",
+                                outer_iters=2)
+    assert grid.m_sel.shape == (2, 1, 1, 4)
+    many, fleet = dep.plan_many(
+        [dep.scenario(), Scenario(1.5, 0.05, dep.bandwidth_hz)],
+        policy="robust_exact", outer_iters=2)
+    assert many.m_sel.shape == (2, 4)
+    assert (np.asarray(many.m_sel) < np.asarray(fleet.num_points)[None, :]).all()
+
+
+def test_two_tier_still_routes_through_builder():
+    """The homogeneous deployment now builds through FleetSpec — one
+    group, all-valid mask — and plans exactly as before."""
+    dep = TwoTierDeployment(get_config("mamba2-130m"), num_devices=4,
+                            deadline_s=2.0, eps=0.05, bandwidth_hz=100e6)
+    fleet = dep.fleet()
+    assert np.asarray(fleet.valid).all()
+    assert np.asarray(fleet.num_points).tolist() == [9] * 4
+    assert dep.spec().group_slices() == [(0, 4)]
+
+
+def test_population_validation_errors():
+    with pytest.raises(ValueError, match="fraction"):
+        Population(get_config("mamba2-130m"), fraction=0.0)
+    with pytest.raises(ValueError, match="sum to 1"):
+        MixedTwoTierDeployment(
+            populations=(Population(get_config("mamba2-130m"), fraction=0.7),),
+            num_devices=4)
+    with pytest.raises(ValueError, match="cannot host"):
+        MixedTwoTierDeployment(
+            populations=(Population(get_config("mamba2-130m"), fraction=0.5),
+                         Population(get_config("mamba2-130m"), fraction=0.5)),
+            num_devices=1)
