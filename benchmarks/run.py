@@ -15,6 +15,9 @@
 #                         (+ seed-loop continuity ratio → BENCH_planner.json)
 #   bench_hetero        — ragged mixed-model fleet: one compiled plan vs
 #                         per-group sequential (ratios → BENCH_planner.json)
+#   bench_edge          — shared-edge capacity pricing vs static N-scaling
+#                         vs dedicated-VM (DESIGN.md §edge; energy at
+#                         matched MC violation → BENCH_planner.json)
 #   bench_two_tier      — beyond-paper: planner over zoo architectures
 #   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
 #   bench_kernels       — Pallas kernels vs references
@@ -36,6 +39,7 @@ MODULES = [
     "bench_violation",
     "bench_plan_grid",
     "bench_hetero",
+    "bench_edge",
     "bench_two_tier",
     "bench_channel",
     "bench_kernels",

@@ -8,10 +8,11 @@ whole population in one compiled program (DESIGN.md §fleet). Each device
 is then Monte-Carlo validated against its own probabilistic deadline.
 
 The edge is a *congested shared* accelerator (``dedicated_vm=False``:
-VM time scales with the fleet), which is what makes the split decision
-interesting — the planner keeps the strong Jetson population fully local
-while the weak phone population fully offloads, all priced against the
-same bandwidth budget.
+VM occupancy is a real capacity constraint Σ t̄_vm ≤ C_edge with its own
+dual price μ — DESIGN.md §edge), which is what makes the split decision
+interesting — the planner offloads exactly up to the edge's capacity
+(the weak phone population first) and keeps the rest of the strong
+Jetson population local, all priced against the same bandwidth budget.
 
 Run:  PYTHONPATH=src python examples/mixed_fleet.py
 """

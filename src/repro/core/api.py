@@ -70,14 +70,23 @@ class Scenario(NamedTuple):
     heterogeneous SLOs and risk levels per device are first-class. ``B``
     is the fleet's total uplink bandwidth budget (scalar; it couples the
     devices through Σ b_n ≤ B, so a per-device B has no meaning).
+
+    ``edge_capacity_s`` is the shared-edge VM-time budget per inference
+    round (scalar seconds; DESIGN.md §edge): the planner prices
+    Σ_n t̄_vm(m_n) ≤ C_edge with a second dual price μ next to the
+    bandwidth λ. ``None`` (the default) means a dedicated VM per device —
+    the paper's §III-B assumption — and normalizes to ∞, under which the
+    edge pricing is a numerical no-op. It is a *traced leaf*, so capacity
+    sweeps batch through ``plan_many``/``grid`` without recompiling.
     """
 
     deadline: jnp.ndarray  # s — scalar or (N,)
     eps: jnp.ndarray  # risk level in (0, 1) — scalar or (N,)
     B: jnp.ndarray  # Hz — scalar bandwidth budget
+    edge_capacity_s: Optional[jnp.ndarray] = None  # s — scalar; None → ∞
 
     def normalized(self, num_devices: int) -> "Scenario":
-        """Broadcast deadline/eps to ``(N,)`` and B to a scalar."""
+        """Broadcast deadline/eps to ``(N,)``, B/edge capacity to scalars."""
         f64 = lambda v: jnp.asarray(v, jnp.float64)
 
         def per_device(v, name):
@@ -94,10 +103,17 @@ class Scenario(NamedTuple):
             raise ValueError(
                 "Scenario.B is the fleet-wide bandwidth budget and must be "
                 f"a scalar, got shape {b.shape}")
+        cap = f64(jnp.inf if self.edge_capacity_s is None
+                  else self.edge_capacity_s)
+        if cap.size != 1:
+            raise ValueError(
+                "Scenario.edge_capacity_s is the fleet-wide shared-edge "
+                f"budget and must be a scalar, got shape {cap.shape}")
         return Scenario(
             deadline=per_device(self.deadline, "deadline"),
             eps=per_device(self.eps, "eps"),
             B=jnp.reshape(b, ()),
+            edge_capacity_s=jnp.reshape(cap, ()),
         )
 
 
@@ -129,7 +145,14 @@ def stack_scenarios(
                     f"with K={k}, N={num_devices}, got shape {a.shape}")
             return a
 
-        return Scenario(fix(d, "deadline"), fix(e, "eps"), b)
+        cap = f64(jnp.inf if scenarios.edge_capacity_s is None
+                  else scenarios.edge_capacity_s)
+        if cap.ndim not in (0, 1) or (cap.ndim == 1 and cap.shape[0] != k):
+            raise ValueError(
+                "scenario batch leaf 'edge_capacity_s' must be a scalar or "
+                f"(K,) with K={k}, got shape {cap.shape}")
+        return Scenario(fix(d, "deadline"), fix(e, "eps"), b,
+                        jnp.broadcast_to(cap, (k,)))
     if len(scenarios) == 0:
         raise ValueError("plan_many needs at least one scenario")
     norm = [Scenario(*s).normalized(num_devices) for s in scenarios]
@@ -147,6 +170,11 @@ class PlannerConfig:
     so varying it — or passing array warm starts via the ``init_m=``
     argument of ``Planner.plan*`` — never recompiles. ``policy`` is a
     registry name (or a ``Policy`` record directly).
+
+    ``edge_capacity_s`` is a *default* for scenarios that leave their own
+    ``edge_capacity_s`` unset (``None`` here means no default → dedicated
+    VMs). Despite living on the config it is resolved into the scenario's
+    traced leaf, so varying it never recompiles either.
     """
 
     policy: Union[str, Policy] = "robust"
@@ -155,12 +183,15 @@ class PlannerConfig:
     multi_start: bool = True
     init_m: Optional[int] = None
     channel_cv: float = 0.0
+    edge_capacity_s: Optional[float] = None
 
     def __post_init__(self):
         if self.outer_iters < 1:
             raise ValueError("outer_iters must be >= 1")
         if self.pccp_iters < 1:
             raise ValueError("pccp_iters must be >= 1")
+        if self.edge_capacity_s is not None and not self.edge_capacity_s > 0:
+            raise ValueError("edge_capacity_s must be positive (or None)")
         get_policy(self.policy)  # fail fast on unknown policies
 
     def resolved_policy(self) -> Policy:
@@ -182,15 +213,18 @@ def _plan_many_impl(fleet, scenarios: Scenario, m0, *, policy: Policy,
     ``plan(...)`` leaf-for-leaf.
     """
     if policy.solve is not None:
-        run = lambda d, e, b: _solve_entry(
-            fleet, d, e, b, policy, outer_iters, pccp_iters, channel_cv)
+        run = lambda d, e, b, cap: _solve_entry(
+            fleet, d, e, b, cap, policy, outer_iters, pccp_iters, channel_cv)
     elif multi_start:
-        run = lambda d, e, b: _multi_start(
-            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
+        run = lambda d, e, b, cap: _multi_start(
+            fleet, d, e, b, cap, m0, policy, outer_iters, pccp_iters,
+            channel_cv)
     else:
-        run = lambda d, e, b: _alternation(
-            fleet, d, e, b, m0, policy, outer_iters, pccp_iters, channel_cv)
-    return jax.vmap(run)(scenarios.deadline, scenarios.eps, scenarios.B)
+        run = lambda d, e, b, cap: _alternation(
+            fleet, d, e, b, cap, m0, policy, outer_iters, pccp_iters,
+            channel_cv)
+    return jax.vmap(run)(scenarios.deadline, scenarios.eps, scenarios.B,
+                         scenarios.edge_capacity_s)
 
 
 #: Public alias — tests assert jit-cache behaviour via ``_cache_size()``.
@@ -223,6 +257,13 @@ class Planner:
             init_m = self.config.init_m
         return initial_points(fleet, init_m, self.config.multi_start)
 
+    def _apply_edge_default(self, sc: Scenario) -> Scenario:
+        """Fill the config's ``edge_capacity_s`` default into scenarios
+        that leave their own unset (the scenario leaf always wins)."""
+        if sc.edge_capacity_s is None and self.config.edge_capacity_s is not None:
+            return sc._replace(edge_capacity_s=self.config.edge_capacity_s)
+        return sc
+
     def _dispatch(self, fleet: Fleet, init_m):
         """Shared host-side dispatch: resolve (statics, m0, use_multi).
 
@@ -247,12 +288,15 @@ class Planner:
     def plan(self, fleet: Fleet, scenario: Scenario, init_m=None) -> Plan:
         """Plan one scenario. ``init_m`` (scalar or (N,) array) overrides
         the config's static start — it is traced, not a cache key."""
-        sc = Scenario(*scenario).normalized(fleet.num_devices)
+        sc = self._apply_edge_default(Scenario(*scenario))
+        sc = sc.normalized(fleet.num_devices)
         statics, m0, use_multi = self._dispatch(fleet, init_m)
         if statics["policy"].solve is not None:
-            return plan_solve_jit(fleet, sc.deadline, sc.eps, sc.B, **statics)
+            return plan_solve_jit(fleet, sc.deadline, sc.eps, sc.B,
+                                  sc.edge_capacity_s, **statics)
         entry = plan_multi_jit if use_multi else plan_single_jit
-        return entry(fleet, sc.deadline, sc.eps, sc.B, m0, **statics)
+        return entry(fleet, sc.deadline, sc.eps, sc.B, sc.edge_capacity_s,
+                     m0, **statics)
 
     def plan_many(self, fleet: Fleet,
                   scenarios: Union[Scenario, Sequence[Scenario]],
@@ -265,23 +309,34 @@ class Planner:
         leaf. Returns a ``Plan`` whose every leaf has leading axis K;
         ``plan_many(...)[k] == plan(fleet, scenarios[k])`` leaf-for-leaf.
         """
+        if isinstance(scenarios, Scenario):
+            scenarios = self._apply_edge_default(scenarios)
+        else:
+            scenarios = [self._apply_edge_default(Scenario(*s))
+                         for s in scenarios]
         batch = stack_scenarios(scenarios, fleet.num_devices)
         statics, m0, use_multi = self._dispatch(fleet, init_m)
         return plan_many_jit(fleet, batch, m0, multi_start=use_multi, **statics)
 
-    def grid(self, fleet: Fleet, deadlines, epss, Bs, init_m=None) -> Plan:
+    def grid(self, fleet: Fleet, deadlines, epss, Bs, edge_capacities=None,
+             init_m=None) -> Plan:
         """Cartesian sugar over ``plan_many``: every scenario in
-        deadlines × epss × Bs, one compiled program.
+        deadlines × epss × Bs (× edge_capacities), one compiled program.
 
         Returns a ``Plan`` with leading axes (len(deadlines), len(epss),
         len(Bs)) on every leaf; scalars are length-1 axes, so
-        ``grid(fleet, 0.2, eps_grid, B)`` sweeps ε only.
+        ``grid(fleet, 0.2, eps_grid, B)`` sweeps ε only. Passing
+        ``edge_capacities`` appends a fourth shared-edge-capacity axis
+        (DESIGN.md §edge) — left at ``None`` the config default (or ∞)
+        applies to every cell and the grid keeps its three axes.
         """
         as_axis = lambda v: jnp.atleast_1d(jnp.asarray(v, jnp.float64))
-        dd, ee, bb = jnp.meshgrid(as_axis(deadlines), as_axis(epss),
-                                  as_axis(Bs), indexing="ij")
-        shape = dd.shape
-        batch = Scenario(dd.ravel(), ee.ravel(), bb.ravel())
+        axes = [as_axis(deadlines), as_axis(epss), as_axis(Bs)]
+        if edge_capacities is not None:
+            axes.append(as_axis(edge_capacities))
+        mesh = jnp.meshgrid(*axes, indexing="ij")
+        shape = mesh[0].shape
+        batch = Scenario(*[a.ravel() for a in mesh])
         plans = self.plan_many(fleet, batch, init_m=init_m)
         return jax.tree_util.tree_map(
             lambda x: x.reshape(shape + x.shape[1:]), plans)

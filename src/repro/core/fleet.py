@@ -75,9 +75,15 @@ class DeviceSpec:
     ) -> "DeviceSpec":
         """Build a group from a zoo ``ModelConfig`` via the analytic cost
         model (``models.costmodel``). ``device``/``edge`` are
-        ``TierProfile``s (defaulting to the costmodel tiers);
-        ``vm_time_scale`` models a congested shared edge (mean × s,
-        variance × s²).
+        ``TierProfile``s (defaulting to the costmodel tiers).
+
+        .. deprecated::
+            ``vm_time_scale`` statically bakes shared-edge contention into
+            the chain (mean × s, variance × s²) — it overcharges lightly
+            loaded plans and ignores that occupancy depends on the chosen
+            partition points. Price the shared edge instead with
+            ``Scenario.edge_capacity_s`` (DESIGN.md §edge); the scale is
+            kept only as a comparison baseline for static provisioning.
         """
         # deferred import: core.fleet is imported by repro.core's __init__,
         # models.costmodel imports core.blocks — keep the layering acyclic.
@@ -94,6 +100,13 @@ class DeviceSpec:
             f_mid_hz=0.5 * (f_min_hz + f_max_hz), seed=seed,
         )
         if vm_time_scale != 1.0:
+            import warnings
+
+            warnings.warn(
+                "vm_time_scale is deprecated: it statically scales VM time "
+                "instead of pricing the shared edge — use "
+                "Scenario.edge_capacity_s (DESIGN.md §edge)",
+                DeprecationWarning, stacklevel=2)
             chain = chain._replace(t_vm=chain.t_vm * vm_time_scale,
                                    v_vm=chain.v_vm * vm_time_scale**2)
         return cls(chain=chain, kappa=kappa, f_min_hz=f_min_hz,

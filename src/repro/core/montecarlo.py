@@ -57,6 +57,7 @@ def violation_report(
     num_samples: int = 20000,
     var_scale: float = 0.8,
     channel_cv: float = 0.0,
+    edge_capacity_s=None,
 ) -> ViolationReport:
     """Empirical per-device P{T > D} under moment-matched sampling.
 
@@ -65,8 +66,21 @@ def violation_report(
     ``m_sel`` to each device's own chain so padded points are never
     sampled, and ``deadline`` may be per-device ``(N,)`` so mixed
     populations score against their own SLOs.
+
+    ``edge_capacity_s`` (traced scalar; ``None``/∞ ⇒ dedicated VMs)
+    enables the shared-edge ground-truth model (DESIGN.md §edge): the
+    edge is a processor-sharing accelerator with a VM-time budget C per
+    round, so when the plan's total occupancy Σ t̄_vm exceeds C every
+    VM time stretches by the congestion factor max(1, Σ t̄_vm / C). A
+    plan that keeps Σ t̄_vm ≤ C is validated unchanged — this is what
+    lets the capacity-priced planner be scored against plans made under
+    the dedicated or statically-scaled assumptions on equal terms.
     """
     sel = select_point(fleet, m_sel)
+    if edge_capacity_s is not None:
+        cap = jnp.asarray(edge_capacity_s, jnp.float64)
+        slow = jnp.maximum(1.0, jnp.sum(sel.t_vm) / cap)
+        sel = sel._replace(t_vm=sel.t_vm * slow, v_vm=sel.v_vm * slow**2)
     n = m_sel.shape[0]
     mean_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
 

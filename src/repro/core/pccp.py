@@ -6,6 +6,13 @@ auxiliary y_n and slack-penalized linearization (36). Because
 *independently of x*, the inner convex programs decouple per device — we
 solve all N of them with one vmapped barrier IPM per PCCP iteration.
 
+Shared-edge pricing (DESIGN.md §edge): when the scenario carries an edge
+capacity, the alternation hands this module an energy table already
+charged with μ·t̄_vm per candidate point — a linear per-point offset,
+exactly the shape the inner objective (e_vec) already has, so the
+barrier solves are unchanged and edge contention steers the relaxed x
+like any other energy term.
+
 Deviations from the paper (documented in DESIGN.md):
 - a slack δ with a high penalty is added to the deadline constraint (33c)
   so every inner problem is strictly feasible even when a device has no

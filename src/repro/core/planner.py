@@ -49,9 +49,12 @@ from repro.core import ccp, channel, energy
 from repro.core.blocks import Fleet
 from repro.core.pccp import pccp_partition
 from repro.core.resource import (
+    _EDGE_CAP_RTOL,
+    _LOG_PRICE_LO,
     Allocation,
     _device_best_b_at,
     _device_invariants,
+    _expand_log_bracket,
     allocate,
     select_point,
 )
@@ -85,6 +88,14 @@ WORST_CASE_UB_K = 8.0
 MASK_ENERGY_J = 1e6
 MASK_TIME_S = 1e6
 
+#: One-sided safety factor on a discovered edge clearing price. The
+#: occupancy excess is a step function of μ; the bisection's upper
+#: endpoint sits within ~1 ulp of a jump, where re-evaluating the priced
+#: argmin across an XLA fusion boundary can round to the *other* side of
+#: the threshold. Over-pricing by 1e-9 relative is decisively past the
+#: jump and is the safe direction (occupancy only shrinks as μ grows).
+_MU_SAFETY = 1.0 + 1e-9
+
 
 @dataclass(frozen=True)
 class Policy:
@@ -96,9 +107,11 @@ class Policy:
 
     ``partition`` runs inside the Algorithm-2 alternation with signature
     ``(m, e_table, t_table, var_table, sigma, deadline, pccp_iters) ->
-    (m_new, feasible, iters)``. ``solve``, when set, replaces the whole
-    alternation (signature ``(fleet, deadline, eps, B, policy, outer_iters,
-    pccp_iters, channel_cv) -> Plan``) — used by ``"optimal"``.
+    (m_new, feasible, iters)`` — for edge-aware policies the energy table
+    arrives already μ-priced (``e + μ·t̄_vm``). ``solve``, when set,
+    replaces the whole alternation (signature ``(fleet, deadline, eps, B,
+    edge_cap, policy, outer_iters, pccp_iters, channel_cv) -> Plan``) —
+    used by ``"optimal"``.
     """
 
     name: str
@@ -106,6 +119,12 @@ class Policy:
     ub_k: float = 0.0  # worst-case time inflation (mean + ub_k·std)
     partition: Optional[Callable] = None
     solve: Optional[Callable] = None
+    #: charge the shared-edge clearing price μ·t̄_vm on every candidate
+    #: point of the partition subproblem (DESIGN.md §edge). With an
+    #: infinite edge capacity μ = 0 and this is a numerical no-op; set
+    #: False to register a policy that ignores edge contention when
+    #: partitioning (the capacity check still gates feasibility).
+    edge_aware: bool = True
 
     def __post_init__(self):
         if self.sigma_model not in ccp.SIGMA_FNS:
@@ -188,6 +207,50 @@ def _exact_partition(e_table, t_table, var_table, sigma, deadline):
     return m_sel, jnp.take_along_axis(feas, m_sel[:, None], -1)[:, 0]
 
 
+def _clearing_price(occ_at, edge_cap):
+    """Smallest price μ ≥ 0 with ``occ_at(μ) ≤ edge_cap``.
+
+    ``occ_at`` must be a non-increasing step function of μ (a priced
+    argmin's selected occupancy). The search is a log-space bisection
+    with the adaptively expanded bracket of ``resource``; the *upper*
+    bracket endpoint ×``_MU_SAFETY`` is returned so the discovered price
+    sits on the feasible side of the step. Complementary slackness:
+    μ = 0 when the unpriced selection already fits.
+    """
+    need = occ_at(jnp.asarray(0.0, jnp.float64)) > edge_cap
+
+    def occ_excess(log_mu):
+        return occ_at(10.0**log_mu) - edge_cap
+
+    log_hi, _ = _expand_log_bracket(occ_excess)
+    log_mu = bisect(occ_excess, _LOG_PRICE_LO, log_hi, iters=60, endpoint="hi")
+    return jnp.where(need, 10.0**log_mu * _MU_SAFETY, 0.0)
+
+
+def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
+                         occ_table, edge_cap):
+    """Market-clearing price μ of the shared-edge capacity at fixed (b, f).
+
+    The partition subproblem decouples per device at a given μ (each
+    device argmins its priced table ``e + μ·occ`` over feasible points),
+    so the fleet's total occupancy Σ occ(m*(μ)) is a non-increasing step
+    function of μ — priced by ``_clearing_price`` over the *tables*
+    (no golden sections: ~60 cheap argmins).
+    """
+    margin = (t_table + sigma[:, None] * jnp.sqrt(jnp.maximum(var_table, 0.0))
+              - deadline[:, None])
+    feas = margin <= 1e-9
+    any_feas = jnp.any(feas, axis=-1)
+    m_least_bad = jnp.argmin(margin, axis=-1)
+
+    def occ_at(mu):
+        cost = jnp.where(feas, e_table + mu * occ_table, jnp.inf)
+        m = jnp.where(any_feas, jnp.argmin(cost, axis=-1), m_least_bad)
+        return jnp.sum(jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0])
+
+    return _clearing_price(occ_at, edge_cap)
+
+
 def exact_partition_step(m, e_table, t_table, var_table, sigma, deadline,
                          pccp_iters):
     """Partition strategy: exact per-device enumeration (DESIGN.md §2)."""
@@ -254,7 +317,7 @@ def initial_points(fleet: Fleet, init_m, multi_start: bool):
     return clamp(jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))), False
 
 
-def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: Policy,
+def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
                  outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
     """One Algorithm-2 alternation from initial points ``m0`` — fully traced.
 
@@ -263,15 +326,24 @@ def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: Policy,
     (b, f). No host syncs, so the whole alternation stays one XLA program.
     Policy behaviour (σ model, time inflation, partition step) comes from
     the ``Policy`` record — no per-policy branches live here.
+
+    ``edge_cap`` is the shared-edge VM-time budget (traced; ∞ ⇒ dedicated
+    VMs): each step discovers the clearing price μ on the current tables
+    and charges μ·t̄_vm per candidate point, so the partition internalizes
+    edge contention; with ∞ capacity μ = 0 and the step is numerically
+    identical to the uncoupled planner.
     """
     n = fleet.num_devices
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
+    edge_cap = jnp.asarray(edge_cap, jnp.float64)
     sig_model, ub_k = policy.sigma_model, policy.ub_k
     sigma = ccp.SIGMA_FNS[sig_model](eps)
+    occ_table = fleet.chain.t_vm  # (N, M+1) edge occupancy per point
 
     def step(m, _):
-        alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
+        alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k,
+                         channel_cv, edge_capacity_s=edge_cap)
         e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
         if ub_k > 0.0:  # worst-case inflation: mean + ub_k·std, no variance
             t_table = t_table + ub_k * (
@@ -279,16 +351,25 @@ def _alternation(fleet: Fleet, deadline, eps, B, m0, policy: Policy,
                 + jnp.sqrt(jnp.maximum(fleet.chain.v_vm, 0.0))
             )
             var_table = jnp.zeros_like(var_table)
+        if policy.edge_aware:
+            mu = _edge_clearing_price(e_table, t_table, var_table, sigma,
+                                      deadline, occ_table, edge_cap)
+        else:
+            mu = jnp.asarray(0.0, jnp.float64)
         m_new, feas, pc = policy.partition(
-            m, e_table, t_table, var_table, sigma, deadline, pccp_iters)
+            m, e_table + mu * occ_table, t_table, var_table, sigma, deadline,
+            pccp_iters)
+        # the trace records true energy, not the μ-priced surrogate
         obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
-        return m_new, (obj, pc, feas)
+        return m_new, (obj, pc, feas, mu)
 
     m = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (n,))
-    m, (traces, pccp_trace, feas_seq) = jax.lax.scan(step, m, None, length=outer_iters)
+    m, (traces, pccp_trace, feas_seq, mu_seq) = jax.lax.scan(
+        step, m, None, length=outer_iters)
     feasible = feas_seq[-1]
 
-    alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
+    alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+                     edge_capacity_s=edge_cap, edge_price=mu_seq[-1])
     sel = select_point(fleet, m)
     t_mean = (
         energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
@@ -320,21 +401,22 @@ def _select_best(plans: Plan) -> jnp.ndarray:
     return jnp.argmin(e_masked)
 
 
-def _multi_start(fleet: Fleet, deadline, eps, B, m0_batch, policy: Policy,
-                 outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
+def _multi_start(fleet: Fleet, deadline, eps, B, edge_cap, m0_batch,
+                 policy: Policy, outer_iters: int, pccp_iters: int,
+                 channel_cv: float) -> Plan:
     """vmapped multi-start alternation + traced best-plan selection."""
     plans = jax.vmap(
-        lambda m0: _alternation(fleet, deadline, eps, B, m0, policy,
+        lambda m0: _alternation(fleet, deadline, eps, B, edge_cap, m0, policy,
                                 outer_iters, pccp_iters, channel_cv)
     )(m0_batch)
     idx = _select_best(plans)
     return jax.tree_util.tree_map(lambda x: x[idx], plans)
 
 
-def _solve_entry(fleet: Fleet, deadline, eps, B, policy: Policy,
+def _solve_entry(fleet: Fleet, deadline, eps, B, edge_cap, policy: Policy,
                  outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
     """Entry for solve-override policies (no alternation, no starts)."""
-    return policy.solve(fleet, deadline, eps, B, policy,
+    return policy.solve(fleet, deadline, eps, B, edge_cap, policy,
                         outer_iters, pccp_iters, channel_cv)
 
 
@@ -392,7 +474,8 @@ def plan(
     return Planner(cfg).plan(fleet, Scenario(deadline, eps, B), init_m=init_m)
 
 
-def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") -> Plan:
+def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
+                 edge_capacity_s=None) -> Plan:
     """§VI "Optimal policy": joint exact search over (m, b, f).
 
     At a fixed bandwidth price λ the joint problem separates per device
@@ -403,14 +486,27 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
     The λ-invariant feasibility bracket per (n, m) is hoisted out of the
     price bisection (same hoist as ``resource.allocate``).
 
+    ``edge_capacity_s`` turns this into the **two-price dual
+    decomposition** over (λ, μ) of DESIGN.md §edge: the per-point score
+    gains μ·t̄_vm and the outer search nests — for every λ step the edge
+    price μ*(λ) is cleared by a *cheap* inner bisection over the already-
+    solved point tables (the per-point (b, f) solutions depend on λ only,
+    so no golden sections re-run), and the λ bisection proceeds on
+    Σ b(λ, μ*(λ)) − B, which stays monotone because partial maximization
+    over μ preserves the dual's concavity. With ∞ capacity μ*(λ) ≡ 0 and
+    the search degenerates to the single-price seed path bit-for-bit.
+
     Fully traced (fixed-iteration bisection), so the ``"optimal"`` policy
     vmaps over zipped scenario batches like any other registry entry.
     """
     n = fleet.num_devices
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
+    edge_cap = jnp.asarray(
+        jnp.inf if edge_capacity_s is None else edge_capacity_s, jnp.float64)
     c, plat, link = fleet.chain, fleet.platform, fleet.link
     sigma = ccp.SIGMA_FNS[sigma_model](eps)
+    occ_all = c.t_vm  # (N, M+1) shared-edge occupancy of each point
 
     budget_all = (
         deadline[:, None]
@@ -441,16 +537,34 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
         per_point, in_axes=(None, 0, 0, 0, 0, None, None, None, None, None, 0, 0))
     vm_devices = jax.vmap(vm_points, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
 
+    def select(cost, feas, mu):
+        """Per-device argmin of the (λ, μ)-priced point scores."""
+        priced = cost + mu * occ_all  # cost is already ∞ on infeasible points
+        any_feas = jnp.any(feas, axis=-1)
+        m_sel = jnp.where(any_feas, jnp.argmin(priced, -1),
+                          jnp.argmax(budget_all, -1))
+        return m_sel.astype(jnp.int32), any_feas
+
+    def occ_of(m_sel):
+        return jnp.sum(jnp.take_along_axis(occ_all, m_sel[:, None], -1)[:, 0])
+
+    def mu_star(cost, feas):
+        """Clearing price of the edge capacity at fixed λ — a cheap
+        ``_clearing_price`` search over the point tables (no golden
+        sections re-run; the per-point (b, f) depend on λ only)."""
+        return _clearing_price(
+            lambda mu: occ_of(select(cost, feas, mu)[0]), edge_cap)
+
     def solve_at(lam):
         cost, b, f, e, feas = vm_devices(
             lam, budget_all, c.d_bits, c.w_flops, c.g_eff,
             plat.kappa, plat.f_min, plat.f_max, link.p_tx, link.gain,
             b_lo_all, feas0_all,
         )
-        any_feas = jnp.any(feas, axis=-1)
-        m_sel = jnp.where(any_feas, jnp.argmin(cost, -1), jnp.argmax(budget_all, -1))
+        mu = mu_star(cost, feas)
+        m_sel, any_feas = select(cost, feas, mu)
         pick = lambda a: jnp.take_along_axis(a, m_sel[:, None], -1)[:, 0]
-        return m_sel.astype(jnp.int32), pick(b), pick(f), pick(e), pick(feas) & any_feas
+        return (m_sel, pick(b), pick(f), pick(e), pick(feas) & any_feas, mu)
 
     _, b0, *_ = solve_at(jnp.asarray(0.0, jnp.float64))
     need_price = jnp.sum(b0) > B
@@ -459,14 +573,18 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
         _, b, *_ = solve_at(10.0**log_lam)
         return jnp.sum(b) - B
 
-    log_lam = bisect(excess, -16.0, 2.0, iters=60)
+    log_hi, _ = _expand_log_bracket(excess)
+    log_lam = bisect(excess, _LOG_PRICE_LO, log_hi, iters=60)
     lam = jnp.where(need_price, 10.0**log_lam, 0.0)
-    m_sel, b, f, e, feas = solve_at(lam)
+    m_sel, b, f, e, feas, mu = solve_at(lam)
+    # primal capacity check at the rounded discrete selection
+    feas = feas & (occ_of(m_sel) <= edge_cap * (1.0 + _EDGE_CAP_RTOL))
 
     sel = select_point(fleet, m_sel)
     e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
     e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
-    alloc = Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas, lam=lam)
+    alloc = Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas,
+                       lam=lam, mu=mu)
     t_mean = (
         energy.mean_local_time(sel.w_flops, sel.g_eff, f)
         + channel.offload_time(sel.d_bits, b, link.p_tx, link.gain)
@@ -486,12 +604,13 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli") 
     )
 
 
-def _optimal_solve(fleet, deadline, eps, B, policy: Policy,
+def _optimal_solve(fleet, deadline, eps, B, edge_cap, policy: Policy,
                    outer_iters, pccp_iters, channel_cv) -> Plan:
     """Registry ``solve`` adapter for the optimal baseline (iteration
     counts and channel_cv do not apply to the exact search)."""
     del outer_iters, pccp_iters, channel_cv
-    return plan_optimal(fleet, deadline, eps, B, sigma_model=policy.sigma_model)
+    return plan_optimal(fleet, deadline, eps, B, sigma_model=policy.sigma_model,
+                        edge_capacity_s=edge_cap)
 
 
 ROBUST = register_policy(Policy("robust", partition=pccp_partition_step))

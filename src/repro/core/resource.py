@@ -14,6 +14,17 @@ Two solvers:
   this matches the paper's interior-point optimum.
 - ``allocate_ipm`` (cross-check): the paper-faithful joint interior-point
   solve of (23) in scaled variables, used in tests to certify ``allocate``.
+
+Shared-edge capacity (DESIGN.md §edge): beyond the paper's dedicated-VM
+assumption (§III-B), the edge accelerator may be a *shared* resource with
+a per-round VM-time budget  Σ_n occ_n(m_n) ≤ C_edge, where
+occ_n = t̄_vm at device n's selected point. At a fixed partition the
+occupancies are constants, so ``allocate`` only *checks* the capacity
+(feasibility flags) and records the operative edge price μ; the price
+itself is discovered where the partition is chosen — the (λ, μ) two-price
+search in ``planner.plan_optimal`` and the per-step clearing price of the
+Algorithm-2 alternation — both built on this module's price-bracket
+helpers.
 """
 from __future__ import annotations
 
@@ -22,6 +33,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ccp, channel, energy
 from repro.core.blocks import Fleet
@@ -30,6 +42,40 @@ from repro.solvers.ipm import BarrierSpec, barrier_solve
 
 _BIG = 1e9
 _TINY_B = 1e-3  # Hz floor for allocated bandwidth
+
+#: Dual-price searches run in log10 space. The seed bracket top (λ = 10²)
+#: is right for paper-scale scenarios; when the market-clearing price is
+#: higher (extreme bandwidth/capacity starvation) the bracket is expanded
+#: adaptively up to 10¹⁸ — beyond that the constraint cannot be priced
+#: out (the λ-invariant feasibility floors alone overrun the budget) and
+#: the caller flags infeasibility instead of silently rescaling.
+_LOG_PRICE_LO = -16.0
+_LOG_PRICE_HI0 = 2.0
+_LOG_PRICE_HI_MAX = 18.0
+_LOG_PRICE_STEP = 4.0
+#: relative tolerance of the Σ occ ≤ C_edge capacity check
+_EDGE_CAP_RTOL = 1e-9
+
+
+def _expand_log_bracket(excess_fn):
+    """Adaptively raise the log-price bracket top until the excess changes
+    sign. Returns ``(hi, f_hi)``; ``f_hi > 0`` after expansion means even
+    the max price cannot clear the constraint (⇒ infeasible). The common
+    case (``excess(HI0) ≤ 0``) costs one extra evaluation and leaves the
+    seed bracket — and therefore the bisection trajectory — unchanged.
+    """
+    hi0 = jnp.asarray(_LOG_PRICE_HI0, jnp.float64)
+
+    def cond(state):
+        hi, f_hi = state
+        return (f_hi > 0.0) & (hi < _LOG_PRICE_HI_MAX - 1e-9)
+
+    def body(state):
+        hi, _ = state
+        hi = hi + _LOG_PRICE_STEP
+        return hi, excess_fn(hi)
+
+    return jax.lax.while_loop(cond, body, (hi0, excess_fn(hi0)))
 
 
 class Selected(NamedTuple):
@@ -50,6 +96,7 @@ class Allocation(NamedTuple):
     e_off: jnp.ndarray  # (N,) J
     feasible: jnp.ndarray  # (N,) bool
     lam: jnp.ndarray  # scalar dual price of bandwidth
+    mu: jnp.ndarray = 0.0  # scalar dual price of shared-edge VM capacity
 
     @property
     def energy(self):
@@ -173,11 +220,20 @@ def allocate(
     sigma_model: str = "cantelli",
     ub_k: float = 0.0,
     channel_cv: float = 0.0,
+    edge_capacity_s=None,
+    edge_price=None,
 ) -> Allocation:
     """Solve problem (23) by dual decomposition over Σ b_n ≤ B.
 
     ``channel_cv`` > 0 enables the joint inference-time + channel-state
     robustness extension (paper footnote 2).
+
+    ``edge_capacity_s`` (traced scalar; ``None``/∞ ⇒ dedicated VMs) adds
+    the shared-edge capacity check Σ_n t̄_vm(m_n) ≤ C_edge to the
+    feasibility flags. At a *fixed* partition the occupancies are
+    constants, so there is nothing to optimize here — the edge price μ
+    that shaped the partition decision is passed in as ``edge_price``
+    and recorded on the returned :class:`Allocation` next to λ.
     """
     sel = select_point(fleet, m_sel)
     budget = deadline_budget(sel, deadline, eps, sigma_model, ub_k)
@@ -225,21 +281,66 @@ def allocate(
         b, _, _ = solve_at(10.0**log_lam)
         return jnp.sum(b) - B
 
-    log_lam = bisect(excess, -16.0, 2.0, iters=60)
+    # Expand the bracket top until the excess changes sign: the seed's
+    # fixed [1e-16, 1e2] bracket silently pinned λ at 100 on bandwidth-
+    # starved scenarios and let the rescale mask the unmet budget.
+    log_hi, _ = _expand_log_bracket(excess)
+    log_lam = bisect(excess, _LOG_PRICE_LO, log_hi, iters=60)
     lam = jnp.where(need_price, 10.0**log_lam, 0.0)
     b, f, feas = solve_at(lam)
     # If the price was active, rescale residual slack to exactly meet B
     # (bisection leaves O(1e-14 B) slack; harmless but keep Σb ≤ B exact).
+    # The rescale must not push a device below its λ-invariant feasibility
+    # floor b_lo: clamp to the floor and redistribute the shortfall to the
+    # unclamped devices (the final _deadline_ok recheck stays the
+    # authority on ``feasible``).
     total = jnp.sum(b)
-    b = jnp.where(need_price & (total > B), b * (B / total), b)
+    b = jnp.where(need_price & (total > B),
+                  _rescale_with_floor(b, b_lo, B), b)
     # The rescale shrinks b, which lengthens t_off — recheck the deadline
     # at the final (b, f) so ``feasible`` reflects what is returned.
     feas = feas & _deadline_ok(
         b, f, sel, budget, link.p_tx, link.gain, sigma, v_base, channel_cv)
 
+    # Shared-edge capacity: Σ occupancy at the (fixed) selected points.
+    if edge_capacity_s is not None:
+        cap = jnp.asarray(edge_capacity_s, jnp.float64)
+        feas = feas & (jnp.sum(sel.t_vm) <= cap * (1.0 + _EDGE_CAP_RTOL))
+    mu = jnp.asarray(0.0 if edge_price is None else edge_price, jnp.float64)
+
     e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
     e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
-    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas, lam=lam)
+    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas,
+                      lam=lam, mu=mu)
+
+
+def _rescale_with_floor(b, b_lo, B):
+    """Scale Σb down to B without crossing the feasibility floors.
+
+    A plain ``b · (B/Σb)`` can push devices below their λ-invariant floor
+    ``b_lo`` (and in principle below ``_TINY_B``). Devices that would dip
+    are clamped to their floor and the remaining budget is redistributed
+    pro-rata over the unclamped ones (two fixed rounds + a final scale
+    recompute so Σb = Σ floors + leftover budget exactly). When no device
+    dips — every healthy scenario, since the bisection leaves only
+    O(1e-14·B) excess — this reduces bit-exactly to the plain rescale.
+    """
+    plain = b * (B / jnp.sum(b))
+    floor = jnp.maximum(jnp.minimum(b_lo, b), _TINY_B)
+    low = plain < floor
+    for _ in range(2):
+        avail = jnp.maximum(B - jnp.sum(jnp.where(low, floor, 0.0)), 0.0)
+        denom = jnp.sum(jnp.where(low, 0.0, b))
+        low = low | (b * (avail / jnp.maximum(denom, _TINY_B)) < floor)
+    avail = jnp.maximum(B - jnp.sum(jnp.where(low, floor, 0.0)), 0.0)
+    denom = jnp.sum(jnp.where(low, 0.0, b))
+    out = jnp.where(low, floor, b * (avail / jnp.maximum(denom, _TINY_B)))
+    # The floors themselves may overrun B (over-subscribed scenario: not
+    # every device can meet its deadline at once). Σb ≤ B is the hard
+    # physical constraint, so fall back to the plain proportional rescale
+    # and let the deadline recheck flag the casualties.
+    floors_fit = jnp.sum(jnp.where(low, floor, 0.0)) <= B
+    return jnp.where(floors_fit, out, plain)
 
 
 def _deadline_ok(b, f, sel: Selected, budget, p_tx, gain, sigma, v_base,
@@ -259,18 +360,39 @@ def allocate_ipm(
     B: float,
     sigma_model: str = "cantelli",
     init: Allocation | None = None,
+    edge_capacity_s: float | None = None,
 ) -> Allocation:
     """Paper-faithful joint interior-point solve of (23) (for cross-checks).
 
     Variables are scaled: β = b/B ∈ (0,1], φ = f/f_max ∈ [f_min/f_max, 1].
+
+    ``edge_capacity_s`` (concrete host float — this is a test/cross-check
+    utility) appends the shared-edge capacity row Σ t̄_vm(m_n) − C ≤ 0.
+    At fixed m the row is a constant: strictly satisfied it is inert in
+    the barrier (certifying that the capacity does not distort the (b, f)
+    optimum); violated it poisons the barrier, so it is validated here and
+    raised as an error instead.
     """
     sel = select_point(fleet, m_sel)
     budget = deadline_budget(sel, deadline, eps, sigma_model)
     plat, link = fleet.platform, fleet.link
     n = fleet.num_devices
 
+    cap = None
+    if edge_capacity_s is not None and np.isfinite(float(edge_capacity_s)):
+        cap = float(edge_capacity_s)
+        occ_total = float(jnp.sum(sel.t_vm))
+        if occ_total > cap * (1.0 + _EDGE_CAP_RTOL):
+            raise ValueError(
+                f"allocate_ipm: partition occupies {occ_total:.6g} s of the "
+                f"shared edge but edge_capacity_s={cap:.6g} s — the capacity "
+                "constraint is violated at this fixed m_sel (the occupancy "
+                "row would poison the barrier); re-plan with the edge price "
+                "before cross-checking")
+
     if init is None:
-        init = allocate(fleet, m_sel, deadline, eps, B, sigma_model)
+        init = allocate(fleet, m_sel, deadline, eps, B, sigma_model,
+                        edge_capacity_s=edge_capacity_s)
 
     def unpack(z):
         return z[:n] * B, z[n:] * plat.f_max  # b, f
@@ -286,15 +408,23 @@ def allocate_ipm(
         t_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, f)
         t_off = channel.offload_time(sel.d_bits, b, link.p_tx, link.gain)
         ddl = t_loc + t_off - budget  # ≤ 0
-        return jnp.concatenate(
-            [
-                ddl,
-                (jnp.sum(b) - B)[None],
-                _TINY_B - b,
-                plat.f_min - f,
-                f - plat.f_max,
-            ]
-        )
+        rows = [
+            ddl,
+            (jnp.sum(b) - B)[None],
+            _TINY_B - b,
+            plat.f_min - f,
+            f - plat.f_max,
+        ]
+        if cap is not None:
+            # Shared-edge capacity row: constant at fixed m, hence inert
+            # in the barrier. The barrier needs it STRICTLY negative, but
+            # the validation above tolerates occ up to cap·(1+rtol) (the
+            # same tolerance the planner's primal check uses), so the row
+            # is written against cap·(1+2·rtol): any occupancy that
+            # passed the guard sits strictly inside it.
+            cap_eff = cap * (1.0 + 2.0 * _EDGE_CAP_RTOL)
+            rows.append((jnp.sum(sel.t_vm) - cap_eff)[None])
+        return jnp.concatenate(rows)
 
     # Strictly feasible start: nudge the dual solution into the interior.
     b0 = jnp.clip(init.b, _TINY_B * 2, B)
@@ -313,4 +443,5 @@ def allocate_ipm(
     b, f = unpack(res.z)
     e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
     e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
-    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=init.feasible, lam=init.lam)
+    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off,
+                      feasible=init.feasible, lam=init.lam, mu=init.mu)

@@ -175,11 +175,17 @@ def analyze(txt: str, default_trip: int = 1) -> HLOCost:
                 out_elems = 1
                 for d in out_dims:
                     out_elems *= d
-                lhs = re.match(r"\s*%?([\w.\-]+)", i.rest)
+                # Newer XLA prints operands with inline types —
+                # ``dot(f32[8,64]{1,0} %lhs, ...)`` — so take the lhs shape
+                # from the inline type when present, else by name lookup.
+                lhs = re.match(
+                    r"\s*(?:([a-z0-9]+\[[0-9,]*\])(?:\{[0-9,]*\})?\s+)?"
+                    r"%?([\w.\-]+)", i.rest)
                 cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", i.rest)
                 contract = 1
-                if lhs and cdims and lhs.group(1) in shapes:
-                    _, ldims = _shape_of(shapes[lhs.group(1)])
+                if lhs and cdims:
+                    lhs_type = lhs.group(1) or shapes.get(lhs.group(2), "")
+                    _, ldims = _shape_of(lhs_type)
                     for ax in cdims.group(1).split(","):
                         if ax and int(ax) < len(ldims):
                             contract *= ldims[int(ax)]

@@ -61,11 +61,29 @@ class _DeploymentBase:
     """Shared planning/validation surface over ``self.spec()``.
 
     Subclasses provide ``spec() -> FleetSpec`` plus the scenario scalars
-    (``deadline_s``, ``eps``, ``bandwidth_hz``, ``seed``).
+    (``deadline_s``, ``eps``, ``bandwidth_hz``, ``seed``) and the
+    shared-edge fields (``dedicated_vm``, ``edge_capacity_s``,
+    ``legacy_vm_scale``).
     """
 
     def spec(self) -> FleetSpec:  # pragma: no cover - interface
         raise NotImplementedError
+
+    def edge_capacity(self) -> float:
+        """Shared-edge VM-time budget per round (seconds; DESIGN.md §edge).
+
+        ``inf`` for dedicated VMs (the paper's §III-B assumption) and for
+        the deprecated static N-scaling fallback (whose contention model
+        is baked into the chain instead). A shared edge without an
+        explicit ``edge_capacity_s`` defaults to ``deadline_s``: one
+        accelerator can hand out at most a round's worth of VM time per
+        round.
+        """
+        if self.edge_capacity_s is not None:
+            return float(self.edge_capacity_s)
+        if self.dedicated_vm or self.legacy_vm_scale:
+            return float("inf")
+        return float(self.deadline_s)
 
     def device_names(self) -> list:
         """(N,) population label per device. Subclasses override with a
@@ -79,10 +97,20 @@ class _DeploymentBase:
 
     def scenario(self) -> Scenario:
         """The deployment's configured default scenario."""
-        return Scenario(self.deadline_s, self.eps, self.bandwidth_hz)
+        cap = self.edge_capacity()
+        return Scenario(self.deadline_s, self.eps, self.bandwidth_hz,
+                        None if np.isinf(cap) else cap)
 
     def planner(self, policy: str = "robust_exact", **kw) -> Planner:
-        """A ``Planner`` for this deployment (kw → ``PlannerConfig``)."""
+        """A ``Planner`` for this deployment (kw → ``PlannerConfig``).
+
+        The deployment's edge capacity rides in as the config *default*,
+        so grid/batch sweeps that build their own scenarios still price
+        the shared edge (a per-scenario ``edge_capacity_s`` wins).
+        """
+        cap = self.edge_capacity()
+        if not np.isinf(cap):
+            kw.setdefault("edge_capacity_s", cap)
         return Planner(PlannerConfig(policy=policy, **kw))
 
     def plan(self, policy: str = "robust_exact", **kw):
@@ -158,7 +186,9 @@ class _DeploymentBase:
         deadline = self.deadline_s if deadline is None else deadline
         deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64),
                                     (fleet.num_devices,))
-        vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline, dist=dist)
+        cap = self.edge_capacity()
+        vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline, dist=dist,
+                              edge_capacity_s=None if np.isinf(cap) else cap)
         return vr, deadline
 
 
@@ -180,18 +210,28 @@ class TwoTierDeployment(_DeploymentBase):
     area_m: float = 400.0
     seed: int = 0
     #: the paper assumes one dedicated VM per device (§III-B). With a
-    #: *shared* edge accelerator the effective VM time scales with the
-    #: fleet — this is what makes interior splits pay off for transformers
-    #: (whose boundary activations, unlike CNN features, never shrink).
+    #: *shared* edge accelerator contention is priced as a real capacity
+    #: constraint Σ t̄_vm ≤ ``edge_capacity_s`` with its own dual price μ
+    #: (DESIGN.md §edge) — this is what makes interior splits pay off for
+    #: transformers (whose boundary activations, unlike CNN features,
+    #: never shrink).
     dedicated_vm: bool = True
+    #: shared-edge VM-time budget per round; None → ``deadline_s`` when
+    #: the edge is shared (see ``edge_capacity``)
+    edge_capacity_s: Optional[float] = None
+    #: DEPRECATED pre-capacity approximation: bake ``vm_time_scale = N``
+    #: into the chain instead of pricing the shared edge. Kept only as a
+    #: comparison baseline (see ``benchmarks/bench_edge.py``).
+    legacy_vm_scale: bool = False
 
     def spec(self) -> FleetSpec:
+        legacy = self.legacy_vm_scale and not self.dedicated_vm
         ds = DeviceSpec.from_model(
             self.cfg, count=self.num_devices, num_blocks=self.num_blocks,
             batch=self.batch, seq_len=self.seq_len, device=self.device,
             edge=self.edge, kappa=self.kappa, f_min_hz=self.f_min_hz,
             f_max_hz=self.f_max_hz, seed=self.seed,
-            vm_time_scale=1.0 if self.dedicated_vm else float(self.num_devices),
+            vm_time_scale=float(self.num_devices) if legacy else 1.0,
         )
         return FleetSpec((ds,), area_m=self.area_m)
 
@@ -243,6 +283,8 @@ class MixedTwoTierDeployment(_DeploymentBase):
     area_m: float = 400.0
     seed: int = 0
     dedicated_vm: bool = True
+    edge_capacity_s: Optional[float] = None
+    legacy_vm_scale: bool = False  # DEPRECATED static N-scaling fallback
 
     def __post_init__(self):
         self.populations = tuple(self.populations)
@@ -258,24 +300,40 @@ class MixedTwoTierDeployment(_DeploymentBase):
 
     def counts(self) -> list:
         """Largest-remainder apportionment of fractions to device counts,
-        with every population floored at one device."""
+        with every population floored at one device.
+
+        Tie-breaking is explicit and deterministic: equal fractional
+        remainders hand out the extra device to the lower population
+        index, and equal over-quota scores shrink the higher-count /
+        lower-index group first — so ``counts`` is a pure function of
+        ``(fractions, num_devices)`` and permutation-equivariant up to
+        those ties.
+        """
         quotas = [p.fraction * self.num_devices for p in self.populations]
         counts = [max(int(q), 1) for q in quotas]
-        rema = sorted(range(len(quotas)), key=lambda i: quotas[i] - int(quotas[i]),
-                      reverse=True)
+        # distribute leftovers by largest remainder, index as tiebreak
+        order = sorted(range(len(quotas)),
+                       key=lambda i: (-(quotas[i] - int(quotas[i])), i))
         i = 0
         while sum(counts) < self.num_devices:
-            counts[rema[i % len(rema)]] += 1
+            counts[order[i % len(order)]] += 1
             i += 1
         while sum(counts) > self.num_devices:  # floors may overshoot
             # shrink the most over-quota group that can still spare a device
             cand = [k for k in range(len(counts)) if counts[k] > 1]
-            j = max(cand, key=lambda k: (counts[k] - quotas[k], counts[k]))
+            if not cand:  # every group at its 1-device floor yet Σ > N
+                raise RuntimeError(
+                    f"cannot apportion {self.num_devices} devices over "
+                    f"{len(self.populations)} populations: every group is at "
+                    "its 1-device floor but the floors exceed num_devices "
+                    "(validated in __post_init__ — this indicates a bug)")
+            j = max(cand, key=lambda k: (counts[k] - quotas[k], counts[k], -k))
             counts[j] -= 1
         return counts
 
     def spec(self) -> FleetSpec:
-        scale = 1.0 if self.dedicated_vm else float(self.num_devices)
+        legacy = self.legacy_vm_scale and not self.dedicated_vm
+        scale = float(self.num_devices) if legacy else 1.0
         groups = []
         for idx, (pop, count) in enumerate(zip(self.populations, self.counts())):
             groups.append(DeviceSpec.from_model(

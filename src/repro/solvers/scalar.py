@@ -15,7 +15,7 @@ _INV_PHI = 0.6180339887498949  # 1/phi
 _INV_PHI2 = 0.3819660112501051  # 1/phi^2
 
 
-def bisect(fn: Callable, lo, hi, iters: int = 80):
+def bisect(fn: Callable, lo, hi, iters: int = 80, endpoint: str = "mid"):
     """Find a root of ``fn`` on [lo, hi] by bisection.
 
     Assumes ``fn(lo)`` and ``fn(hi)`` bracket a root (sign change). If they
@@ -23,7 +23,16 @@ def bisect(fn: Callable, lo, hi, iters: int = 80):
     correct behaviour for the monotone complementarity searches we use it
     for (e.g. a Lagrange-multiplier price that is 0 at an inactive
     constraint).
+
+    ``endpoint`` selects what is returned from the final bracket:
+    ``"mid"`` (default) the midpoint; ``"hi"`` the upper end — which, for
+    a *decreasing step function* such as a discrete market-clearing
+    excess, is guaranteed to sit on the ``fn ≤ 0`` side whenever the
+    initial ``hi`` does (the midpoint can land on either side of the
+    jump).
     """
+    if endpoint not in ("mid", "hi"):
+        raise ValueError(f"endpoint must be 'mid' or 'hi', got {endpoint!r}")
     lo = jnp.asarray(lo, dtype=jnp.float64)
     hi = jnp.asarray(hi, dtype=jnp.float64)
     f_lo = fn(lo)
@@ -39,7 +48,7 @@ def bisect(fn: Callable, lo, hi, iters: int = 80):
         return new_lo, new_hi, new_f_lo
 
     lo, hi, _ = jax.lax.fori_loop(0, iters, body, (lo, hi, f_lo))
-    return 0.5 * (lo + hi)
+    return hi if endpoint == "hi" else 0.5 * (lo + hi)
 
 
 def golden_section(fn: Callable, lo, hi, iters: int = 72):

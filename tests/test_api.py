@@ -139,8 +139,8 @@ def test_plan_many_new_values_hit_jit_cache(fleet):
     planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3))
     planner.plan_many(fleet, hetero_scenarios(fleet.num_devices))
     size = api.plan_many_jit._cache_size()
-    shifted = [Scenario(d + 0.01, e, b) for d, e, b in
-               [tuple(s) for s in hetero_scenarios(fleet.num_devices)]]
+    shifted = [s._replace(deadline=s.deadline + 0.01)
+               for s in hetero_scenarios(fleet.num_devices)]
     planner.plan_many(fleet, shifted)
     assert api.plan_many_jit._cache_size() == size
 

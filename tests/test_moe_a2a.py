@@ -16,8 +16,11 @@ SCRIPT = textwrap.dedent("""
     from repro.models.moe import moe_init, moe_apply
     from repro.parallel import sharding as shd
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    try:  # axis_types only exists on newer jax (>= 0.5)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    except (TypeError, AttributeError):
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
     shd.set_activation_mesh(mesh)
     key = jax.random.PRNGKey(0)
     ctx = jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
@@ -33,9 +36,15 @@ SCRIPT = textwrap.dedent("""
         err = float(jnp.abs(oa - od).max())
         assert err < 1e-4, (e, err)
 
+        # The loss touches BOTH outputs: on jax 0.4.x a purely-unused aux
+        # output gets a symbolic Zero cotangent that the shard_map pmean
+        # transpose cannot handle ('Zero' has no attribute 'reshape').
+        def loss(p):
+            out, aux = jax.jit(lambda p, x: moe_apply(
+                p, x, top_k=2, capacity_factor=16.0, dispatch="a2a"))(p, x)
+            return jnp.sum(out ** 2) + 0.0 * aux
         with ctx:
-            g = jax.grad(lambda p: jnp.sum(jax.jit(lambda p, x: moe_apply(
-                p, x, top_k=2, capacity_factor=16.0, dispatch="a2a")[0])(p, x) ** 2))(p)
+            g = jax.grad(loss)(p)
         assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(g)), e
     print("A2A_OK")
 """)

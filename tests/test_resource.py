@@ -81,6 +81,51 @@ def test_feasible_flag_consistent_with_returned_bandwidth(fleet):
         assert np.array_equal(np.asarray(a.feasible), np.asarray(a.feasible) & ok)
 
 
+def test_dual_bracket_expands_beyond_seed_range(fleet):
+    """Regression (ISSUE 4): the seed's hard-coded bisection bracket
+    pinned λ at 10² on extreme bandwidth-starved scenarios and silently
+    masked the unmet budget behind the rescale. With a huge deadline and
+    a few-dozen-Hz budget the true market-clearing price is ≫ 10²: the
+    expanded bracket must find it, clear Σb ≤ B by *pricing* (not by
+    rescaling), and still match the joint IPM optimum."""
+    m = jnp.full((6,), 7, jnp.int32)
+    D, B = 2000.0, 36.0
+    a = allocate(fleet, m, D, 0.02, B)
+    assert float(a.lam) > 100.0  # beyond the seed bracket top
+    assert float(jnp.sum(a.b)) <= B * (1 + 1e-9)
+    assert bool(a.feasible.all())
+    ai = allocate_ipm(fleet, m, jnp.full((6,), D), jnp.full((6,), 0.02), B)
+    ea, eb = float(jnp.sum(a.energy)), float(jnp.sum(ai.energy))
+    assert abs(ea - eb) / max(ea, 1e-12) < 5e-3, (ea, eb)
+
+
+def test_rescale_respects_feasibility_floor():
+    """Unit contract of the post-bisection rescale: devices are never
+    pushed below their λ-invariant floor while the floors fit in B (the
+    shortfall moves to unclamped devices), and Σb comes out ≤ B."""
+    from repro.core.resource import _rescale_with_floor
+
+    b = jnp.asarray([10.0, 10.0, 2.0])
+    b_lo = jnp.asarray([1.0, 1.0, 1.9])
+    out = np.asarray(_rescale_with_floor(b, b_lo, 11.0))
+    assert out[2] == 1.9  # clamped at its floor, not at 2*(11/22)=1.0
+    np.testing.assert_allclose(out.sum(), 11.0, rtol=1e-12)
+    assert out[0] == out[1] and out[0] < 10.0 * (11.0 / 22.0) + 1e-12
+
+    # no device dips below its floor -> bit-exactly the plain rescale
+    b = jnp.asarray([8.0, 4.0])
+    b_lo = jnp.asarray([1.0, 1.0])
+    out = np.asarray(_rescale_with_floor(b, b_lo, 6.0))
+    np.testing.assert_array_equal(out, np.asarray(b * (6.0 / jnp.sum(b))))
+
+    # floors that overrun B fall back to the plain rescale (Σb <= B is the
+    # hard constraint; the deadline recheck flags the casualties)
+    b = jnp.asarray([5.0, 5.0])
+    b_lo = jnp.asarray([4.0, 4.0])
+    out = np.asarray(_rescale_with_floor(b, b_lo, 6.0))
+    np.testing.assert_array_equal(out, np.asarray(b * (6.0 / jnp.sum(b))))
+
+
 def test_deadline_recheck_flags_shrunken_bandwidth(fleet):
     """Unit check of the recheck predicate: halving an exactly-binding b
     must flip the deadline check to False."""

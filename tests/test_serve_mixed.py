@@ -52,6 +52,48 @@ def test_counts_largest_remainder():
     assert dep.counts() == [1, 1, 1]
 
 
+def _counts_of(fractions, num_devices):
+    cfg = get_config("mamba2-130m")
+    dep = MixedTwoTierDeployment(
+        populations=tuple(Population(cfg, fraction=f, name=f"p{i}")
+                          for i, f in enumerate(fractions)),
+        num_devices=num_devices)
+    return dep.counts()
+
+
+def test_counts_properties():
+    """Property-style pinning of the apportionment: counts sum to
+    ``num_devices``, every population keeps >= 1 device, and the result is
+    permutation-equivariant when the fractional remainders are distinct."""
+    import itertools
+    import random
+
+    rng = random.Random(4)
+    for _ in range(25):
+        k = rng.randint(1, 5)
+        raw = [rng.uniform(0.05, 1.0) for _ in range(k)]
+        fractions = [r / sum(raw) for r in raw]
+        n = rng.randint(k, 4 * k)
+        counts = _counts_of(fractions, n)
+        assert sum(counts) == n, (fractions, n, counts)
+        assert min(counts) >= 1
+
+    # permutation equivariance (distinct remainders => no ties in play)
+    fractions = [0.11, 0.26, 0.63]
+    n = 13
+    base = _counts_of(fractions, n)
+    for perm in itertools.permutations(range(3)):
+        permuted = _counts_of([fractions[i] for i in perm], n)
+        assert permuted == [base[i] for i in perm], (perm, permuted, base)
+
+
+def test_counts_remainder_ties_are_deterministic():
+    """Equal remainders hand the extra device to the lower index —
+    explicit, not an accident of sort stability."""
+    assert _counts_of([0.25, 0.25, 0.25, 0.25], 6) == [2, 2, 1, 1]
+    assert _counts_of([0.5, 0.5], 5) == [3, 2]
+
+
 def test_mixed_fleet_is_ragged():
     dep = _mixed(5)
     fleet = dep.fleet()
@@ -98,6 +140,41 @@ def test_two_tier_still_routes_through_builder():
     assert np.asarray(fleet.valid).all()
     assert np.asarray(fleet.num_points).tolist() == [9] * 4
     assert dep.spec().group_slices() == [(0, 4)]
+
+
+def test_shared_edge_is_priced_not_scaled():
+    """``dedicated_vm=False`` now plans against the real capacity
+    constraint (DESIGN.md §edge): the chain stays physical (no N×
+    scaling), the scenario carries ``edge_capacity_s``, and the planned
+    occupancy fits the budget."""
+    from repro.core.resource import select_point
+
+    dep = _mixed(5, dedicated_vm=False)
+    assert dep.edge_capacity() == dep.deadline_s
+    assert dep.scenario().edge_capacity_s == dep.deadline_s
+    fleet = dep.fleet()
+    # physical chain: identical to the dedicated-VM build
+    ded = _mixed(5).fleet()
+    np.testing.assert_array_equal(np.asarray(fleet.chain.t_vm),
+                                  np.asarray(ded.chain.t_vm))
+    p, fleet = dep.plan(policy="robust_exact", outer_iters=3)
+    assert bool(p.feasible.all())
+    occ = float(select_point(fleet, p.m_sel).t_vm.sum())
+    assert occ <= dep.edge_capacity() * (1 + 1e-9)
+    per = dep.validate_per_device(p, fleet)  # congestion-aware MC
+    assert per["ok"].all()
+
+
+def test_legacy_vm_scale_fallback_warns_and_scales():
+    """The deprecated static N-scaling stays available for comparisons —
+    behind an explicit flag and a DeprecationWarning."""
+    dep = _mixed(5, dedicated_vm=False, legacy_vm_scale=True)
+    assert dep.edge_capacity() == float("inf")
+    with pytest.warns(DeprecationWarning, match="vm_time_scale"):
+        fleet = dep.fleet()
+    ded = _mixed(5).fleet()
+    np.testing.assert_allclose(np.asarray(fleet.chain.t_vm),
+                               5.0 * np.asarray(ded.chain.t_vm), rtol=1e-12)
 
 
 def test_population_validation_errors():

@@ -97,9 +97,11 @@ def test_deadline_aware_scheduling(rng):
 
 
 def test_congested_edge_regime_robust_beats_worst_case():
-    """DESIGN.md §5b: with a shared (contended) edge, the planner moves
-    work on-device and the robust policy still saves ≥20% energy vs the
+    """DESIGN.md §edge: with a shared (contended) edge the planner prices
+    VM occupancy — offloading exactly up to the capacity, keeping the rest
+    on-device — and the robust policy still saves ≥20% energy vs the
     worst-case baseline under the same probabilistic deadline."""
+    from repro.core.resource import select_point
     from repro.models.costmodel import TierProfile
 
     dep = TwoTierDeployment(
@@ -113,8 +115,15 @@ def test_congested_edge_regime_robust_beats_worst_case():
     p, fleet = dep.plan(policy="robust_exact")
     pw, _ = dep.plan(policy="worst_case")
     assert bool(p.feasible.all())
-    assert int(p.m_sel.min()) > 0  # work stays on-device
+    # the capacity binds: the edge price is active, total occupancy fits
+    # the budget, and the fleet splits into on-device and offload groups
+    # (static N-scaling forced *everyone* local here)
+    occ = float(select_point(fleet, p.m_sel).t_vm.sum())
+    assert occ <= dep.edge_capacity() * (1 + 1e-9)
+    assert float(p.alloc.mu) > 0.0
+    assert int(p.m_sel.max()) > 0  # some work stays on-device
+    assert int(p.m_sel.min()) == 0  # capacity headroom is actually used
     saving = (float(pw.total_energy) - float(p.total_energy)) / float(pw.total_energy)
     assert saving > 0.20, saving
-    rep = dep.validate(p, fleet)
+    rep = dep.validate(p, fleet)  # congestion-aware MC ground truth
     assert rep["max_violation"] <= dep.eps + 0.01
