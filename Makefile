@@ -16,13 +16,15 @@ test:
 lint:
 	$(PY) -m ruff check src tests benchmarks examples
 
-# Quick perf smoke: planner runtime + PCCP convergence + scenario
-# batching + heterogeneous fleets + shared-edge capacity pricing.
-# bench_runtime, bench_plan_grid, bench_hetero and bench_edge write their
+# Quick perf smoke: planner runtime + structured-vs-dense solver A/B +
+# PCCP convergence + scenario batching + heterogeneous fleets +
+# shared-edge capacity pricing. bench_runtime (runtime + solver
+# sections), bench_plan_grid, bench_hetero and bench_edge write their
 # sections of the BENCH_planner.json artifact (ratio metrics). CI runs
-# this and uploads the artifact per PR.
+# this and uploads the artifact per PR. ``--only solver`` alone runs just
+# the solver A/B section (see benchmarks/run.py).
 bench-smoke:
-	$(PY) -m benchmarks.run --only runtime,convergence,plan_grid,hetero,edge
+	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge
 
 # Full paper-figure benchmark sweep
 bench:

@@ -3,33 +3,97 @@
 The paper reports near-linear scaling in N (MATLAB, i7-8700). The fused
 planner (DESIGN.md §planner) is one XLA program — scanned outer loop,
 vmapped multi-start — so steady-state wall time is solver math, not
-dispatch. We report:
+dispatch. Two sections (``--only runtime`` / ``--only solver`` via
+``benchmarks.run``):
 
-  * steady-state (post-warmup, device-synced) µs/call,
-  * jit compile time separately (the cold first call), and
+``runtime``
+  * steady-state (post-warmup, device-synced) µs/call and jit compile
+    time separately (the cold first call) per fleet size,
   * at N=50 the speedup over the straight-line seed-loop port
-    (``planner_ref.plan_reference``), which shares every numerical
-    building block and differs only in the Python-loop structure.
+    (``planner_ref.plan_reference`` with the seed barrier schedule AND
+    the dense autodiff solver — the seed's full inner-solver cost), and
+  * a per-phase breakdown at N=50: one PCCP inner solve vs one resource
+    allocation vs everything else (edge pricing, argmins, dispatch),
+    estimated against the alternation's phase count.
 
-Writes the ``planner_runtime`` section of ``BENCH_planner.json`` so the
-perf trajectory is tracked across PRs as ratios (memory: wall-clock is
-machine-dependent; the seed-speedup ratio is not).
+``solver``
+  A/B of the PCCP inner-barrier paths (DESIGN.md §solver) on the
+  ``robust`` (PCCP-dominated) policy: ``structured_vs_dense_ratio``
+  (steady-state) and ``compile_ratio``. Ratio metrics only, per the
+  established bench policy on this noisy 2-core host; fail-soft — a
+  ratio < 1 prints a warning instead of failing the run.
+
+Writes the ``planner_runtime`` and ``solver`` sections of
+``BENCH_planner.json`` so the perf trajectory is tracked across PRs as
+ratios (memory: wall-clock is machine-dependent; the ratios are not).
 """
 from __future__ import annotations
 
+import sys
+
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import Row, timed, timed_compile, update_artifact
 from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
 from repro.core import Planner, PlannerConfig, Scenario
-from repro.core.pccp import SEED_SCHEDULE
+from repro.core.ccp import SIGMA_FNS
+from repro.core.pccp import SEED_SCHEDULE, pccp_partition
+from repro.core.planner import get_policy, policy_point_tables
 from repro.core.planner_ref import plan_reference
+from repro.core.resource import allocate
 
 _CFG = dict(policy="robust", outer_iters=2, pccp_iters=6, multi_start=False)
 PLANNER = Planner(PlannerConfig(**_CFG))
 
+#: solver A/B size: big enough that the PCCP dominates, small enough for
+#: the CI smoke (two full compiles). Deliberately disjoint from the
+#: Fig.-11 sweep sizes (4/8/16/24/50): a shared fleet *shape* would let
+#: one path's "cold" call hit the jit cache populated by ``run_runtime``
+#: and report a fictitious compile_ratio when the sections run together.
+_SOLVER_N = 20
 
-def run() -> list[Row]:
+
+def _phase_breakdown(fleet, D, eps, B, plan_us: float) -> dict:
+    """Per-phase µs at one alternation step: PCCP inner solve vs resource
+    allocation vs the remainder (edge pricing, argmins, dispatch).
+
+    The σ model and time inflation come from the configured policy's
+    registry record, so the timed subproblem tracks the policy the plan
+    actually runs. The full plan runs ``outer_iters`` steps of
+    (allocate → tables → partition) plus one final allocate, so the
+    overhead estimate is ``plan − outer·(alloc + pccp) − alloc`` — an
+    *estimate* (the per-step tables drift with m), good enough to show
+    where the wall-clock goes.
+    """
+    n = fleet.num_devices
+    deadline = jnp.full((n,), D, jnp.float64)
+    epsv = jnp.full((n,), eps, jnp.float64)
+    m0 = jnp.full((n,), fleet.max_points - 1, jnp.int32)
+    pol = get_policy(_CFG["policy"])
+
+    alloc, alloc_us = timed(
+        lambda: allocate(fleet, m0, deadline, epsv, B, pol.sigma_model,
+                         pol.ub_k),
+        repeats=3)
+    e_t, t_t, v_t = policy_point_tables(fleet, alloc, pol)
+    sigma = SIGMA_FNS[pol.sigma_model](epsv)
+    x_init = jax.nn.one_hot(m0, fleet.max_points, dtype=jnp.float64)
+    _, pccp_us = timed(
+        lambda: pccp_partition(e_t, t_t, v_t, sigma, deadline, x_init,
+                               num_iters=_CFG["pccp_iters"]),
+        repeats=3)
+    outer = _CFG["outer_iters"]
+    overhead_us = plan_us - outer * (alloc_us + pccp_us) - alloc_us
+    return {
+        "pccp_us": pccp_us,
+        "alloc_us": alloc_us,
+        "overhead_us_est": overhead_us,
+        "pccp_share_est": outer * pccp_us / plan_us,
+    }
+
+
+def run_runtime() -> list[Row]:
     rows: list[Row] = []
     artifact = {"config": _CFG, "rows": []}
     for name, fleet_fn, D, B in (("alexnet", alexnet_fleet, 0.22, 10e6),
@@ -43,15 +107,84 @@ def run() -> list[Row]:
             entry = {"model": name, "n_devices": n, "us": t.us,
                      "compile_us": t.compile_us}
             if n == 50:  # seed comparison at the headline size: the seed's
-                # Python outer loop AND its 168-Newton-step inner barrier
+                # Python outer loop, 168-Newton-step schedule AND dense
+                # autodiff inner solver
                 _, ref_us = timed(
                     lambda: plan_reference(fleet, D, 0.04, B,
-                                           pccp_schedule=SEED_SCHEDULE, **_CFG),
+                                           pccp_schedule=SEED_SCHEDULE,
+                                           solver="dense", **_CFG),
                     repeats=2)
                 entry["seed_us"] = ref_us
                 entry["seed_speedup_ratio"] = ref_us / t.us
                 derived += f";seed_us={ref_us:.0f};speedup={ref_us / t.us:.2f}x"
+                phases = _phase_breakdown(fleet, D, 0.04, B, t.us)
+                entry["phases"] = phases
+                derived += (f";pccp_us={phases['pccp_us']:.0f}"
+                            f";alloc_us={phases['alloc_us']:.0f}")
             artifact["rows"].append(entry)
             rows.append((f"fig11_runtime_{name}_N{n}", t.us, derived))
     update_artifact("planner_runtime", artifact)
     return rows
+
+
+def run_solver() -> list[Row]:
+    """A/B the structured vs dense PCCP inner barrier (ratio metrics)."""
+    fleet = alexnet_fleet(jax.random.PRNGKey(_SOLVER_N), _SOLVER_N)
+    scenario = Scenario(0.22, 0.04, 10e6)
+    # Warm the process-shared machinery (XLA backend, builders) on a
+    # throwaway size so neither timed compile pays first-call-in-process
+    # costs (~2 s on this host, enough to flip the compile ratio).
+    warm = alexnet_fleet(jax.random.PRNGKey(4), 4)
+    jax.block_until_ready(
+        Planner(PlannerConfig(**_CFG)).plan(warm, scenario))
+
+    rows: list[Row] = []
+    timings = {}
+    for solver in ("structured", "dense"):
+        pl = Planner(PlannerConfig(solver=solver, **_CFG))
+        t = timed_compile(lambda: pl.plan(fleet, scenario))
+        timings[solver] = t
+        rows.append((
+            f"solver_{solver}_robust_N{_SOLVER_N}", t.us,
+            f"compile_us={t.compile_us:.0f};"
+            f"energy={float(t.out.total_energy):.4f}"))
+
+    ratio = timings["dense"].us / timings["structured"].us
+    compile_ratio = timings["dense"].compile_us / timings["structured"].compile_us
+    same_plan = bool(
+        jnp.all(timings["dense"].out.m_sel == timings["structured"].out.m_sel))
+    update_artifact("solver", {
+        "n_devices": _SOLVER_N,
+        "config": _CFG,
+        "structured": {"us": timings["structured"].us,
+                       "compile_us": timings["structured"].compile_us},
+        "dense": {"us": timings["dense"].us,
+                  "compile_us": timings["dense"].compile_us},
+        "structured_vs_dense_ratio": ratio,
+        "compile_ratio": compile_ratio,
+        "same_m_sel": same_plan,
+        "meets_1p5x": ratio >= 1.5,
+    })
+    if ratio < 1.0:  # fail-soft: warn, never fail the bench run
+        print(f"WARNING: structured_vs_dense_ratio={ratio:.2f} < 1 — the "
+              "structured barrier is slower than the dense reference on "
+              "this host", file=sys.stderr)
+    rows.append((f"solver_structured_vs_dense_N{_SOLVER_N}", 0.0,
+                 f"ratio={ratio:.2f}x;compile_ratio={compile_ratio:.2f}x;"
+                 f"same_m_sel={same_plan}"))
+    return rows
+
+
+SECTIONS = {"runtime": run_runtime, "solver": run_solver}
+
+# ``benchmarks.run`` selects sections without importing excluded modules,
+# so it keeps its own declaration — fail loudly if the two drift.
+from benchmarks.run import MODULE_SECTIONS as _DECLARED  # noqa: E402
+
+assert tuple(SECTIONS) == _DECLARED["bench_runtime"], (
+    "benchmarks/run.py MODULE_SECTIONS is out of sync with "
+    "bench_runtime.SECTIONS")
+
+
+def run() -> list[Row]:
+    return run_runtime() + run_solver()

@@ -1,6 +1,17 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 #
-#   PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13,...]
+#   PYTHONPATH=src python -m benchmarks.run [--only runtime,solver,...]
+#
+# ``--only`` entries match bench *module* names (substring) as before, and
+# additionally the named *sections* a module exposes via a ``SECTIONS``
+# dict (section name → zero-arg runner, declared in ``MODULE_SECTIONS``
+# below so excluded modules are never imported) — so ``--only solver``
+# runs just the solver A/B section of bench_runtime without the Fig.-11
+# sweep, and ``--only runtime`` just the sweep without the A/B. For a
+# module that declares sections, section matches take priority over a
+# module-substring match (otherwise ``runtime`` could never select its
+# section — it always substring-matches ``bench_runtime``); use the full
+# module name (``--only bench_runtime``) to run such a module whole.
 #
 # Benches:
 #   bench_fit           — Fig. 6   (NLS fit of t̄ = w/(g·f))
@@ -46,6 +57,15 @@ MODULES = [
     "bench_roofline",
 ]
 
+#: Named sections (module → section names) selectable via ``--only``
+#: without running the whole module. Declared here — not discovered by
+#: importing — so a filtered run never imports (and never fails on)
+#: modules it was asked to exclude. Keep in sync with each module's
+#: ``SECTIONS`` dict; bench_runtime asserts the two agree.
+MODULE_SECTIONS = {
+    "bench_runtime": ("runtime", "solver"),
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -57,10 +77,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for mod_name in MODULES:
-        if wanted and not any(w in mod_name for w in wanted):
-            continue
+        module_match = wanted is None or any(w in mod_name for w in wanted)
+        section_match = [] if wanted is None else [
+            s for s in MODULE_SECTIONS.get(mod_name, ())
+            if any(w in s for w in wanted)]
+        if not module_match and not section_match:
+            continue  # excluded modules are never imported
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            if section_match:  # sections shadow module-substring matches
+                for sec_name in section_match:
+                    emit(mod.SECTIONS[sec_name]())
+                continue
             emit(mod.run())
         except Exception:
             failures += 1

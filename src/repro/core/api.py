@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocks import Fleet
+from repro.core.pccp import SOLVERS
 from repro.core.planner import (
     Plan,
     Policy,
@@ -175,6 +176,15 @@ class PlannerConfig:
     ``edge_capacity_s`` unset (``None`` here means no default → dedicated
     VMs). Despite living on the config it is resolved into the scenario's
     traced leaf, so varying it never recompiles either.
+
+    ``solver`` selects the PCCP inner-barrier path (DESIGN.md §solver):
+    ``"structured"`` (default) is the structure-exploiting closed-form
+    KKT solver, ``"dense"`` the generic autodiff A/B reference — both
+    golden-pinned to the same plans. ``pccp_gated`` swaps the PCCP outer
+    scan for the early-exiting while_loop (Algorithm 1's θ_err stopping
+    rule); keep the default ``False`` for grid/batch planning, where the
+    vmapped while_loop runs to the slowest lane anyway and the gated
+    fixed point is not bit-comparable to the golden scan path.
     """
 
     policy: Union[str, Policy] = "robust"
@@ -184,6 +194,8 @@ class PlannerConfig:
     init_m: Optional[int] = None
     channel_cv: float = 0.0
     edge_capacity_s: Optional[float] = None
+    solver: str = "structured"
+    pccp_gated: bool = False
 
     def __post_init__(self):
         if self.outer_iters < 1:
@@ -192,6 +204,9 @@ class PlannerConfig:
             raise ValueError("pccp_iters must be >= 1")
         if self.edge_capacity_s is not None and not self.edge_capacity_s > 0:
             raise ValueError("edge_capacity_s must be positive (or None)")
+        if self.solver not in SOLVERS:
+            raise ValueError(
+                f"solver must be one of {SOLVERS}, got {self.solver!r}")
         get_policy(self.policy)  # fail fast on unknown policies
 
     def resolved_policy(self) -> Policy:
@@ -199,12 +214,13 @@ class PlannerConfig:
 
 
 _BATCH_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv",
-                  "multi_start")
+                  "multi_start", "solver", "pccp_gated")
 
 
 @partial(jax.jit, static_argnames=_BATCH_STATICS)
 def _plan_many_impl(fleet, scenarios: Scenario, m0, *, policy: Policy,
-                    outer_iters, pccp_iters, channel_cv, multi_start):
+                    outer_iters, pccp_iters, channel_cv, multi_start,
+                    solver, pccp_gated):
     """K zipped scenarios vmapped over ONE compiled program.
 
     Each scenario is planned exactly as the single-scenario entry would
@@ -214,15 +230,16 @@ def _plan_many_impl(fleet, scenarios: Scenario, m0, *, policy: Policy,
     """
     if policy.solve is not None:
         run = lambda d, e, b, cap: _solve_entry(
-            fleet, d, e, b, cap, policy, outer_iters, pccp_iters, channel_cv)
+            fleet, d, e, b, cap, policy, outer_iters, pccp_iters, channel_cv,
+            solver, pccp_gated)
     elif multi_start:
         run = lambda d, e, b, cap: _multi_start(
             fleet, d, e, b, cap, m0, policy, outer_iters, pccp_iters,
-            channel_cv)
+            channel_cv, solver, pccp_gated)
     else:
         run = lambda d, e, b, cap: _alternation(
             fleet, d, e, b, cap, m0, policy, outer_iters, pccp_iters,
-            channel_cv)
+            channel_cv, solver, pccp_gated)
     return jax.vmap(run)(scenarios.deadline, scenarios.eps, scenarios.B,
                          scenarios.edge_capacity_s)
 
@@ -250,7 +267,8 @@ class Planner:
         c = self.config
         return dict(policy=self.policy, outer_iters=int(c.outer_iters),
                     pccp_iters=int(c.pccp_iters),
-                    channel_cv=float(c.channel_cv))
+                    channel_cv=float(c.channel_cv), solver=str(c.solver),
+                    pccp_gated=bool(c.pccp_gated))
 
     def _starts(self, fleet: Fleet, init_m):
         if init_m is None:

@@ -13,6 +13,14 @@ exactly the shape the inner objective (e_vec) already has, so the
 barrier solves are unchanged and edge contention steers the relaxed x
 like any other energy term.
 
+Solver paths (DESIGN.md §solver): the inner problem (36) is assembled
+ONCE as a :class:`repro.solvers.ipm.StructuredSpec` — affine matrix ``C``
+plus the two DC quadratic rows — and solved either by the
+structure-exploiting barrier (``solver="structured"``, the default:
+closed-form derivatives, pair-elimination + Woodbury KKT, analytic line
+search) or by the dense autodiff barrier (``solver="dense"``, the A/B
+reference, numerically equivalent and golden-pinned against it).
+
 Deviations from the paper (documented in DESIGN.md):
 - a slack δ with a high penalty is added to the deadline constraint (33c)
   so every inner problem is strictly feasible even when a device has no
@@ -28,13 +36,20 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.solvers.ipm import BarrierSpec, barrier_solve
+from repro.solvers.ipm import (
+    BarrierSpec,
+    StructuredSpec,
+    barrier_solve,
+    structured_barrier_solve,
+    structured_inequalities,
+)
 
 _Y_MIN = 1e-9
 
 #: Barrier schedule of the inner solves: (t0, mu, stages, newton_per_stage,
-#: ls_candidates). Every Newton step costs a batched Cholesky + line
+#: ls_candidates). Every Newton step costs a batched KKT solve + line
 #: search, so the step COUNT is the planner's wall-clock; this is the
 #: fewest stages/steps that keep the golden seed plans
 #: (tests/golden/seed_plans.json) and the PCCP stationarity property intact
@@ -45,27 +60,40 @@ _Y_MIN = 1e-9
 DEFAULT_SCHEDULE = (1.0, 30.0, 6, 4, 24)
 SEED_SCHEDULE = (1.0, 8.0, 12, 14, 40)
 
+#: Valid values of the ``solver`` static of :func:`pccp_partition` (and of
+#: ``PlannerConfig.solver``): the structure-exploiting barrier vs the
+#: dense-autodiff A/B reference.
+SOLVERS = ("structured", "dense")
+
 
 class PCCPResult(NamedTuple):
     m_sel: jnp.ndarray  # (N,) int32 chosen partition points
     x_relaxed: jnp.ndarray  # (N, M+1) final relaxed solution
     iters_to_converge: jnp.ndarray  # (N,) Algorithm-1 iterations (Fig. 9)
-    step_norms: jnp.ndarray  # (K, N) ‖x_i − x_{i−1}‖ trajectory
+    step_norms: jnp.ndarray  # (K, N) ‖x_i − x_{i−1}‖ trajectory (gated
+    # runs leave +inf in the rows the early exit never executed)
     feasible: jnp.ndarray  # (N,) bool — chosen point satisfies (28)
 
 
-def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev,
-                   schedule=DEFAULT_SCHEDULE):
-    """Build problem (36) for one device and solve it with the barrier IPM.
+def _inner_spec(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev):
+    """Assemble problem (36) for one device as a ``StructuredSpec``.
 
     z = [x (M1), y, α, β, δ, γ (M1)] — dim 2·M1 + 4.
 
     All constraints are affine except the two DC rows ((36c): Σ var·x²,
     (36d): y²), so the system is assembled ONCE per PCCP iteration as
     fi(z) = C z + c0 + q(z) with a constant (per-iterate) matrix C and a
-    two-entry quadratic correction q. Every barrier/Newton/line-search
-    evaluation is then a single matvec instead of a dozen concatenated
-    ops — the inner solve is where the whole planner's wall-clock goes.
+    two-entry diagonal quadratic correction q. Every barrier/Newton/
+    line-search evaluation is then a single matvec instead of a dozen
+    concatenated ops — the inner solve is where the whole planner's
+    wall-clock goes.
+
+    Row classification for the structured Hessian ``D + pairs + U S Uᵀ``
+    (DESIGN.md §solver): the box rows on x, the y/α/β/δ/γ positivity rows
+    are single-nonzero (pure diagonal); each (36e) row couples exactly
+    (x_j, γ_j) with γ_j appearing nowhere else (pair-eliminable); only
+    the deadline row (33c) and the two DC rows (36c)/(36d) are dense —
+    a rank-3 Woodbury term.
     """
     m1 = e_vec.shape[0]
     dim = 2 * m1 + 4
@@ -84,9 +112,6 @@ def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev,
         .at[idl].set(rho_dl)
         .at[ig].set(rho)
     )
-
-    def objective(z):
-        return jnp.dot(c_obj, z)
 
     # Row layout (same order as the paper's constraint list):
     #   [0, m1)        −x ≤ 0
@@ -133,13 +158,27 @@ def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev,
         .at[r_e + ar].set(x_prev**2)
         .at[r_y].set(_Y_MIN)
     )
+    quad_diag = (
+        jnp.zeros((2, dim), jnp.float64).at[0, ix].set(var_vec).at[1, iy].set(1.0)
+    )
 
-    def inequalities(z):
-        x, y = z[ix], z[iy]
-        fi = C @ z + c0
-        return fi.at[r_c].add(jnp.dot(var_vec, x * x)).at[r_d].add(y * y)
-
-    A = jnp.zeros((1, dim), jnp.float64).at[0, ix].set(1.0)
+    # Static row classification (concrete numpy — fixed by m1, not traced).
+    j = np.arange(m1)
+    spec = StructuredSpec(
+        c_obj=c_obj,
+        C=C,
+        c0=c0,
+        quad_diag=quad_diag,
+        eq_vec=jnp.zeros((dim,), jnp.float64).at[ix].set(1.0),
+        eq_rhs=jnp.asarray(1.0, jnp.float64),
+        quad_rows=np.array([r_c, r_d]),
+        diag_rows=np.concatenate([j, m1 + j, [r_y, r_a, r_a + 1, r_a + 2], r_g + j]),
+        diag_cols=np.concatenate([j, j, [iy, ia, ib, idl], m1 + 4 + j]),
+        pair_rows=r_e + j,
+        pair_x=j,
+        pair_elim=m1 + 4 + j,
+        dense_rows=np.array([r_ddl, r_c, r_d]),
+    )
 
     # Strictly feasible start around the previous iterate.
     x0 = 0.8 * x_prev + 0.2 / m1
@@ -152,21 +191,43 @@ def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev,
     z0 = jnp.concatenate(
         [x0, y0[None], alpha0[None], beta0[None], delta0[None], gamma0]
     )
+    return spec, z0
 
+
+def _inner_problem(e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev,
+                   schedule=DEFAULT_SCHEDULE, solver: str = "structured"):
+    """Build problem (36) for one device and solve it with the barrier IPM.
+
+    ``solver="structured"`` (default) runs the structure-exploiting
+    barrier of ``solvers/ipm.py`` — closed-form derivatives, O(dim) KKT
+    solves, analytic line search. ``solver="dense"`` wraps the same
+    assembled program in a :class:`BarrierSpec` and solves it with the
+    generic autodiff path (the golden-pinned A/B reference).
+    """
+    spec, z0 = _inner_spec(
+        e_vec, t_vec, var_vec, sigma, deadline, rho, x_prev, y_prev)
+    m1 = e_vec.shape[0]
     t0, mu, stages, newton, ls = schedule
-    res = barrier_solve(
-        BarrierSpec(objective=objective, inequalities=inequalities, eq_matrix=A, eq_rhs=jnp.ones((1,))),
-        z0,
-        t0=t0,
-        mu=mu,
-        outer_iters=stages,
-        newton_iters=newton,
-        ls_iters=ls,
-    )
-    return res.z[ix], res.z[iy]
+    if solver == "structured":
+        res = structured_barrier_solve(
+            spec, z0, t0=t0, mu=mu, outer_iters=stages, newton_iters=newton,
+            ls_iters=ls)
+    elif solver == "dense":
+        res = barrier_solve(
+            BarrierSpec(
+                objective=lambda z: jnp.dot(spec.c_obj, z),
+                inequalities=lambda z: structured_inequalities(spec, z),
+                eq_matrix=spec.eq_vec[None, :],
+                eq_rhs=jnp.ones((1,)),
+            ),
+            z0, t0=t0, mu=mu, outer_iters=stages, newton_iters=newton,
+            ls_iters=ls)
+    else:
+        raise ValueError(f"solver must be one of {SOLVERS}, got {solver!r}")
+    return res.z[0:m1], res.z[m1]
 
 
-@partial(jax.jit, static_argnames=("num_iters", "schedule"))
+@partial(jax.jit, static_argnames=("num_iters", "schedule", "solver", "gated"))
 def pccp_partition(
     e_table: jnp.ndarray,  # (N, M+1) energy of each point at current (b, f)
     t_table: jnp.ndarray,  # (N, M+1) mean total time of each point
@@ -180,27 +241,62 @@ def pccp_partition(
     rho_max: float = 1e5,
     theta_err: float = 1e-3,
     schedule: tuple = DEFAULT_SCHEDULE,  # inner barrier (t0, mu, stages, newton, ls)
+    solver: str = "structured",  # inner barrier path: structured | dense
+    gated: bool = False,  # while_loop outer: stop when all devices converge
 ) -> PCCPResult:
+    """Run Algorithm 1 on the whole fleet (one vmapped inner IPM per step).
+
+    ``gated=True`` swaps the fixed-trip ``lax.scan`` outer loop for a
+    ``lax.while_loop`` that stops as soon as EVERY device satisfies
+    ‖x_i − x_{i−1}‖ < θ_err — the Algorithm-1 stopping rule, saving the
+    remaining iterations' wall-clock. The scan path stays the default
+    because (a) under outer ``vmap`` (multi-start spread, zipped scenario
+    batches) a while_loop runs until the *slowest lane* finishes anyway,
+    and (b) stopping early yields a (slightly) different fixed point than
+    running the full ρ-ramp, so the gated path is not bit-comparable to
+    the golden-pinned scan path (DESIGN.md §solver).
+    """
     n, m1 = e_table.shape
 
     inner = jax.vmap(
         lambda e, t, v, s, d, rho, xp, yp: _inner_problem(
-            e, t, v, s, d, rho, xp, yp, schedule),
+            e, t, v, s, d, rho, xp, yp, schedule, solver),
         in_axes=(0, 0, 0, 0, 0, None, 0, 0))
 
-    def step(carry, _):
-        x_prev, y_prev, rho = carry
+    def run_step(x_prev, y_prev, rho):
         x_new, y_new = inner(
             e_table, t_table, var_table, sigma, deadline, rho, x_prev, y_prev
         )
         dx = jnp.linalg.norm(x_new - x_prev, axis=-1)
-        rho = jnp.minimum(nu * rho, rho_max)
-        return (x_new, y_new, rho), dx
+        return x_new, y_new, jnp.minimum(nu * rho, rho_max), dx
 
     y0 = jnp.sqrt(jnp.maximum(jnp.sum(var_table * x_init**2, -1), 4.0 * _Y_MIN**2))
-    (x_fin, _, _), dxs = jax.lax.scan(
-        step, (x_init, y0, jnp.asarray(rho0, jnp.float64)), None, length=num_iters
-    )
+    rho_init = jnp.asarray(rho0, jnp.float64)
+
+    if gated:
+        def cond(state):
+            i, _, _, _, _, done = state
+            return (i < num_iters) & ~done
+
+        def body(state):
+            i, x_prev, y_prev, rho, dxs, _ = state
+            x_new, y_new, rho, dx = run_step(x_prev, y_prev, rho)
+            dxs = dxs.at[i].set(dx)
+            return i + 1, x_new, y_new, rho, dxs, jnp.all(dx < theta_err)
+
+        # +inf in unvisited rows: they never count as converged below.
+        dx_buf = jnp.full((num_iters, n), jnp.inf, jnp.float64)
+        _, x_fin, _, _, dxs, _ = jax.lax.while_loop(
+            cond, body, (jnp.asarray(0), x_init, y0, rho_init, dx_buf, False))
+    else:
+        def step(carry, _):
+            x_prev, y_prev, rho = carry
+            x_new, y_new, rho, dx = run_step(x_prev, y_prev, rho)
+            return (x_new, y_new, rho), dx
+
+        (x_fin, _, _), dxs = jax.lax.scan(
+            step, (x_init, y0, rho_init), None, length=num_iters
+        )
 
     # Algorithm-1 iteration count: first i with ‖x_i − x_{i−1}‖ < θ_err.
     converged = dxs < theta_err  # (K, N)

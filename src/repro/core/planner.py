@@ -106,9 +106,12 @@ class Policy:
     repeated lookups hit the same jit-cache key.
 
     ``partition`` runs inside the Algorithm-2 alternation with signature
-    ``(m, e_table, t_table, var_table, sigma, deadline, pccp_iters) ->
-    (m_new, feasible, iters)`` — for edge-aware policies the energy table
-    arrives already μ-priced (``e + μ·t̄_vm``). ``solve``, when set,
+    ``(m, e_table, t_table, var_table, sigma, deadline, pccp_iters,
+    solver, gated) -> (m_new, feasible, iters)`` — for edge-aware policies
+    the energy table arrives already μ-priced (``e + μ·t̄_vm``); ``solver``
+    / ``gated`` are the inner-barrier statics of DESIGN.md §solver
+    (partition steps that do not run the PCCP ignore them). ``solve``,
+    when set,
     replaces the whole alternation (signature ``(fleet, deadline, eps, B,
     edge_cap, policy, outer_iters, pccp_iters, channel_cv) -> Plan``) —
     used by ``"optimal"``.
@@ -193,6 +196,24 @@ def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
     return e_table, t_table, var_table
 
 
+def policy_point_tables(fleet: Fleet, alloc: Allocation, policy: Policy,
+                        channel_cv: float = 0.0):
+    """``_point_tables`` with the policy's worst-case time inflation
+    applied (mean + ub_k·std, variance dropped — §VI baseline). The ONE
+    implementation of the policy-conditioned tables: the alternation, the
+    straight-line reference port and the phase-breakdown bench all read
+    their partition subproblem from here, so they cannot drift apart.
+    """
+    e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
+    if policy.ub_k > 0.0:  # worst-case inflation: mean + ub_k·std, no variance
+        t_table = t_table + policy.ub_k * (
+            jnp.sqrt(jnp.maximum(fleet.chain.v_loc, 0.0))
+            + jnp.sqrt(jnp.maximum(fleet.chain.v_vm, 0.0))
+        )
+        var_table = jnp.zeros_like(var_table)
+    return e_table, t_table, var_table
+
+
 def _exact_partition(e_table, t_table, var_table, sigma, deadline):
     """Exact per-device enumeration under the ECR constraint (28)."""
     margin = t_table + sigma[:, None] * jnp.sqrt(jnp.maximum(var_table, 0.0)) - deadline[:, None]
@@ -252,19 +273,20 @@ def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
 
 
 def exact_partition_step(m, e_table, t_table, var_table, sigma, deadline,
-                         pccp_iters):
+                         pccp_iters, solver="structured", gated=False):
     """Partition strategy: exact per-device enumeration (DESIGN.md §2)."""
-    del m, pccp_iters
+    del m, pccp_iters, solver, gated  # no inner barrier to configure
     m_new, feas = _exact_partition(e_table, t_table, var_table, sigma, deadline)
     return m_new, feas, jnp.ones(m_new.shape, jnp.int32)
 
 
 def pccp_partition_step(m, e_table, t_table, var_table, sigma, deadline,
-                        pccp_iters):
+                        pccp_iters, solver="structured", gated=False):
     """Partition strategy: the paper's penalty CCP (Algorithm 1)."""
     x_init = jax.nn.one_hot(m, e_table.shape[-1], dtype=jnp.float64)
     res = pccp_partition(
-        e_table, t_table, var_table, sigma, deadline, x_init, num_iters=pccp_iters
+        e_table, t_table, var_table, sigma, deadline, x_init,
+        num_iters=pccp_iters, solver=solver, gated=gated
     )
     return res.m_sel, res.feasible, res.iters_to_converge
 
@@ -318,7 +340,8 @@ def initial_points(fleet: Fleet, init_m, multi_start: bool):
 
 
 def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
-                 outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
+                 outer_iters: int, pccp_iters: int, channel_cv: float,
+                 solver: str = "structured", pccp_gated: bool = False) -> Plan:
     """One Algorithm-2 alternation from initial points ``m0`` — fully traced.
 
     The outer loop is a ``lax.scan`` carrying the partition decision; each
@@ -344,13 +367,8 @@ def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
     def step(m, _):
         alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k,
                          channel_cv, edge_capacity_s=edge_cap)
-        e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
-        if ub_k > 0.0:  # worst-case inflation: mean + ub_k·std, no variance
-            t_table = t_table + ub_k * (
-                jnp.sqrt(jnp.maximum(fleet.chain.v_loc, 0.0))
-                + jnp.sqrt(jnp.maximum(fleet.chain.v_vm, 0.0))
-            )
-            var_table = jnp.zeros_like(var_table)
+        e_table, t_table, var_table = policy_point_tables(
+            fleet, alloc, policy, channel_cv)
         if policy.edge_aware:
             mu = _edge_clearing_price(e_table, t_table, var_table, sigma,
                                       deadline, occ_table, edge_cap)
@@ -358,7 +376,7 @@ def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
             mu = jnp.asarray(0.0, jnp.float64)
         m_new, feas, pc = policy.partition(
             m, e_table + mu * occ_table, t_table, var_table, sigma, deadline,
-            pccp_iters)
+            pccp_iters, solver, pccp_gated)
         # the trace records true energy, not the μ-priced surrogate
         obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
         return m_new, (obj, pc, feas, mu)
@@ -403,24 +421,30 @@ def _select_best(plans: Plan) -> jnp.ndarray:
 
 def _multi_start(fleet: Fleet, deadline, eps, B, edge_cap, m0_batch,
                  policy: Policy, outer_iters: int, pccp_iters: int,
-                 channel_cv: float) -> Plan:
+                 channel_cv: float, solver: str = "structured",
+                 pccp_gated: bool = False) -> Plan:
     """vmapped multi-start alternation + traced best-plan selection."""
     plans = jax.vmap(
         lambda m0: _alternation(fleet, deadline, eps, B, edge_cap, m0, policy,
-                                outer_iters, pccp_iters, channel_cv)
+                                outer_iters, pccp_iters, channel_cv, solver,
+                                pccp_gated)
     )(m0_batch)
     idx = _select_best(plans)
     return jax.tree_util.tree_map(lambda x: x[idx], plans)
 
 
 def _solve_entry(fleet: Fleet, deadline, eps, B, edge_cap, policy: Policy,
-                 outer_iters: int, pccp_iters: int, channel_cv: float) -> Plan:
-    """Entry for solve-override policies (no alternation, no starts)."""
+                 outer_iters: int, pccp_iters: int, channel_cv: float,
+                 solver: str = "structured", pccp_gated: bool = False) -> Plan:
+    """Entry for solve-override policies (no alternation, no starts; the
+    inner-barrier statics do not apply to exact solves)."""
+    del solver, pccp_gated
     return policy.solve(fleet, deadline, eps, B, edge_cap, policy,
                         outer_iters, pccp_iters, channel_cv)
 
 
-_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv")
+_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv", "solver",
+            "pccp_gated")
 
 #: Jitted entry points. Exposed at module level (not hidden in ``plan``) so
 #: tests can assert cache behaviour via ``_cache_size()``. ``policy`` is a

@@ -15,8 +15,8 @@ It exists for two reasons:
    PRs (Fig. 11 runtime claim).
 
 It shares every numerical building block (``allocate``, ``pccp_partition``,
-``_point_tables``, ``_exact_partition``) with the fused planner, so any
-divergence isolates the fusion restructuring itself.
+``policy_point_tables``, ``_exact_partition``) with the fused planner, so
+any divergence isolates the fusion restructuring itself.
 """
 from __future__ import annotations
 
@@ -31,9 +31,9 @@ from repro.core.pccp import pccp_partition
 from repro.core.planner import (
     Plan,
     _exact_partition,
-    _point_tables,
     default_starts,
     get_policy,
+    policy_point_tables,
 )
 from repro.core.resource import allocate, select_point
 
@@ -50,19 +50,23 @@ def plan_reference(
     multi_start: bool = True,
     channel_cv: float = 0.0,
     pccp_schedule: tuple | None = None,
+    solver: str = "structured",
 ) -> Plan:
     """Seed-loop Algorithm 2: Python outer loop, sequential multi-start.
 
     ``pccp_schedule`` overrides the inner barrier schedule — pass
     ``pccp.SEED_SCHEDULE`` to reproduce the seed's full inner-solver cost
     (the default shares the tuned schedule with the fused planner so
-    golden comparisons are bit-exact).
+    golden comparisons are bit-exact). ``solver`` picks the inner barrier
+    path; pass ``"dense"`` (with the seed schedule) to reproduce the
+    seed's generic autodiff solver for speedup accounting.
     """
     if multi_start and init_m is None:
         plans = [
             plan_reference(fleet, deadline, eps, B, policy, outer_iters,
                            jnp.int32(s), pccp_iters, multi_start=False,
-                           channel_cv=channel_cv, pccp_schedule=pccp_schedule)
+                           channel_cv=channel_cv, pccp_schedule=pccp_schedule,
+                           solver=solver)
             for s in default_starts(fleet.max_points)
         ]
 
@@ -92,19 +96,14 @@ def plan_reference(
     alloc = None
     for _ in range(outer_iters):
         alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
-        e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
-        if ub_k > 0.0:  # worst-case baseline: inflate times, drop variance
-            t_table = t_table + ub_k * (
-                jnp.sqrt(jnp.maximum(fleet.chain.v_loc, 0.0))
-                + jnp.sqrt(jnp.maximum(fleet.chain.v_vm, 0.0))
-            )
-            var_table = jnp.zeros_like(var_table)
+        e_table, t_table, var_table = policy_point_tables(
+            fleet, alloc, pol, channel_cv)
         if policy == "robust":
             x_init = jax.nn.one_hot(m, m1, dtype=jnp.float64)
             pccp_kw = {} if pccp_schedule is None else {"schedule": pccp_schedule}
             res = pccp_partition(
                 e_table, t_table, var_table, sigma, deadline, x_init,
-                num_iters=pccp_iters, **pccp_kw
+                num_iters=pccp_iters, solver=solver, **pccp_kw
             )
             m, feasible = res.m_sel, res.feasible
             pccp_trace.append(res.iters_to_converge)

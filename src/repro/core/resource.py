@@ -366,6 +366,16 @@ def allocate_ipm(
 
     Variables are scaled: β = b/B ∈ (0,1], φ = f/f_max ∈ [f_min/f_max, 1].
 
+    This rides the *dense* autodiff barrier on purpose: unlike the PCCP
+    inner problem (36), problem (23) is not of the structured family
+    ``fi = C z + c0 + q(z)`` — its deadline rows contain t_off = d/R(b)
+    with the log-rate R, non-affine and non-quadratic in b — so the
+    closed-form path of ``solvers/ipm.py`` does not apply. It still gets
+    the shared solver improvements: scale-aware Tikhonov regularization
+    and the Newton-decrement early exit (``gate_tol``), which cuts the
+    12×20 fixed Newton-step budget down to the steps that actually move
+    the iterate.
+
     ``edge_capacity_s`` (concrete host float — this is a test/cross-check
     utility) appends the shared-edge capacity row Σ t̄_vm(m_n) − C ≤ 0.
     At fixed m the row is a constant: strictly satisfied it is inert in
@@ -439,6 +449,7 @@ def allocate_ipm(
         mu=10.0,
         outer_iters=12,
         newton_iters=20,
+        gate_tol=1e-13,
     )
     b, f = unpack(res.z)
     e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)

@@ -106,11 +106,14 @@ class _DeploymentBase:
 
         The deployment's edge capacity rides in as the config *default*,
         so grid/batch sweeps that build their own scenarios still price
-        the shared edge (a per-scenario ``edge_capacity_s`` wins).
+        the shared edge (a per-scenario ``edge_capacity_s`` wins). The
+        deployment's ``solver`` field (DESIGN.md §solver) rides in the
+        same way; a ``solver=`` keyword wins.
         """
         cap = self.edge_capacity()
         if not np.isinf(cap):
             kw.setdefault("edge_capacity_s", cap)
+        kw.setdefault("solver", getattr(self, "solver", "structured"))
         return Planner(PlannerConfig(policy=policy, **kw))
 
     def plan(self, policy: str = "robust_exact", **kw):
@@ -223,6 +226,9 @@ class TwoTierDeployment(_DeploymentBase):
     #: into the chain instead of pricing the shared edge. Kept only as a
     #: comparison baseline (see ``benchmarks/bench_edge.py``).
     legacy_vm_scale: bool = False
+    #: PCCP inner-barrier path (DESIGN.md §solver): ``"structured"``
+    #: (closed-form KKT, the default) or ``"dense"`` (autodiff reference).
+    solver: str = "structured"
 
     def spec(self) -> FleetSpec:
         legacy = self.legacy_vm_scale and not self.dedicated_vm
@@ -285,6 +291,7 @@ class MixedTwoTierDeployment(_DeploymentBase):
     dedicated_vm: bool = True
     edge_capacity_s: Optional[float] = None
     legacy_vm_scale: bool = False  # DEPRECATED static N-scaling fallback
+    solver: str = "structured"  # PCCP inner-barrier path (DESIGN.md §solver)
 
     def __post_init__(self):
         self.populations = tuple(self.populations)

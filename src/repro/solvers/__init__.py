@@ -12,7 +12,13 @@ jax.config.update("jax_enable_x64", True)
 
 from repro.solvers.scalar import bisect, golden_section  # noqa: E402,F401
 from repro.solvers.nls import levenberg_marquardt  # noqa: E402,F401
-from repro.solvers.ipm import barrier_solve, BarrierSpec  # noqa: E402,F401
+from repro.solvers.ipm import (  # noqa: E402,F401
+    BarrierSpec,
+    StructuredSpec,
+    barrier_solve,
+    structured_barrier_solve,
+    woodbury_solve,
+)
 
 __all__ = [
     "bisect",
@@ -20,4 +26,7 @@ __all__ = [
     "levenberg_marquardt",
     "barrier_solve",
     "BarrierSpec",
+    "StructuredSpec",
+    "structured_barrier_solve",
+    "woodbury_solve",
 ]

@@ -1,0 +1,188 @@
+"""Structured barrier solver (DESIGN.md §solver): Woodbury solves,
+closed-form derivatives, structured-vs-dense equivalence, convergence
+gating, and the scale-aware regularization across the PCCP ρ-ramp.
+
+Deterministic fixed-seed tests run everywhere; the ``@given`` variants
+widen the same checks over random instances when hypothesis is installed
+(CI), and skip cleanly otherwise (tests/_hyp.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.ccp import sigma_cantelli
+from repro.core.pccp import _inner_spec, pccp_partition
+from repro.solvers.ipm import (
+    structured_barrier,
+    structured_grad,
+    structured_hessian,
+    structured_inequalities,
+    woodbury_solve,
+)
+
+
+def _random_sdlr(seed, n=16, k=3, nrhs=2):
+    """Random SPD diagonal + low-rank system (d, U, w, r)."""
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(0.3, 5.0, n)
+    U = rng.normal(size=(n, k))
+    w = rng.uniform(0.05, 3.0, k)
+    r = rng.normal(size=(n, nrhs))
+    return (jnp.asarray(d), jnp.asarray(U), jnp.asarray(w), jnp.asarray(r))
+
+
+def _check_woodbury(d, U, w, r):
+    x = woodbury_solve(d, U, w, r)
+    H = jnp.diag(d) + (U * w[None, :]) @ U.T
+    ref = jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(H), r)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref),
+                               rtol=1e-9, atol=1e-11)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_woodbury_matches_cho_solve(seed):
+    _check_woodbury(*_random_sdlr(seed))
+
+
+def test_woodbury_single_rhs_and_rank_zero():
+    d, U, w, r = _random_sdlr(7)
+    _check_woodbury(d, U, w, r[:, 0])  # (n,) RHS round-trips
+    x = woodbury_solve(d, U[:, :0], w[:0], r)  # k = 0: pure diagonal
+    np.testing.assert_allclose(np.asarray(x), np.asarray(r / d[:, None]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 40), st.integers(1, 6))
+def test_woodbury_property(seed, n, k):
+    _check_woodbury(*_random_sdlr(seed, n=n, k=k))
+
+
+def _random_inner_spec(seed, m1=7):
+    """A PCCP inner problem (36) on a random instance, with its strictly
+    feasible start — the exact spec the planner's hot loop solves."""
+    rng = np.random.default_rng(seed)
+    e = jnp.asarray(rng.uniform(0.01, 1.0, m1))
+    t = jnp.asarray(rng.uniform(0.01, 0.15, m1))
+    v = jnp.asarray(rng.uniform(1e-6, 2e-4, m1))
+    sigma = sigma_cantelli(jnp.asarray(0.05))
+    deadline = jnp.asarray(float(np.quantile(
+        np.asarray(t + sigma * jnp.sqrt(v)), 0.6)))
+    x_prev = jnp.asarray(rng.dirichlet(np.ones(m1)))
+    y_prev = jnp.sqrt(jnp.dot(v, x_prev**2))
+    rho = float(rng.uniform(1.0, 50.0))
+    return _inner_spec(e, t, v, sigma, deadline, rho, x_prev, y_prev)
+
+
+def _check_grad_hess(seed, t):
+    spec, z0 = _random_inner_spec(seed)
+    assert float(jnp.max(structured_inequalities(spec, z0))) < 0.0
+    g = structured_grad(spec, z0, t)
+    g_ad = jax.grad(lambda z: structured_barrier(spec, z, t))(z0)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ad),
+                               rtol=1e-9, atol=1e-9)
+    H = structured_hessian(spec, z0, t)
+    H_ad = jax.hessian(lambda z: structured_barrier(spec, z, t))(z0)
+    scale = float(jnp.max(jnp.abs(H_ad)))
+    np.testing.assert_allclose(np.asarray(H), np.asarray(H_ad),
+                               rtol=1e-9, atol=1e-12 * scale)
+
+
+@pytest.mark.parametrize("seed,t", [(0, 1.0), (1, 123.0), (2, 3e5)])
+def test_structured_grad_hess_match_autodiff(seed, t):
+    _check_grad_hess(seed, t)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(1.0, 1e6))
+def test_structured_grad_hess_property(seed, t):
+    _check_grad_hess(seed, t)
+
+
+def _random_tables(seed, n, m1):
+    rng = np.random.default_rng(seed)
+    e = jnp.asarray(rng.uniform(0.01, 1.0, (n, m1)))
+    t = jnp.asarray(rng.uniform(0.01, 0.15, (n, m1)))
+    v = jnp.asarray(rng.uniform(1e-6, 2e-4, (n, m1)))
+    sigma = sigma_cantelli(jnp.full((n,), 0.05))
+    deadline = jnp.asarray(
+        np.quantile(np.asarray(t + sigma[:, None] * jnp.sqrt(v)), 0.6, axis=1))
+    return e, t, v, sigma, deadline
+
+
+def _check_structured_matches_dense(seed, n=6, m1=8, **kw):
+    e, t, v, sigma, deadline = _random_tables(seed, n, m1)
+    x0 = jnp.ones((n, m1)) / m1
+    rs = pccp_partition(e, t, v, sigma, deadline, x0, solver="structured", **kw)
+    rd = pccp_partition(e, t, v, sigma, deadline, x0, solver="dense", **kw)
+    np.testing.assert_array_equal(np.asarray(rs.m_sel), np.asarray(rd.m_sel))
+    assert bool(jnp.all(jnp.isfinite(rs.x_relaxed)))
+    np.testing.assert_allclose(np.asarray(rs.x_relaxed),
+                               np.asarray(rd.x_relaxed), atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_pccp_structured_matches_dense(seed):
+    _check_structured_matches_dense(seed, num_iters=6)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(3, 8))
+def test_pccp_structured_matches_dense_property(seed, n, m1):
+    _check_structured_matches_dense(seed, n=n, m1=m1, num_iters=6)
+
+
+@pytest.mark.parametrize("solver", ["structured", "dense"])
+def test_rho_ramp_conditioning_at_rho_max(solver):
+    """Regression: with the penalty ramped to rho_max = 1e5 (12 PCCP
+    iterations: 5·3¹¹ > 1e5) the scale-aware Tikhonov keeps both solver
+    paths conditioned — identical selections, finite relaxed x, and a
+    valid distribution (the fixed reg=1e-10 was inert at this scale)."""
+    e, t, v, sigma, deadline = _random_tables(3, 8, 9)
+    x0 = jnp.ones((8, 9)) / 9
+    res = pccp_partition(e, t, v, sigma, deadline, x0, num_iters=12,
+                         rho_max=1e5, solver=solver)
+    assert bool(jnp.all(jnp.isfinite(res.x_relaxed)))
+    np.testing.assert_allclose(np.asarray(res.x_relaxed.sum(-1)), 1.0,
+                               atol=1e-5)
+    # both paths agree at the extreme of the ramp
+    other = pccp_partition(e, t, v, sigma, deadline, x0, num_iters=12,
+                           rho_max=1e5,
+                           solver="dense" if solver == "structured" else "structured")
+    np.testing.assert_array_equal(np.asarray(res.m_sel), np.asarray(other.m_sel))
+
+
+def test_gated_pccp_matches_scan_selection():
+    """The while_loop outer PCCP stops at the Algorithm-1 rule; on a
+    converged instance it selects the same points as the fixed-trip scan
+    and reports the same iteration counts, with +inf in the step-norm
+    rows it never executed."""
+    e, t, v, sigma, deadline = _random_tables(11, 10, 8)
+    x0 = jnp.ones((10, 8)) / 8
+    scan = pccp_partition(e, t, v, sigma, deadline, x0, num_iters=8)
+    gate = pccp_partition(e, t, v, sigma, deadline, x0, num_iters=8, gated=True)
+    np.testing.assert_array_equal(np.asarray(scan.m_sel), np.asarray(gate.m_sel))
+    np.testing.assert_array_equal(np.asarray(scan.iters_to_converge),
+                                  np.asarray(gate.iters_to_converge))
+    assert (1 <= np.asarray(gate.iters_to_converge)).all()
+    # rows past the early exit are marked unvisited
+    k_stop = int(np.asarray(gate.iters_to_converge).max())
+    assert np.isfinite(np.asarray(gate.step_norms[:k_stop])).all()
+    assert np.isinf(np.asarray(gate.step_norms[k_stop:])).all()
+
+
+def test_gated_pccp_under_vmap():
+    """The gated while_loop composes with vmap (zipped scenario batches):
+    batched results equal the per-instance gated runs."""
+    e, t, v, sigma, deadline = _random_tables(13, 4, 6)
+    x0 = jnp.ones((4, 6)) / 6
+    deadlines = jnp.stack([deadline, deadline * 1.2])
+
+    run = lambda d: pccp_partition(e, t, v, sigma, d, x0, num_iters=6,
+                                   gated=True)
+    batched = jax.vmap(run)(deadlines)
+    for k in range(2):
+        single = run(deadlines[k])
+        np.testing.assert_array_equal(np.asarray(batched.m_sel[k]),
+                                      np.asarray(single.m_sel))
