@@ -24,7 +24,7 @@ lint:
 # this and uploads the artifact per PR. ``--only solver`` alone runs just
 # the solver A/B section (see benchmarks/run.py).
 bench-smoke:
-	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge
+	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge,faults
 
 # Full paper-figure benchmark sweep
 bench:

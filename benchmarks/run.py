@@ -29,6 +29,9 @@
 #   bench_edge          — shared-edge capacity pricing vs static N-scaling
 #                         vs dedicated-VM (DESIGN.md §edge; energy at
 #                         matched MC violation → BENCH_planner.json)
+#   bench_faults        — closed-loop fault drill: guarded vs unguarded
+#                         serving through an injected incident (DESIGN.md
+#                         §robustness; recovery/churn → BENCH_planner.json)
 #   bench_two_tier      — beyond-paper: planner over zoo architectures
 #   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
 #   bench_kernels       — Pallas kernels vs references
@@ -51,6 +54,7 @@ MODULES = [
     "bench_plan_grid",
     "bench_hetero",
     "bench_edge",
+    "bench_faults",
     "bench_two_tier",
     "bench_channel",
     "bench_kernels",

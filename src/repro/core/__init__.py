@@ -10,11 +10,18 @@ from repro.core.blocks import BlockChain, Fleet, Link, Platform, broadcast_fleet
 from repro.core.fleet import DeviceSpec, FleetSpec  # noqa: E402,F401
 from repro.core.ccp import SIGMA_FNS, sigma_cantelli, sigma_gaussian  # noqa: E402,F401
 from repro.core.planner import (  # noqa: E402,F401
+    PLAN_DEGRADED,
+    PLAN_FALLBACK_DENSE,
+    PLAN_FALLBACK_INCUMBENT,
+    PLAN_OK,
+    PLAN_STATUS_NAMES,
     Plan,
     Policy,
     available_policies,
     get_policy,
     plan,
+    plan_fixed_partition,
+    plan_health,
     plan_optimal,
     register_policy,
 )
@@ -29,6 +36,9 @@ __all__ = [
     "pad_chain", "DeviceSpec", "FleetSpec",
     "SIGMA_FNS", "sigma_cantelli", "sigma_gaussian",
     "Plan", "plan", "plan_optimal", "plan_grid", "plan_at",
+    "plan_fixed_partition", "plan_health",
+    "PLAN_OK", "PLAN_DEGRADED", "PLAN_FALLBACK_DENSE",
+    "PLAN_FALLBACK_INCUMBENT", "PLAN_STATUS_NAMES",
     "Scenario", "PlannerConfig", "Planner", "scenario_at",
     "Policy", "register_policy", "get_policy", "available_policies",
     "Allocation", "allocate", "allocate_ipm",

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 from repro.core.blocks import Fleet
 from repro.core.pccp import SOLVERS
 from repro.core.planner import (
+    PLAN_FALLBACK_DENSE,
+    PLAN_FALLBACK_INCUMBENT,
     Plan,
     Policy,
     _alternation,
@@ -51,6 +53,8 @@ from repro.core.planner import (
     available_policies,
     get_policy,
     initial_points,
+    pccp_partition_step,
+    plan_health,
     plan_multi_jit,
     plan_single_jit,
     plan_solve_jit,
@@ -196,6 +200,16 @@ class PlannerConfig:
     edge_capacity_s: Optional[float] = None
     solver: str = "structured"
     pccp_gated: bool = False
+    #: solver fail-soft (DESIGN.md §robustness): after ``plan()``, check
+    #: the result's health on the host (finite leaves, no DEGRADED stamp,
+    #: PCCP not stuck-and-infeasible) and, when unhealthy, fall back —
+    #: dense inner solver first, then the caller's ``incumbent=`` plan —
+    #: instead of returning garbage. A healthy solve is returned
+    #: unchanged (leaf-identical to ``fail_soft=False``); the fallbacks
+    #: announce themselves via ``Plan.status`` and a warning.
+    #: ``plan_many``/``grid`` skip the check (batched plans stay on
+    #: device; score them with ``plan_health`` per scenario if needed).
+    fail_soft: bool = True
 
     def __post_init__(self):
         if self.outer_iters < 1:
@@ -303,18 +317,56 @@ class Planner:
         m0, use_multi = self._starts(fleet, init_m)
         return statics, m0, use_multi
 
-    def plan(self, fleet: Fleet, scenario: Scenario, init_m=None) -> Plan:
+    def plan(self, fleet: Fleet, scenario: Scenario, init_m=None,
+             incumbent: Optional[Plan] = None) -> Plan:
         """Plan one scenario. ``init_m`` (scalar or (N,) array) overrides
-        the config's static start — it is traced, not a cache key."""
+        the config's static start — it is traced, not a cache key.
+
+        ``incumbent`` is the fail-soft safety net (DESIGN.md
+        §robustness): a known-good plan to return — stamped
+        ``PLAN_FALLBACK_INCUMBENT`` — if the solve *and* the dense-solver
+        retry both come back unhealthy. It never influences a healthy
+        solve (pass it via ``init_m`` to warm-start instead).
+        """
         sc = self._apply_edge_default(Scenario(*scenario))
         sc = sc.normalized(fleet.num_devices)
         statics, m0, use_multi = self._dispatch(fleet, init_m)
         if statics["policy"].solve is not None:
-            return plan_solve_jit(fleet, sc.deadline, sc.eps, sc.B,
-                                  sc.edge_capacity_s, **statics)
-        entry = plan_multi_jit if use_multi else plan_single_jit
-        return entry(fleet, sc.deadline, sc.eps, sc.B, sc.edge_capacity_s,
-                     m0, **statics)
+            p = plan_solve_jit(fleet, sc.deadline, sc.eps, sc.B,
+                               sc.edge_capacity_s, **statics)
+            entry = None
+        else:
+            entry = plan_multi_jit if use_multi else plan_single_jit
+            p = entry(fleet, sc.deadline, sc.eps, sc.B, sc.edge_capacity_s,
+                      m0, **statics)
+        if not self.config.fail_soft or isinstance(p.total_energy,
+                                                   jax.core.Tracer):
+            return p  # disabled, or called under tracing (no host syncs)
+        cap = (int(self.config.pccp_iters)
+               if statics["policy"].partition is pccp_partition_step else None)
+        ok, reason = plan_health(p, pccp_iter_cap=cap)
+        if ok:
+            return p
+        import warnings
+
+        if entry is not None and statics["solver"] != "dense":
+            warnings.warn(f"plan fail-soft: {reason}; retrying with the "
+                          "dense inner solver", RuntimeWarning, stacklevel=2)
+            dense = dict(statics, solver="dense")
+            p_dense = entry(fleet, sc.deadline, sc.eps, sc.B,
+                            sc.edge_capacity_s, m0, **dense)
+            if plan_health(p_dense, pccp_iter_cap=cap)[0]:
+                return p_dense._replace(
+                    status=jnp.asarray(PLAN_FALLBACK_DENSE, jnp.int32))
+        if incumbent is not None:
+            warnings.warn(f"plan fail-soft: {reason}; returning the incumbent "
+                          "plan", RuntimeWarning, stacklevel=2)
+            return incumbent._replace(
+                status=jnp.asarray(PLAN_FALLBACK_INCUMBENT, jnp.int32))
+        warnings.warn(f"plan fail-soft: {reason}; no incumbent to fall back "
+                      "to — returning the degraded plan", RuntimeWarning,
+                      stacklevel=2)
+        return p
 
     def plan_many(self, fleet: Fleet,
                   scenarios: Union[Scenario, Sequence[Scenario]],

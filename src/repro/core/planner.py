@@ -61,6 +61,23 @@ from repro.core.resource import (
 from repro.solvers.scalar import bisect
 
 
+#: ``Plan.status`` codes (DESIGN.md §robustness — the solver fail-soft
+#: contract). The traced solve stamps OK/DEGRADED; the host-side ladder
+#: in ``api.Planner.plan`` overwrites with the fallback codes when it
+#: had to re-solve or reuse the incumbent.
+PLAN_OK = 0  # healthy solve
+PLAN_DEGRADED = 1  # non-finite leaves detected at solve time
+PLAN_FALLBACK_DENSE = 2  # re-solved with the dense inner barrier
+PLAN_FALLBACK_INCUMBENT = 3  # caller's incumbent plan returned instead
+
+PLAN_STATUS_NAMES = {
+    PLAN_OK: "ok",
+    PLAN_DEGRADED: "degraded",
+    PLAN_FALLBACK_DENSE: "fallback_dense",
+    PLAN_FALLBACK_INCUMBENT: "fallback_incumbent",
+}
+
+
 class Plan(NamedTuple):
     m_sel: jnp.ndarray  # (N,) partition points
     alloc: Allocation  # bandwidth / frequency allocation
@@ -69,6 +86,7 @@ class Plan(NamedTuple):
     objective_trace: jnp.ndarray  # (outer_iters,) Algorithm-2 trajectory (Fig. 10)
     pccp_iters: jnp.ndarray  # (outer_iters, N) Algorithm-1 iterations (Fig. 9)
     margins: jnp.ndarray  # (N,) deadline margin (≤0 ⇒ guaranteed)
+    status: jnp.ndarray = jnp.int32(PLAN_OK)  # scalar PLAN_* code
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +230,16 @@ def policy_point_tables(fleet: Fleet, alloc: Allocation, policy: Policy,
         )
         var_table = jnp.zeros_like(var_table)
     return e_table, t_table, var_table
+
+
+def _traced_status(alloc: Allocation, total_energy, margins) -> jnp.ndarray:
+    """OK/DEGRADED stamp computed inside the trace (no host syncs): a
+    healthy plan has finite allocation, energy and margins. Transient
+    NaNs inside rejected line-search candidates are fine — this checks
+    the *outputs* the caller is about to act on."""
+    healthy = (jnp.all(jnp.isfinite(alloc.b)) & jnp.all(jnp.isfinite(alloc.f))
+               & jnp.isfinite(total_energy) & jnp.all(jnp.isfinite(margins)))
+    return jnp.where(healthy, PLAN_OK, PLAN_DEGRADED).astype(jnp.int32)
 
 
 def _exact_partition(e_table, t_table, var_table, sigma, deadline):
@@ -397,14 +425,16 @@ def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
     margins = ccp.deterministic_deadline_margin(
         t_mean, sel.v_loc + sel.v_vm, eps, deadline, sig_model
     )
+    total_energy = jnp.sum(alloc.energy)
     return Plan(
         m_sel=m,
         alloc=alloc,
-        total_energy=jnp.sum(alloc.energy),
+        total_energy=total_energy,
         feasible=feasible & alloc.feasible,
         objective_trace=traces,
         pccp_iters=pccp_trace,
         margins=margins,
+        status=_traced_status(alloc, total_energy, margins),
     )
 
 
@@ -412,10 +442,19 @@ def _select_best(plans: Plan) -> jnp.ndarray:
     """Traced multi-start selection: feasible plans first, then lowest
     energy — the same lexicographic key as the seed's
     ``min(plans, key=(num_infeasible, energy))``, with first-occurrence
-    tie-breaking matching Python ``min`` over ascending starts."""
-    n_bad = jnp.sum(~plans.feasible, axis=-1)
+    tie-breaking matching Python ``min`` over ascending starts.
+
+    Fail-soft guard: a lane whose energy went non-finite is ranked worse
+    than every finite lane (NaNs would otherwise poison the argmin), so a
+    single diverged start can never shadow a healthy one. With all lanes
+    finite this is bit-identical to the unguarded selection."""
+    finite = jnp.isfinite(plans.total_energy)
+    n_dev = plans.feasible.shape[-1]
+    n_bad = jnp.where(jnp.asarray(finite),
+                      jnp.sum(~plans.feasible, axis=-1), n_dev + 1)
     best_bad = jnp.min(n_bad)
-    e_masked = jnp.where(n_bad == best_bad, plans.total_energy, jnp.inf)
+    e_masked = jnp.where((n_bad == best_bad) & finite,
+                         plans.total_energy, jnp.inf)
     return jnp.argmin(e_masked)
 
 
@@ -617,14 +656,16 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
     margins = ccp.deterministic_deadline_margin(
         t_mean, sel.v_loc + sel.v_vm, eps, deadline, sigma_model
     )
+    total_energy = jnp.sum(alloc.energy)
     return Plan(
         m_sel=m_sel,
         alloc=alloc,
-        total_energy=jnp.sum(alloc.energy),
+        total_energy=total_energy,
         feasible=feas,
-        objective_trace=jnp.sum(alloc.energy)[None],
+        objective_trace=total_energy[None],
         pccp_iters=jnp.ones((1, fleet.num_devices), jnp.int32),
         margins=margins,
+        status=_traced_status(alloc, total_energy, margins),
     )
 
 
@@ -635,6 +676,87 @@ def _optimal_solve(fleet, deadline, eps, B, edge_cap, policy: Policy,
     del outer_iters, pccp_iters, channel_cv
     return plan_optimal(fleet, deadline, eps, B, sigma_model=policy.sigma_model,
                         edge_capacity_s=edge_cap)
+
+
+@partial(jax.jit, static_argnames=("sigma_model",))
+def plan_fixed_partition(fleet: Fleet, m_sel, deadline, eps, B,
+                         edge_capacity_s=None,
+                         sigma_model: str = "cantelli") -> Plan:
+    """A full :class:`Plan` at a *forced* partition: allocate (b, f) by
+    the dual decomposition at the given ``m_sel`` and score it — no
+    partitioning loop, no PCCP.
+
+    This is the cheap "λ/μ price-step" rung of the degradation ladder
+    (DESIGN.md §robustness): re-clear the bandwidth/edge prices against
+    re-fit moments while keeping the incumbent split, at the cost of one
+    allocation solve. It is also how the precomputed contingency plans
+    (local-only m = M_n, full-offload m = 0) are built at plan time.
+
+    ``m_sel`` is broadcast to ``(N,)`` and clamped to each device's own
+    chain on ragged fleets.
+    """
+    n = fleet.num_devices
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
+    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
+    edge_cap = jnp.asarray(
+        jnp.inf if edge_capacity_s is None else edge_capacity_s, jnp.float64)
+    m = jnp.broadcast_to(jnp.asarray(m_sel, jnp.int32), (n,))
+    m = jnp.minimum(m, fleet.points_per_device - 1)
+    alloc = allocate(fleet, m, deadline, eps, B, sigma_model,
+                     edge_capacity_s=edge_cap)
+    sel = select_point(fleet, m)
+    t_mean = (
+        energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
+        + channel.offload_time(sel.d_bits, alloc.b, fleet.link.p_tx,
+                               fleet.link.gain)
+        + sel.t_vm
+    )
+    margins = ccp.deterministic_deadline_margin(
+        t_mean, sel.v_loc + sel.v_vm, eps, deadline, sigma_model)
+    total_energy = jnp.sum(alloc.energy)
+    return Plan(
+        m_sel=m,
+        alloc=alloc,
+        total_energy=total_energy,
+        feasible=alloc.feasible & (margins <= 1e-9),
+        objective_trace=total_energy[None],
+        pccp_iters=jnp.ones((1, n), jnp.int32),
+        margins=margins,
+        status=_traced_status(alloc, total_energy, margins),
+    )
+
+
+def plan_health(plan: Plan, pccp_iter_cap: Optional[int] = None):
+    """Host-side health verdict on a single (unbatched) plan.
+
+    Returns ``(ok, reason)``. Unhealthy when any actionable leaf
+    (energy, allocation, margins) is non-finite, when the traced solve
+    stamped ``PLAN_DEGRADED``, or — with ``pccp_iter_cap`` given — when
+    the PCCP is *stuck*: every device burned the full iteration budget in
+    the final outer step yet the plan is still infeasible (θ_err never
+    met the stopping rule). Fallback statuses count as healthy: they are
+    deliberate, usable plans.
+    """
+    e = np.asarray(plan.total_energy)
+    if e.ndim != 0:
+        raise ValueError(
+            "plan_health scores a single plan; index batched plans with "
+            "scenario_at/plan_at first")
+    for name, leaf in (("total_energy", plan.total_energy),
+                       ("alloc.b", plan.alloc.b), ("alloc.f", plan.alloc.f),
+                       ("margins", plan.margins)):
+        if not np.all(np.isfinite(np.asarray(leaf))):
+            return False, f"non-finite {name}"
+    status = int(np.asarray(plan.status))
+    if status == PLAN_DEGRADED:
+        return False, "solver stamped PLAN_DEGRADED"
+    if pccp_iter_cap is not None:
+        iters = np.asarray(plan.pccp_iters)
+        if (iters.size and np.all(iters[-1] >= pccp_iter_cap)
+                and not np.any(np.asarray(plan.feasible))):
+            return False, (f"PCCP stuck at the {pccp_iter_cap}-iteration cap "
+                           "with no feasible device")
+    return True, PLAN_STATUS_NAMES.get(status, f"status={status}")
 
 
 ROBUST = register_policy(Policy("robust", partition=pccp_partition_step))

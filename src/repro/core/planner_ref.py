@@ -31,6 +31,7 @@ from repro.core.pccp import pccp_partition
 from repro.core.planner import (
     Plan,
     _exact_partition,
+    _traced_status,
     default_starts,
     get_policy,
     policy_point_tables,
@@ -123,12 +124,14 @@ def plan_reference(
     margins = ccp.deterministic_deadline_margin(
         t_mean, sel.v_loc + sel.v_vm, eps, deadline, sig_model
     )
+    total_energy = jnp.sum(alloc.energy)
     return Plan(
         m_sel=m,
         alloc=alloc,
-        total_energy=jnp.sum(alloc.energy),
+        total_energy=total_energy,
         feasible=feasible & alloc.feasible,
         objective_trace=jnp.stack(traces),
         pccp_iters=jnp.stack(pccp_trace),
         margins=margins,
+        status=_traced_status(alloc, total_energy, margins),
     )

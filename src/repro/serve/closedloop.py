@@ -1,0 +1,237 @@
+"""Step-driven closed-loop serving harness (DESIGN.md §robustness).
+
+Each step draws ``requests_per_step`` Monte-Carlo requests per device
+from the *faulted* ground truth (``violation_report(faults=...)`` at the
+step's :class:`~repro.serve.faults.FaultSchedule` state), feeds the
+deadline outcomes to the :class:`~repro.serve.guard.ViolationSentinel`,
+and — when guarded — climbs the graceful-degradation ladder on a trip:
+
+1. **price step** — re-clear the λ/μ prices at the incumbent partition
+   against re-fit moments (``plan_fixed_partition``; one allocation
+   solve, no PCCP);
+2. **warm re-plan** — ``Planner.plan(init_m=incumbent, incumbent=...)``
+   on the re-fit fleet (full solve, warm-started; the solver fail-soft
+   net is armed via ``incumbent``);
+3. **contingency** — select (never solve) the better of the
+   precomputed local-only / full-offload plans.
+
+The controller only sees *observables*: deadline outcomes and measured
+per-tier latencies (what a partitioned stack records on each tier —
+``ViolationReport.mean_local`` / ``mean_vm`` here, ``EngineStats`` in a
+real engine). It never peeks at the fault schedule — moment re-fit is an
+EWMA per-tier observed/predicted time-scale estimate folded into the
+chain via ``apply_faults``, the same hook ``measured_chain`` serves.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import Planner, Scenario
+from repro.core.blocks import Fleet
+from repro.core.montecarlo import violation_report
+from repro.core.planner import Plan, plan_fixed_partition
+from repro.core.resource import select_point
+from repro.core import channel, energy
+from repro.serve.faults import FaultSchedule, FaultState, apply_faults, state_at
+from repro.serve.guard import (
+    SentinelConfig,
+    ViolationSentinel,
+    contingency_plans,
+    pick_contingency,
+)
+
+__all__ = ["GuardConfig", "ClosedLoopResult", "run_closed_loop",
+           "RUNG_NONE", "RUNG_PRICE", "RUNG_REPLAN", "RUNG_CONTINGENCY"]
+
+RUNG_NONE = 0
+RUNG_PRICE = 1
+RUNG_REPLAN = 2
+RUNG_CONTINGENCY = 3
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """Ladder/estimator knobs. ``sentinel`` is the trip test;
+    ``sigma_inflation`` sizes the contingency plans' safety margin;
+    ``ewma`` is the moment re-fit smoothing; ``max_rung`` caps the
+    escalation (each trip climbs one rung, a clean window resets to
+    the price rung)."""
+
+    sentinel: SentinelConfig = field(default_factory=SentinelConfig)
+    sigma_inflation: float = 1.5
+    ewma: float = 0.5
+    max_rung: int = RUNG_CONTINGENCY
+    #: minimum steps between ladder actions — bounds plan churn when the
+    #: fault outruns the ladder (each install resets the sentinel, so
+    #: without a cooldown a sustained fault re-trips every step)
+    cooldown: int = 2
+
+
+@dataclass
+class ClosedLoopResult:
+    """Per-step telemetry plus the headline scalars."""
+
+    step_rate: np.ndarray  # (T,) fleet-mean violation rate per step
+    window_rate: np.ndarray  # (T,) sentinel's sliding-window rate
+    tripped: np.ndarray  # (T,) bool — sentinel inconsistent with ε
+    rung: np.ndarray  # (T,) ladder rung active after the step
+    energy: np.ndarray  # (T,) planned energy of the installed plan
+    replans: int  # plan installations (ladder actions)
+    churn: int  # Σ hamming(m_sel) over installations
+    first_trip_step: Optional[int]
+    recovery_steps: Optional[int]  # first trip → window back ≤ ε
+
+    @property
+    def peak_window_rate(self) -> float:
+        w = self.window_rate[~np.isnan(self.window_rate)]
+        return float(w.max()) if w.size else float("nan")
+
+    @property
+    def final_window_rate(self) -> float:
+        w = self.window_rate[~np.isnan(self.window_rate)]
+        return float(w[-1]) if w.size else float("nan")
+
+
+def _predicted_components(fleet: Fleet, plan: Plan):
+    """(t_loc, t_off, t_vm) per device predicted by the *nominal* fleet."""
+    sel = select_point(fleet, plan.m_sel)
+    t_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, plan.alloc.f)
+    t_off = channel.offload_time(sel.d_bits, plan.alloc.b, fleet.link.p_tx,
+                                 fleet.link.gain)
+    return np.asarray(t_loc), np.asarray(t_off), np.asarray(sel.t_vm)
+
+
+def _refit_scales(loc_hat: float, vm_hat: float, t_loc_pred, t_vm_pred,
+                  obs_local, obs_vm, ewma: float):
+    """Per-tier moment re-fit from observables only: each tier's scale
+    is the EWMA of observed/predicted mean time *on that tier* (summed
+    over devices — a fleet-level ratio, robust to a single tiny
+    predictor). A tier the current plan does not exercise is *held*, not
+    decayed — the controller must not forget that the shared tier is
+    slow just because it stopped using it. Straggler and congestion
+    extras land in the measured VM time, so they surface as VM-tier
+    dilation — the direction the re-planner should move away from."""
+    def step(prev, num, den):
+        if den <= 1e-9:
+            return prev  # tier unobserved under this plan: hold
+        return min(max((1.0 - ewma) * prev + ewma * num / den, 0.1), 1e3)
+
+    return (step(loc_hat, float(np.sum(obs_local)), float(np.sum(t_loc_pred))),
+            step(vm_hat, float(np.sum(obs_vm)), float(np.sum(t_vm_pred))))
+
+
+def _refit_state(loc_hat: float, vm_hat: float) -> FaultState:
+    """The re-fit as a FaultState (variances follow the time-dilation
+    model, scale²) — fed to ``apply_faults`` to build the fleet the
+    ladder re-plans against."""
+    a = jnp.asarray(loc_hat, jnp.float64)
+    s = jnp.asarray(vm_hat, jnp.float64)
+    return FaultState.identity()._replace(
+        loc_mean_scale=a, loc_var_scale=a**2,
+        vm_mean_scale=s, vm_var_scale=s**2)
+
+
+def run_closed_loop(
+    fleet: Fleet,
+    scenario: Scenario,
+    schedule: FaultSchedule,
+    planner: Planner,
+    key,
+    *,
+    requests_per_step: int = 64,
+    guarded: bool = True,
+    guard: GuardConfig = GuardConfig(),
+    dist: str = "gamma",
+) -> ClosedLoopResult:
+    """Drive ``schedule.steps`` steps of faulted serving; see module doc."""
+    sc = Scenario(*scenario).normalized(fleet.num_devices)
+    n = fleet.num_devices
+    eps_scalar = float(np.asarray(sc.eps).mean())
+    cap_f = float(np.asarray(sc.edge_capacity_s))
+    cap_arg = None if math.isinf(cap_f) else sc.edge_capacity_s
+
+    plan = planner.plan(fleet, sc)
+    contingencies = contingency_plans(
+        fleet, sc.deadline, sc.eps, sc.B, cap_arg,
+        sigma_inflation=guard.sigma_inflation) if guarded else {}
+    sentinel = ViolationSentinel(eps_scalar, guard.sentinel)
+
+    loc_hat = vm_hat = 1.0  # per-tier time-scale estimates (re-fit moments)
+    rung = RUNG_NONE
+    last_action = -(10**9)
+    replans = churn = 0
+    first_trip: Optional[int] = None
+    recovery: Optional[int] = None
+
+    steps = schedule.steps
+    step_rate = np.zeros(steps)
+    window_rate = np.full(steps, np.nan)
+    tripped_log = np.zeros(steps, bool)
+    rung_log = np.zeros(steps, np.int32)
+    energy_log = np.zeros(steps)
+
+    for t in range(steps):
+        state = state_at(schedule, t)
+        vr = violation_report(
+            jax.random.fold_in(key, t), fleet, plan.m_sel, plan.alloc,
+            sc.deadline, dist=dist, num_samples=requests_per_step,
+            edge_capacity_s=cap_arg, faults=state)
+        rates = np.asarray(vr.rate)
+        k = int(round(float(rates.sum()) * requests_per_step))
+        sentinel.observe(k, requests_per_step * n)
+
+        # observable-only moment re-fit (never peeks at `state`)
+        t_loc, _t_off, t_vm = _predicted_components(fleet, plan)
+        loc_hat, vm_hat = _refit_scales(
+            loc_hat, vm_hat, t_loc, t_vm,
+            np.asarray(vr.mean_local, float), np.asarray(vr.mean_vm, float),
+            guard.ewma)
+
+        trip = sentinel.tripped()
+        step_rate[t] = float(rates.mean())
+        window_rate[t] = sentinel.rate()
+        tripped_log[t] = trip
+        if trip and first_trip is None:
+            first_trip = t
+
+        if guarded and trip and t - last_action >= guard.cooldown:
+            last_action = t
+            rung = min(rung + 1, guard.max_rung)
+            fleet_hat = apply_faults(fleet, _refit_state(loc_hat, vm_hat))
+            if rung == RUNG_PRICE:
+                new = plan_fixed_partition(
+                    fleet_hat, plan.m_sel, sc.deadline, sc.eps, sc.B, cap_arg)
+            elif rung == RUNG_REPLAN:
+                new = planner.plan(fleet_hat, sc, init_m=plan.m_sel,
+                                   incumbent=plan)
+            else:
+                new = pick_contingency(contingencies, fleet_hat, sc.deadline,
+                                       sc.eps, incumbent=plan)
+            churn += int(np.sum(np.asarray(new.m_sel) != np.asarray(plan.m_sel)))
+            replans += 1
+            plan = new
+            sentinel.reset()  # the new plan starts with a clean record
+        elif rung > RUNG_NONE and not trip and \
+                sentinel.counts[1] >= guard.sentinel.min_count:
+            # a full clean window de-escalates: the next trip starts the
+            # ladder from the cheap rung again
+            rung = RUNG_NONE
+
+        if first_trip is not None and recovery is None and t > first_trip \
+                and sentinel.counts[1] >= guard.sentinel.min_count \
+                and sentinel.rate() <= eps_scalar:
+            recovery = t - first_trip
+
+        rung_log[t] = rung
+        energy_log[t] = float(plan.total_energy)
+
+    return ClosedLoopResult(
+        step_rate=step_rate, window_rate=window_rate, tripped=tripped_log,
+        rung=rung_log, energy=energy_log, replans=replans, churn=churn,
+        first_trip_step=first_trip, recovery_steps=recovery)

@@ -33,14 +33,35 @@ class Request:
 class EngineStats:
     prefill_times: List[float] = field(default_factory=list)
     decode_times: List[float] = field(default_factory=list)
+    #: per-request outcome stream — the violation sentinel's input signal
+    #: (DESIGN.md §robustness): request uid, wall-clock completion time
+    #: (group prefill start → the request's last token), deadline met?
+    request_uids: List[int] = field(default_factory=list)
+    completion_times: List[float] = field(default_factory=list)
+    deadline_flags: List[bool] = field(default_factory=list)
+
+    def record_completion(self, uid: int, elapsed_s: float,
+                          deadline_s: float) -> None:
+        self.request_uids.append(uid)
+        self.completion_times.append(elapsed_s)
+        self.deadline_flags.append(elapsed_s <= deadline_s)
 
     def summary(self) -> Dict[str, float]:
-        d = np.asarray(self.decode_times[1:] or [0.0])
-        p = np.asarray(self.prefill_times or [0.0])
+        # The first decode step is the warmup drop (jit dispatch +
+        # cache-layout effects); empty stats report NaN, never a fake
+        # zero-variance chain a downstream re-fit could ingest.
+        warm = np.asarray(self.decode_times[1:], float)
+        p = np.asarray(self.prefill_times, float)
+        met = np.asarray(self.deadline_flags, bool)
+        nan = float("nan")
         return {
-            "prefill_mean_s": float(p.mean()),
-            "decode_mean_s": float(d.mean()),
-            "decode_var_s2": float(d.var()),
+            "prefill_mean_s": float(p.mean()) if p.size else nan,
+            "decode_mean_s": float(warm.mean()) if warm.size else nan,
+            "decode_var_s2": float(warm.var()) if warm.size else nan,
+            "decode_samples": int(warm.size),
+            "prefill_samples": int(p.size),
+            "requests_completed": len(self.completion_times),
+            "deadline_met_rate": float(met.mean()) if met.size else nan,
         }
 
 
@@ -89,23 +110,50 @@ class ServingEngine:
         return logits, cache, s
 
     def decode_loop(self, batch: List[Request], logits, cache, start_pos: int,
-                    steps: Optional[int] = None):
+                    steps: Optional[int] = None,
+                    t_start: Optional[float] = None):
+        """``t_start`` is the group's wall-clock origin (its prefill
+        start); a request completes — and its deadline is scored — when
+        its own last token lands, not when the whole batch drains."""
         steps = steps or max(r.max_new_tokens for r in batch)
+        if t_start is None:
+            t_start = time.perf_counter()
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         for i in range(steps):
             t0 = time.perf_counter()
             logits, cache = self._decode(self.params, tok, cache, jnp.int32(start_pos + i))
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
             jax.block_until_ready(tok)
-            self.stats.decode_times.append(time.perf_counter() - t0)
+            now = time.perf_counter()
+            self.stats.decode_times.append(now - t0)
             for j, r in enumerate(batch):
                 if i < r.max_new_tokens:
                     r.output.append(int(tok[j, 0]))
+                    if i == r.max_new_tokens - 1:
+                        self.stats.record_completion(
+                            r.uid, now - t_start, r.deadline_s)
         return batch
 
+    def _validate_queue(self, queue: List[Request]) -> None:
+        if not queue:
+            raise ValueError("empty request queue — nothing to serve")
+        for r in queue:
+            if r.max_new_tokens <= 0:
+                raise ValueError(
+                    f"request {r.uid}: max_new_tokens must be positive, "
+                    f"got {r.max_new_tokens}")
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {r.uid}: empty prompt")
+            if len(r.prompt) > self.window:
+                raise ValueError(
+                    f"request {r.uid}: prompt of {len(r.prompt)} tokens "
+                    f"exceeds the engine window ({self.window})")
+
     def run(self, queue: List[Request]) -> Tuple[List[Request], Dict[str, float]]:
+        self._validate_queue(queue)
         done: List[Request] = []
         for group in self.schedule(queue):
+            t_start = time.perf_counter()
             logits, cache, s = self.prefill(group)
-            done += self.decode_loop(group, logits, cache, s)
+            done += self.decode_loop(group, logits, cache, s, t_start=t_start)
         return done, self.stats.summary()

@@ -1,0 +1,237 @@
+"""Composable, seeded fault injection for the serving loop (DESIGN.md
+§robustness).
+
+The planner's guarantee P{T ≤ D} ≥ 1−ε holds *for the moments it was
+planned against*. This module makes the ways those moments go stale
+first-class, so the closed-loop harness and the MC validator can be
+driven through reproducible incidents:
+
+- **moment drift** — slow time-varying scaling of the mean/variance of
+  local and VM block times (thermal throttling, co-tenant load creep);
+- **straggler bursts** — episodes where a fraction of VM executions pick
+  up a heavy-tailed (moment-matched Pareto) extra latency (the Fig. 1/5
+  spikes of the paper, but *clustered in time*);
+- **channel fades** — multiplicative dips in the uplink gain;
+- **edge-capacity brownouts** — the shared accelerator's VM-time budget
+  shrinks for a window (maintenance, preemption by a higher tier).
+
+Everything is a pure pytree of traced leaves:
+
+- :class:`FaultState` — the fault intensities at ONE step (what
+  ``montecarlo.violation_report(faults=...)`` consumes);
+- :class:`FaultSchedule` — per-step dense profiles over a horizon of T
+  steps (every leaf is ``(T,)``), built by the constructors below and
+  combined with :func:`compose`. ``random_bursts`` is seeded by an
+  explicit PRNG key, so a schedule is deterministic given ``(args, key)``.
+
+Layering: ``core.montecarlo`` duck-types the :class:`FaultState` fields
+(it never imports this module), so ``serve → core`` stays one-way.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import Fleet
+
+__all__ = [
+    "FaultState", "FaultSchedule", "identity_schedule", "moment_drift",
+    "straggler_burst", "random_bursts", "channel_fade", "brownout",
+    "compose", "state_at", "apply_faults", "faulted_capacity",
+]
+
+
+class FaultState(NamedTuple):
+    """Fault intensities at one step. All leaves are scalars (or ``(N,)``
+    per-device arrays — every consumer broadcasts).
+
+    Scales multiply the *nominal* quantity; the identity state (all
+    scales 1, straggler probability 0) is a bit-exact no-op in
+    ``violation_report`` and :func:`apply_faults`.
+    """
+
+    loc_mean_scale: jnp.ndarray  # × mean local block time (via 1/g_eff)
+    loc_var_scale: jnp.ndarray   # × local time variance
+    vm_mean_scale: jnp.ndarray   # × mean VM time
+    vm_var_scale: jnp.ndarray    # × VM time variance
+    gain_scale: jnp.ndarray      # × uplink channel gain (fade < 1)
+    cap_scale: jnp.ndarray       # × shared-edge capacity (brownout < 1)
+    straggler_prob: jnp.ndarray  # P{a VM execution straggles}
+    straggler_extra_s: jnp.ndarray  # mean extra latency of a straggler
+    straggler_cv: jnp.ndarray    # cv of the (Pareto) straggler extra
+
+    @classmethod
+    def identity(cls) -> "FaultState":
+        one = jnp.asarray(1.0, jnp.float64)
+        zero = jnp.asarray(0.0, jnp.float64)
+        return cls(one, one, one, one, one, one, zero, zero, one)
+
+
+class FaultSchedule(NamedTuple):
+    """A :class:`FaultState` per step: every leaf is a dense ``(T,)``
+    profile. Index with :func:`state_at`; combine with :func:`compose`."""
+
+    loc_mean_scale: jnp.ndarray
+    loc_var_scale: jnp.ndarray
+    vm_mean_scale: jnp.ndarray
+    vm_var_scale: jnp.ndarray
+    gain_scale: jnp.ndarray
+    cap_scale: jnp.ndarray
+    straggler_prob: jnp.ndarray
+    straggler_extra_s: jnp.ndarray
+    straggler_cv: jnp.ndarray
+
+    @property
+    def steps(self) -> int:
+        return self.vm_mean_scale.shape[0]
+
+
+def _full(steps: int, value: float) -> jnp.ndarray:
+    return jnp.full((steps,), value, jnp.float64)
+
+
+def identity_schedule(steps: int) -> FaultSchedule:
+    """The no-fault schedule: every step is the identity state."""
+    one, zero = _full(steps, 1.0), _full(steps, 0.0)
+    return FaultSchedule(one, one, one, one, one, one, zero, zero,
+                         _full(steps, 1.0))
+
+
+def _window(steps: int, start: int, length: int) -> jnp.ndarray:
+    t = jnp.arange(steps)
+    return (t >= start) & (t < start + length)
+
+
+def moment_drift(steps: int, *, onset: int = 0, vm_ramp: float = 0.0,
+                 loc_ramp: float = 0.0, vm_var_ramp: float = None,
+                 loc_var_ramp: float = None,
+                 ramp_steps: int = None) -> FaultSchedule:
+    """Linear moment drift: the mean scale ramps from 1 at ``onset`` to
+    ``1 + ramp`` over ``ramp_steps`` steps (default: the rest of the
+    horizon) and then *holds* — a plateau models sustained degradation
+    (thermal throttling, a co-tenant that stays). Variance ramps default
+    to the time-dilation model (var scale = mean scale², i.e. the
+    *relative* dispersion is preserved while everything slows down)."""
+    t = jnp.arange(steps, dtype=jnp.float64)
+    span = max(steps - 1 - onset, 1) if ramp_steps is None else max(ramp_steps, 1)
+    frac = jnp.clip((t - onset) / span, 0.0, 1.0)
+    vm_mean = 1.0 + vm_ramp * frac
+    loc_mean = 1.0 + loc_ramp * frac
+    vm_var = vm_mean**2 if vm_var_ramp is None else 1.0 + vm_var_ramp * frac
+    loc_var = loc_mean**2 if loc_var_ramp is None else 1.0 + loc_var_ramp * frac
+    base = identity_schedule(steps)
+    return base._replace(vm_mean_scale=vm_mean, vm_var_scale=vm_var,
+                         loc_mean_scale=loc_mean, loc_var_scale=loc_var)
+
+
+def straggler_burst(steps: int, *, start: int, length: int, prob: float,
+                    extra_s: float, cv: float = 1.0) -> FaultSchedule:
+    """A straggler episode: inside ``[start, start+length)`` each VM
+    execution independently picks up a heavy-tailed extra latency with
+    probability ``prob`` (mean ``extra_s``, coefficient of variation
+    ``cv``, moment-matched Pareto)."""
+    w = _window(steps, start, length)
+    base = identity_schedule(steps)
+    return base._replace(
+        straggler_prob=jnp.where(w, prob, 0.0),
+        straggler_extra_s=jnp.where(w, extra_s, 0.0),
+        straggler_cv=jnp.where(w, cv, 1.0),
+    )
+
+
+def random_bursts(steps: int, key, *, burst_prob: float = 0.05,
+                  length: int = 4, prob: float = 0.3, extra_s: float = 0.2,
+                  cv: float = 1.0) -> FaultSchedule:
+    """Seeded straggler episodes: each step starts a ``length``-step
+    burst with probability ``burst_prob``. Deterministic given ``key``."""
+    starts = jax.random.bernoulli(key, burst_prob, (steps,))
+    active = jnp.convolve(starts.astype(jnp.float64),
+                          jnp.ones((length,), jnp.float64))[:steps] > 0
+    base = identity_schedule(steps)
+    return base._replace(
+        straggler_prob=jnp.where(active, prob, 0.0),
+        straggler_extra_s=jnp.where(active, extra_s, 0.0),
+        straggler_cv=jnp.where(active, cv, 1.0),
+    )
+
+
+def channel_fade(steps: int, *, start: int, length: int,
+                 depth: float) -> FaultSchedule:
+    """Uplink gain dips to ``depth`` × nominal inside the window."""
+    w = _window(steps, start, length)
+    return identity_schedule(steps)._replace(
+        gain_scale=jnp.where(w, depth, 1.0))
+
+
+def brownout(steps: int, *, start: int, length: int,
+             depth: float) -> FaultSchedule:
+    """Shared-edge capacity shrinks to ``depth`` × nominal in the window."""
+    w = _window(steps, start, length)
+    return identity_schedule(steps)._replace(
+        cap_scale=jnp.where(w, depth, 1.0))
+
+
+def compose(*schedules: FaultSchedule) -> FaultSchedule:
+    """Combine schedules: scales multiply; straggler episodes combine as
+    independent events (p = 1 − Π(1−pᵢ)) with the probability-weighted
+    mean extra and the max cv."""
+    if not schedules:
+        raise ValueError("compose needs at least one schedule")
+    steps = schedules[0].steps
+    for s in schedules[1:]:
+        if s.steps != steps:
+            raise ValueError(
+                f"schedules must share a horizon: {s.steps} != {steps}")
+    out = schedules[0]
+    for s in schedules[1:]:
+        p = 1.0 - (1.0 - out.straggler_prob) * (1.0 - s.straggler_prob)
+        weight = out.straggler_prob * out.straggler_extra_s \
+            + s.straggler_prob * s.straggler_extra_s
+        extra = jnp.where(p > 0, weight / jnp.maximum(p, 1e-12), 0.0)
+        out = FaultSchedule(
+            loc_mean_scale=out.loc_mean_scale * s.loc_mean_scale,
+            loc_var_scale=out.loc_var_scale * s.loc_var_scale,
+            vm_mean_scale=out.vm_mean_scale * s.vm_mean_scale,
+            vm_var_scale=out.vm_var_scale * s.vm_var_scale,
+            gain_scale=out.gain_scale * s.gain_scale,
+            cap_scale=out.cap_scale * s.cap_scale,
+            straggler_prob=p,
+            straggler_extra_s=extra,
+            straggler_cv=jnp.maximum(out.straggler_cv, s.straggler_cv),
+        )
+    return out
+
+
+def state_at(schedule: FaultSchedule, t) -> FaultState:
+    """The :class:`FaultState` at step ``t`` (``t`` may be traced)."""
+    return FaultState(*(jnp.asarray(leaf)[t] for leaf in schedule))
+
+
+def apply_faults(fleet: Fleet, state: FaultState) -> Fleet:
+    """The *ground-truth* fleet under ``state``: moment scales folded into
+    the chain (mean local time scales via 1/g_eff, exactly as the MC
+    sampler applies them) and the fade into the link gain. Stragglers and
+    brownouts are runtime effects, not chain moments — they stay in the
+    sampler/capacity. The identity state is a numerical no-op.
+
+    Also the re-fit hook for the degradation ladder: feed an *estimated*
+    state to get the fleet the re-planner should plan against.
+    """
+    c = fleet.chain
+    chain = c._replace(
+        t_vm=c.t_vm * state.vm_mean_scale,
+        v_vm=c.v_vm * state.vm_var_scale,
+        g_eff=c.g_eff / jnp.maximum(state.loc_mean_scale, 1e-12),
+        v_loc=c.v_loc * state.loc_var_scale,
+    )
+    link = fleet.link._replace(gain=fleet.link.gain * state.gain_scale)
+    return fleet._replace(chain=chain, link=link)
+
+
+def faulted_capacity(edge_capacity_s, state: FaultState):
+    """Shared-edge capacity under a brownout (``None`` stays ``None``)."""
+    if edge_capacity_s is None:
+        return None
+    return jnp.asarray(edge_capacity_s, jnp.float64) * state.cap_scale

@@ -1,0 +1,215 @@
+"""Violation sentinel + graceful-degradation support (DESIGN.md
+§robustness).
+
+The planner promises P{T ≤ D} ≥ 1−ε *for the moments it planned
+against*. :class:`ViolationSentinel` watches the per-request deadline
+outcome stream (from ``EngineStats`` or the MC closed-loop harness) and
+flags when the empirical violation rate is *statistically inconsistent*
+with ε — a one-sided exact binomial tail test over a sliding window, so
+a handful of unlucky requests under a healthy plan does not trip it
+(false-positive rate ≤ ``alpha`` per test by construction), while a
+genuine moment shift trips within a window.
+
+On a trip the degradation ladder escalates (``serve.closedloop`` runs
+it): price-step re-allocation at the incumbent partition
+(``core.plan_fixed_partition``) → warm-started full re-plan with re-fit
+moments → precomputed contingency plans (:func:`contingency_plans` —
+local-only and full-offload, solved *at plan time* with inflated σ, so
+the last rung needs zero runtime solves).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import ccp, channel, energy
+from repro.core.blocks import Fleet
+from repro.core.planner import Plan, plan_fixed_partition, plan_health
+from repro.core.resource import select_point
+
+__all__ = [
+    "SentinelConfig", "ViolationSentinel", "binom_tail_pvalue",
+    "cantelli_pvalue", "contingency_plans", "inflated_eps", "plan_margin",
+    "pick_contingency", "plan_health",
+]
+
+
+def binom_tail_pvalue(k: int, n: int, eps: float) -> float:
+    """Exact one-sided tail P[Bin(n, ε) ≥ k] via log-Γ (host-side).
+
+    The sentinel's test statistic: the probability of seeing ``k`` or
+    more violations in ``n`` requests *if the plan were healthy* (true
+    violation probability ≤ ε). Small p-value ⇒ the observed rate is
+    inconsistent with the guarantee.
+    """
+    if n <= 0 or k <= 0:
+        return 1.0
+    if k > n:
+        return 0.0
+    if eps <= 0.0:
+        return 0.0
+    if eps >= 1.0:
+        return 1.0
+    log_eps, log_1m = math.log(eps), math.log1p(-eps)
+    lgn = math.lgamma(n + 1)
+    total = 0.0
+    for i in range(k, n + 1):
+        total += math.exp(lgn - math.lgamma(i + 1) - math.lgamma(n - i + 1)
+                          + i * log_eps + (n - i) * log_1m)
+    return min(total, 1.0)
+
+
+def cantelli_pvalue(k: int, n: int, eps: float) -> float:
+    """Cantelli (one-sided Chebyshev) bound on P[Bin(n, ε)/n ≥ k/n] — a
+    distribution-light alternative to the exact tail, loose but O(1)."""
+    if n <= 0 or k <= 0:
+        return 1.0
+    t = k / n - eps
+    if t <= 0.0:
+        return 1.0
+    var = eps * (1.0 - eps) / n
+    return var / (var + t * t)
+
+
+@dataclass(frozen=True)
+class SentinelConfig:
+    """``window``: outcomes kept (a sliding count, oldest batches
+    evicted whole); ``alpha``: per-test false-positive rate;
+    ``min_count``: don't test before this many outcomes (tiny samples
+    make the exact tail trigger-happy at small ε); ``test``:
+    ``"binomial"`` (exact) or ``"cantelli"`` (bound)."""
+
+    window: int = 2048
+    alpha: float = 1e-3
+    min_count: int = 128
+    test: str = "binomial"
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if not 0.0 < self.alpha < 1.0:
+            raise ValueError("alpha must be in (0, 1)")
+        if self.test not in ("binomial", "cantelli"):
+            raise ValueError(f"unknown sentinel test {self.test!r}")
+
+
+class ViolationSentinel:
+    """Sliding-window monitor over per-request deadline outcomes."""
+
+    def __init__(self, eps: float, config: SentinelConfig = SentinelConfig()):
+        if not 0.0 < eps < 1.0:
+            raise ValueError(f"eps must be in (0, 1), got {eps}")
+        self.eps = float(eps)
+        self.config = config
+        self._batches: deque = deque()  # (violations, total) pairs
+        self._k = 0
+        self._n = 0
+
+    def observe(self, violations: int, total: int = 1) -> None:
+        """Feed a batch of outcomes (``violations`` of ``total`` requests
+        missed their deadline)."""
+        if total < 0 or not 0 <= violations <= total:
+            raise ValueError(
+                f"need 0 <= violations <= total, got {violations}/{total}")
+        self._batches.append((violations, total))
+        self._k += violations
+        self._n += total
+        while self._n - self._batches[0][1] >= self.config.window:
+            k0, n0 = self._batches.popleft()
+            self._k -= k0
+            self._n -= n0
+
+    @property
+    def counts(self):
+        return self._k, self._n
+
+    def rate(self) -> float:
+        return self._k / self._n if self._n else float("nan")
+
+    def pvalue(self) -> float:
+        test = (binom_tail_pvalue if self.config.test == "binomial"
+                else cantelli_pvalue)
+        return test(self._k, self._n, self.eps)
+
+    def tripped(self) -> bool:
+        if self._n < self.config.min_count:
+            return False
+        return self.pvalue() < self.config.alpha
+
+    def reset(self) -> None:
+        """Forget the window (call after installing a new plan, so the
+        old plan's violations don't indict the new one)."""
+        self._batches.clear()
+        self._k = 0
+        self._n = 0
+
+
+# ---------------------------------------------------------------------------
+# Degradation-ladder building blocks
+# ---------------------------------------------------------------------------
+
+
+def inflated_eps(eps, sigma_inflation: float):
+    """ε′ whose Cantelli σ is ``sigma_inflation`` × the nominal one:
+    σ(ε) = √((1−ε)/ε) ⇒ ε′ = 1/(1 + inflation²·(1−ε)/ε). Contingency
+    plans solved at ε′ keep a deliberate safety margin over the SLO."""
+    s2 = sigma_inflation**2 * (1.0 - eps) / eps
+    return 1.0 / (1.0 + s2)
+
+
+def contingency_plans(fleet: Fleet, deadline, eps, B, edge_capacity_s=None,
+                      sigma_inflation: float = 1.5) -> Dict[str, Plan]:
+    """The ladder's last rung, precomputed at plan time: ``local_only``
+    (m = M_n — no offload, immune to edge/channel faults) and
+    ``full_offload`` (m = 0 — no local compute, immune to device-side
+    drift), each allocated with σ inflated by ``sigma_inflation`` so
+    they keep slack when moments have already shifted. Zero runtime
+    solves: on a trip the better of the two is *selected*, not solved.
+    """
+    eps_c = inflated_eps(jnp.asarray(eps, jnp.float64), sigma_inflation)
+    local_m = fleet.points_per_device - 1
+    return {
+        "local_only": plan_fixed_partition(
+            fleet, local_m, deadline, eps_c, B, edge_capacity_s),
+        "full_offload": plan_fixed_partition(
+            fleet, jnp.zeros((fleet.num_devices,), jnp.int32), deadline,
+            eps_c, B, edge_capacity_s),
+    }
+
+
+def plan_margin(fleet: Fleet, plan: Plan, deadline, eps,
+                sigma_model: str = "cantelli") -> jnp.ndarray:
+    """Worst-device deadline margin of ``plan`` evaluated on ``fleet``
+    (closed form — no solves). Evaluate a precomputed plan against a
+    *re-fit* fleet to pick the contingency that degrades least."""
+    sel = select_point(fleet, plan.m_sel)
+    t_mean = (
+        energy.mean_local_time(sel.w_flops, sel.g_eff, plan.alloc.f)
+        + channel.offload_time(sel.d_bits, plan.alloc.b, fleet.link.p_tx,
+                               fleet.link.gain)
+        + sel.t_vm
+    )
+    margins = ccp.deterministic_deadline_margin(
+        t_mean, sel.v_loc + sel.v_vm, eps, deadline, sigma_model)
+    return jnp.max(margins)
+
+
+def pick_contingency(plans: Dict[str, Plan], fleet: Fleet, deadline,
+                     eps, incumbent: Optional[Plan] = None) -> Plan:
+    """Select the candidate with the smallest worst-device margin on the
+    (re-fit) ``fleet`` — pure evaluation, no solver in the loop. The
+    ``incumbent`` competes under the same test: when every precomputed
+    shape degrades *more* than the current plan (e.g. the fleet cannot
+    serve local-only within the deadline at all), the right contingency
+    is to keep what we have, not to install a known-worse plan."""
+    candidates = dict(plans)
+    if incumbent is not None:
+        candidates["incumbent"] = incumbent
+    scored = {name: float(plan_margin(fleet, p, deadline, eps))
+              for name, p in candidates.items()}
+    best = min(scored, key=lambda name: (scored[name], name))
+    return candidates[best]

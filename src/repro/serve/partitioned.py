@@ -371,11 +371,29 @@ def measured_chain(base: BlockChain, decode_stats: Dict[str, float],
     """Fold online engine measurements into a chain (paper §IV online path).
 
     decode_stats from ``ServingEngine.stats.summary()``: the measured
-    per-step mean/variance rescale the edge-tier time model.
+    per-step mean/variance rescale the edge-tier time model. The chain's
+    full-offload point (m = 0, the last axis' first entry) is pinned to
+    the measured mean; interior points keep their relative shape, so
+    folding the *same* stats twice is idempotent. Works on a single
+    ``(M+1,)`` chain or a batched/ragged ``(N, M+1)`` fleet chain — the
+    anchor is per-device, not the first row.
+
+    Raises ``ValueError`` on empty/non-finite stats (``summary()``
+    reports NaN for empty engines; re-planning against a fake
+    zero-variance chain would silently void the ε guarantee).
     """
-    mean = decode_stats.get("decode_mean_s", 0.0)
-    var = decode_stats.get("decode_var_s2", 0.0)
-    t_vm = base.t_vm / jnp.maximum(base.t_vm[0], 1e-12) * mean
+    mean = float(decode_stats.get("decode_mean_s", float("nan")))
+    var = float(decode_stats.get("decode_var_s2", float("nan")))
+    if not (np.isfinite(mean) and mean > 0.0):
+        raise ValueError(
+            f"measured_chain needs a positive finite decode_mean_s, got "
+            f"{mean!r} (empty engine stats report NaN — serve more than "
+            "one decode step before re-fitting)")
+    if not (np.isfinite(var) and var >= 0.0):
+        raise ValueError(
+            f"measured_chain needs a finite decode_var_s2 >= 0, got {var!r}")
+    anchor = jnp.maximum(base.t_vm[..., :1], 1e-12)
+    t_vm = base.t_vm / anchor * mean
     rel_var = var / max(mean**2, 1e-18)
     v_vm = (t_vm**2) * rel_var
     return base._replace(t_vm=t_vm, v_vm=v_vm)

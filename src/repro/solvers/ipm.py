@@ -135,6 +135,13 @@ class BarrierResult(NamedTuple):
     objective: jnp.ndarray
     max_violation: jnp.ndarray  # max fi(z); <= 0 means feasible
     duality_gap_bound: jnp.ndarray  # m / t at the final barrier stage
+    #: fail-soft flag (DESIGN.md §robustness): False when the returned
+    #: iterate or objective went non-finite — the line searches reject
+    #: NaN/∞ *candidates* (a NaN Armijo comparison is False, so the step
+    #: is refused and the stage stops at the incumbent), but a poisoned
+    #: *input* spec can still surface here. Callers treat ok=False as
+    #: "discard this solve", not "crash".
+    ok: jnp.ndarray = jnp.bool_(True)
 
 
 # ---------------------------------------------------------------------------
@@ -373,11 +380,13 @@ def structured_barrier_solve(
     ts = t0 * mu ** jnp.arange(outer_iters, dtype=jnp.float64)
     z, _ = jax.lax.scan(stage, z0, ts)
     fi = structured_inequalities(spec, z)
+    objective = structured_objective(spec, z)
     return BarrierResult(
         z=z,
-        objective=structured_objective(spec, z),
+        objective=objective,
         max_violation=jnp.max(fi),
         duality_gap_bound=m / ts[-1],
+        ok=jnp.all(jnp.isfinite(z)) & jnp.isfinite(objective),
     )
 
 
@@ -502,9 +511,11 @@ def barrier_solve(
     ts = t0 * mu ** jnp.arange(outer_iters, dtype=jnp.float64)
     z, _ = jax.lax.scan(stage, z0, ts)
     fi = spec.inequalities(z)
+    objective = spec.objective(z)
     return BarrierResult(
         z=z,
-        objective=spec.objective(z),
+        objective=objective,
         max_violation=jnp.max(fi),
         duality_gap_bound=m / ts[-1],
+        ok=jnp.all(jnp.isfinite(z)) & jnp.isfinite(objective),
     )

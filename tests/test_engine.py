@@ -1,8 +1,13 @@
-"""ServingEngine batching: deterministic deadline-tie scheduling."""
+"""ServingEngine batching, stats, input validation, and the
+``measured_chain`` re-fit hook (DESIGN.md §robustness satellites)."""
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.registry import get_config
-from repro.serve.engine import Request, ServingEngine
+from repro.core.blocks import BlockChain
+from repro.serve.engine import EngineStats, Request, ServingEngine
+from repro.serve.partitioned import measured_chain
 
 
 def _engine(max_batch=2):
@@ -38,3 +43,120 @@ def test_schedule_edf_order_dominates_uid():
     reqs = [_req(0, 0.9), _req(1, 0.1), _req(2, 0.9), _req(3, 0.1)]
     batches = eng.schedule(reqs)
     assert [[r.uid for r in b] for b in batches] == [[1, 3, 0], [2]]
+
+
+# ---------------------------------------------------------------------------
+# stats: per-request outcomes + summary semantics
+# ---------------------------------------------------------------------------
+
+
+def test_record_completion_scores_deadline():
+    st = EngineStats()
+    st.record_completion(0, 0.4, 0.5)  # met
+    st.record_completion(1, 0.7, 0.5)  # missed
+    st.record_completion(2, 0.5, 0.5)  # boundary counts as met
+    assert st.request_uids == [0, 1, 2]
+    assert st.deadline_flags == [True, False, True]
+    s = st.summary()
+    assert s["requests_completed"] == 3
+    np.testing.assert_allclose(s["deadline_met_rate"], 2 / 3)
+
+
+def test_summary_empty_reports_nan_not_zero():
+    """The old summary reported 0.0 mean/variance for ≤1 decode samples —
+    a fake zero-variance chain a re-fit would happily ingest. Empty must
+    be NaN + explicit sample counts."""
+    s = EngineStats().summary()
+    assert s["decode_samples"] == 0 and s["prefill_samples"] == 0
+    assert np.isnan(s["decode_mean_s"]) and np.isnan(s["decode_var_s2"])
+    assert np.isnan(s["prefill_mean_s"]) and np.isnan(s["deadline_met_rate"])
+
+
+def test_summary_drops_warmup_decode_step():
+    st = EngineStats()
+    st.decode_times = [10.0, 0.5, 0.7]  # first step = jit dispatch
+    s = st.summary()
+    assert s["decode_samples"] == 2
+    np.testing.assert_allclose(s["decode_mean_s"], 0.6)
+    # a single decode step is ALL warmup: no steady-state samples yet
+    st.decode_times = [10.0]
+    assert st.summary()["decode_samples"] == 0
+    assert np.isnan(st.summary()["decode_mean_s"])
+
+
+# ---------------------------------------------------------------------------
+# input validation
+# ---------------------------------------------------------------------------
+
+
+def test_run_rejects_empty_queue():
+    with pytest.raises(ValueError, match="empty request queue"):
+        _engine().run([])
+
+
+def test_run_rejects_bad_requests():
+    eng = _engine()
+    bad_tokens = Request(uid=7, prompt=np.zeros(4, np.int32), max_new_tokens=0)
+    with pytest.raises(ValueError, match="request 7.*max_new_tokens"):
+        eng.run([bad_tokens])
+    empty = Request(uid=8, prompt=np.zeros(0, np.int32))
+    with pytest.raises(ValueError, match="request 8.*empty prompt"):
+        eng.run([empty])
+    long = Request(uid=9, prompt=np.zeros(eng.window + 1, np.int32))
+    with pytest.raises(ValueError, match="request 9.*exceeds the engine"):
+        eng.run([long])
+
+
+# ---------------------------------------------------------------------------
+# measured_chain re-fit hook
+# ---------------------------------------------------------------------------
+
+
+def _chain(t_vm):
+    t_vm = jnp.asarray(t_vm, jnp.float64)
+    ones = jnp.ones_like(t_vm)
+    return BlockChain(d_bits=ones * 8e6, w_flops=ones * 1e9, g_eff=ones * 1e9,
+                      v_loc=ones * 1e-4, t_vm=t_vm, v_vm=0.01 * t_vm**2)
+
+
+def test_measured_chain_single_and_ragged_shapes():
+    stats = {"decode_mean_s": 0.02, "decode_var_s2": 1e-6}
+    single = _chain([0.05, 0.03, 0.01, 0.0])
+    out = measured_chain(single, stats)
+    assert out.t_vm.shape == single.t_vm.shape
+    np.testing.assert_allclose(float(out.t_vm[0]), 0.02)
+    # batched/ragged fleet chain: each device anchors on its OWN m=0
+    # entry, not the first row's
+    fleet_chain = _chain([[0.05, 0.03, 0.0], [0.10, 0.04, 0.0]])
+    out2 = measured_chain(fleet_chain, stats)
+    assert out2.t_vm.shape == (2, 3)
+    np.testing.assert_allclose(np.asarray(out2.t_vm[:, 0]), [0.02, 0.02])
+    # relative shape within each device is preserved
+    np.testing.assert_allclose(float(out2.t_vm[0, 1] / out2.t_vm[0, 0]),
+                               0.03 / 0.05)
+    np.testing.assert_allclose(float(out2.t_vm[1, 1] / out2.t_vm[1, 0]),
+                               0.04 / 0.10)
+
+
+def test_measured_chain_idempotent():
+    stats = {"decode_mean_s": 0.02, "decode_var_s2": 1e-6}
+    base = _chain([[0.05, 0.03, 0.0], [0.10, 0.04, 0.0]])
+    once = measured_chain(base, stats)
+    twice = measured_chain(once, stats)
+    np.testing.assert_allclose(np.asarray(twice.t_vm), np.asarray(once.t_vm),
+                               rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(twice.v_vm), np.asarray(once.v_vm),
+                               rtol=1e-12)
+
+
+def test_measured_chain_rejects_empty_stats():
+    base = _chain([0.05, 0.03, 0.0])
+    nan = float("nan")
+    with pytest.raises(ValueError, match="decode_mean_s"):
+        measured_chain(base, {"decode_mean_s": nan, "decode_var_s2": nan})
+    with pytest.raises(ValueError, match="decode_mean_s"):
+        measured_chain(base, {"decode_mean_s": 0.0, "decode_var_s2": 1e-6})
+    with pytest.raises(ValueError, match="decode_var_s2"):
+        measured_chain(base, {"decode_mean_s": 0.02, "decode_var_s2": nan})
+    with pytest.raises(ValueError, match="decode_mean_s"):
+        measured_chain(base, {})

@@ -1,0 +1,261 @@
+"""Fault injection (DESIGN.md §robustness): schedule constructors,
+composition, the ``violation_report(faults=...)`` hook, and the
+moment-matched heavy-tail samplers behind straggler bursts.
+
+The load-bearing contract: ``faults=None`` and the identity
+:class:`FaultState` are **bit-identical** to the pre-robustness MC
+validator (same key splits, same sample streams), pinned here against a
+recorded golden so fault plumbing can never drift the ground truth.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet
+from repro.core import Planner, PlannerConfig, Scenario, violation_report
+from repro.core.montecarlo import _sample_matched
+from repro.serve.faults import (
+    FaultState,
+    apply_faults,
+    brownout,
+    channel_fade,
+    compose,
+    faulted_capacity,
+    identity_schedule,
+    moment_drift,
+    random_bursts,
+    state_at,
+    straggler_burst,
+)
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" /
+     "violation_report.json").read_text())
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 12)
+
+
+@pytest.fixture(scope="module")
+def plan(fleet):
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                    pccp_iters=6))
+    return planner.plan(fleet, Scenario(0.180, 0.02, 10e6))
+
+
+def _vr(fleet, plan, faults=None, key=7, deadline=0.180, **kw):
+    kw.setdefault("num_samples", 4000)
+    return violation_report(jax.random.PRNGKey(key), fleet, plan.m_sel,
+                            plan.alloc, deadline, faults=faults, **kw)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_identity_schedule_and_state_at():
+    s = identity_schedule(5)
+    assert s.steps == 5
+    st = state_at(s, 3)
+    ident = FaultState.identity()
+    for got, want in zip(st, ident):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_moment_drift_ramps_then_holds():
+    s = moment_drift(20, onset=4, vm_ramp=2.0, ramp_steps=8)
+    vm = np.asarray(s.vm_mean_scale)
+    assert vm[4] == 1.0  # ramp starts at onset
+    np.testing.assert_allclose(vm[8], 2.0, rtol=1e-12)  # halfway
+    np.testing.assert_allclose(vm[12:], 3.0, rtol=1e-12)  # plateau holds
+    # variance defaults to the time-dilation model: scale²
+    np.testing.assert_allclose(np.asarray(s.vm_var_scale), vm**2, rtol=1e-12)
+    # untouched axes stay identity
+    np.testing.assert_array_equal(np.asarray(s.gain_scale), np.ones(20))
+
+
+def test_straggler_burst_window():
+    s = straggler_burst(10, start=3, length=4, prob=0.25, extra_s=0.1)
+    p = np.asarray(s.straggler_prob)
+    assert p[2] == 0.0 and p[3] == 0.25 and p[6] == 0.25 and p[7] == 0.0
+    assert np.asarray(s.straggler_extra_s)[5] == 0.1
+
+
+def test_random_bursts_deterministic():
+    k = jax.random.PRNGKey(3)
+    a = random_bursts(64, k, burst_prob=0.2, length=3)
+    b = random_bursts(64, k, burst_prob=0.2, length=3)
+    np.testing.assert_array_equal(np.asarray(a.straggler_prob),
+                                  np.asarray(b.straggler_prob))
+    c = random_bursts(64, jax.random.PRNGKey(4), burst_prob=0.2, length=3)
+    assert not np.array_equal(np.asarray(a.straggler_prob),
+                              np.asarray(c.straggler_prob))
+    # a start at t extends the episode over [t, t+length)
+    p = np.asarray(a.straggler_prob)
+    assert p.max() > 0  # 64 steps at burst_prob=0.2: ~1e-7 chance of none
+
+
+def test_compose_multiplies_scales_and_unions_stragglers():
+    T = 12
+    s = compose(
+        moment_drift(T, vm_ramp=1.0, ramp_steps=T - 1),  # ramp to 2.0
+        channel_fade(T, start=2, length=3, depth=0.5),
+        brownout(T, start=5, length=2, depth=0.25),
+        straggler_burst(T, start=0, length=T, prob=0.3, extra_s=0.2),
+        straggler_burst(T, start=6, length=2, prob=0.5, extra_s=0.1),
+    )
+    np.testing.assert_allclose(float(s.vm_mean_scale[-1]), 2.0, rtol=1e-12)
+    assert float(s.gain_scale[3]) == 0.5 and float(s.gain_scale[0]) == 1.0
+    assert float(s.cap_scale[5]) == 0.25
+    # independent-event union at t=6: 1 - 0.7*0.5
+    np.testing.assert_allclose(float(s.straggler_prob[6]), 0.65, rtol=1e-12)
+    # probability-weighted extra mean: (0.3*0.2 + 0.5*0.1)/0.65
+    np.testing.assert_allclose(float(s.straggler_extra_s[6]), 0.11 / 0.65,
+                               rtol=1e-12)
+    np.testing.assert_allclose(float(s.straggler_prob[3]), 0.3, rtol=1e-12)
+
+
+def test_compose_rejects_mismatched_horizons():
+    with pytest.raises(ValueError, match="share a horizon"):
+        compose(identity_schedule(4), identity_schedule(5))
+
+
+# ---------------------------------------------------------------------------
+# apply_faults
+# ---------------------------------------------------------------------------
+
+
+def test_apply_faults_identity_is_noop(fleet):
+    out = apply_faults(fleet, FaultState.identity())
+    for got, want in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(fleet)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_apply_faults_scales_chain_and_link(fleet):
+    st = FaultState.identity()._replace(
+        vm_mean_scale=jnp.asarray(2.0), vm_var_scale=jnp.asarray(4.0),
+        loc_mean_scale=jnp.asarray(1.5), loc_var_scale=jnp.asarray(2.25),
+        gain_scale=jnp.asarray(0.5))
+    out = apply_faults(fleet, st)
+    np.testing.assert_allclose(np.asarray(out.chain.t_vm),
+                               np.asarray(fleet.chain.t_vm) * 2.0)
+    np.testing.assert_allclose(np.asarray(out.chain.v_vm),
+                               np.asarray(fleet.chain.v_vm) * 4.0)
+    np.testing.assert_allclose(np.asarray(out.chain.g_eff),
+                               np.asarray(fleet.chain.g_eff) / 1.5)
+    np.testing.assert_allclose(np.asarray(out.chain.v_loc),
+                               np.asarray(fleet.chain.v_loc) * 2.25)
+    np.testing.assert_allclose(np.asarray(out.link.gain),
+                               np.asarray(fleet.link.gain) * 0.5)
+
+
+def test_faulted_capacity():
+    st = FaultState.identity()._replace(cap_scale=jnp.asarray(0.5))
+    assert faulted_capacity(None, st) is None
+    np.testing.assert_allclose(float(faulted_capacity(2.0, st)), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# violation_report fault hook
+# ---------------------------------------------------------------------------
+
+
+def test_violation_report_none_pinned_to_golden(fleet, plan):
+    """``faults=None`` reproduces the recorded pre-robustness ground
+    truth exactly — fault plumbing must not perturb the no-fault path."""
+    vr = _vr(fleet, plan)
+    np.testing.assert_array_equal(np.asarray(vr.rate),
+                                  np.asarray(GOLDEN["rate"]))
+    np.testing.assert_allclose(np.asarray(vr.mean_time),
+                               np.asarray(GOLDEN["mean_time"]), rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(vr.p95_time),
+                               np.asarray(GOLDEN["p95_time"]), rtol=0, atol=0)
+
+
+def test_identity_faults_bit_identical_to_none(fleet, plan):
+    """The identity state takes the faulted code path (same program as a
+    real fault) yet must not move a single bit: key derivation for the
+    straggler stream is fold_in-based, never a re-split of ``key``."""
+    base = _vr(fleet, plan, faults=None)
+    ident = _vr(fleet, plan, faults=FaultState.identity())
+    for got, want in zip(ident, base):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_vm_drift_and_stragglers_raise_violation(fleet, plan):
+    base = _vr(fleet, plan, deadline=0.150)
+    drift = FaultState.identity()._replace(vm_mean_scale=jnp.asarray(4.0),
+                                           vm_var_scale=jnp.asarray(16.0))
+    strag = FaultState.identity()._replace(
+        straggler_prob=jnp.asarray(0.5), straggler_extra_s=jnp.asarray(0.2))
+    r_base = float(base.rate.max())
+    assert float(_vr(fleet, plan, deadline=0.150, faults=drift).rate.max()) \
+        > r_base
+    assert float(_vr(fleet, plan, deadline=0.150, faults=strag).rate.max()) \
+        > r_base
+
+
+def test_straggler_extra_lands_in_vm_tier(fleet, plan):
+    """Per-tier observed means: straggler extra must surface in
+    ``mean_vm`` (the closed-loop re-fit attributes by tier) and leave
+    the local tier untouched."""
+    base = _vr(fleet, plan)
+    strag = FaultState.identity()._replace(
+        straggler_prob=jnp.asarray(0.5), straggler_extra_s=jnp.asarray(0.2))
+    faulted = _vr(fleet, plan, faults=strag)
+    np.testing.assert_array_equal(np.asarray(faulted.mean_local),
+                                  np.asarray(base.mean_local))
+    assert float(faulted.mean_vm.sum()) > float(base.mean_vm.sum())
+    # mean_local + mean_vm never exceeds the total (t_off makes the gap)
+    assert np.all(np.asarray(base.mean_local + base.mean_vm)
+                  <= np.asarray(base.mean_time) + 1e-12)
+
+
+def test_brownout_tightens_shared_edge(fleet, plan):
+    """cap_scale < 1 shrinks the congestion budget: violations (or mean
+    time) under a brownout dominate the un-faulted capacity run."""
+    cap = 0.5
+    base = _vr(fleet, plan, edge_capacity_s=cap)
+    st = FaultState.identity()._replace(cap_scale=jnp.asarray(0.25))
+    brown = _vr(fleet, plan, edge_capacity_s=cap, faults=st)
+    assert float(brown.mean_time.sum()) >= float(base.mean_time.sum())
+
+
+# ---------------------------------------------------------------------------
+# heavy-tail samplers (straggler extras)
+# ---------------------------------------------------------------------------
+
+KEY = jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("dist,cv,rtol_var", [
+    ("pareto", 0.3, 0.15), ("pareto", 0.5, 0.25),
+    ("weibull", 0.3, 0.12), ("weibull", 0.8, 0.12),
+])
+def test_heavy_tail_families_match_moments(dist, cv, rtol_var):
+    mean = 0.15
+    var = (cv * mean) ** 2
+    x = np.asarray(_sample_matched(KEY, dist, jnp.float64(mean),
+                                   jnp.float64(var), (200_000,)))
+    assert np.isfinite(x).all() and (x > 0.0).all()
+    np.testing.assert_allclose(x.mean(), mean, rtol=0.02)
+    # Pareto's 4th moment diverges for α ≤ 4, so the sample-variance
+    # estimator is itself heavy-tailed — hence the looser rtol there.
+    np.testing.assert_allclose(x.var(), var, rtol=rtol_var)
+
+
+def test_pareto_is_heavier_tailed_than_weibull():
+    mean, cv = 0.1, 0.5
+    var = (cv * mean) ** 2
+    q = 0.9999
+    xp = np.asarray(_sample_matched(KEY, "pareto", mean, var, (200_000,)))
+    xw = np.asarray(_sample_matched(KEY, "weibull", mean, var, (200_000,)))
+    assert np.quantile(xp, q) > np.quantile(xw, q)

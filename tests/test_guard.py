@@ -1,0 +1,340 @@
+"""Violation sentinel, plan health, solver fail-soft, and the
+closed-loop degradation ladder (DESIGN.md §robustness).
+
+The fail-soft tests force a non-finite inner solve by wrapping the
+compiled plan entry (monkeypatched at the ``api`` module, where
+``Planner.plan`` resolves it) so each ladder rung — dense-solver retry,
+incumbent fallback, degraded-with-warning — is exercised for real, not
+simulated by hand-built plans.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet
+from repro.core import (
+    PLAN_DEGRADED,
+    PLAN_FALLBACK_DENSE,
+    PLAN_FALLBACK_INCUMBENT,
+    PLAN_OK,
+    Planner,
+    PlannerConfig,
+    Scenario,
+    plan_fixed_partition,
+    plan_health,
+)
+import repro.core.api as api
+from repro.serve.closedloop import GuardConfig, run_closed_loop
+from repro.serve.faults import straggler_burst, identity_schedule
+from repro.serve.guard import (
+    SentinelConfig,
+    ViolationSentinel,
+    binom_tail_pvalue,
+    cantelli_pvalue,
+    contingency_plans,
+    inflated_eps,
+    pick_contingency,
+    plan_margin,
+)
+
+SC = Scenario(0.180, 0.02, 10e6)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 8)
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                 pccp_iters=6))
+
+
+@pytest.fixture(scope="module")
+def healthy(fleet, planner):
+    return planner.plan(fleet, SC)
+
+
+# ---------------------------------------------------------------------------
+# tail tests
+# ---------------------------------------------------------------------------
+
+
+def test_binom_tail_matches_scipy():
+    sf = pytest.importorskip("scipy.stats").binom.sf
+    for k, n, eps in [(5, 100, 0.02), (1, 10, 0.05), (30, 500, 0.05),
+                      (10, 10, 0.5), (2, 2048, 0.001)]:
+        np.testing.assert_allclose(binom_tail_pvalue(k, n, eps),
+                                   float(sf(k - 1, n, eps)), rtol=1e-10)
+
+
+def test_binom_tail_edge_cases():
+    assert binom_tail_pvalue(0, 100, 0.05) == 1.0
+    assert binom_tail_pvalue(5, 0, 0.05) == 1.0
+    assert binom_tail_pvalue(11, 10, 0.05) == 0.0
+    assert binom_tail_pvalue(1, 10, 0.0) == 0.0
+    assert binom_tail_pvalue(1, 10, 1.0) == 1.0
+
+
+def test_cantelli_upper_bounds_exact_tail():
+    for k, n, eps in [(10, 100, 0.05), (40, 200, 0.1), (5, 1000, 0.002)]:
+        assert cantelli_pvalue(k, n, eps) >= binom_tail_pvalue(k, n, eps)
+
+
+# ---------------------------------------------------------------------------
+# sentinel
+# ---------------------------------------------------------------------------
+
+
+def test_sentinel_trips_on_genuine_shift():
+    s = ViolationSentinel(0.05, SentinelConfig(window=512, alpha=1e-3,
+                                               min_count=64))
+    s.observe(40, 128)  # 31% observed vs ε = 5%
+    assert s.tripped() and s.pvalue() < 1e-6
+
+
+def test_sentinel_holds_at_nominal_rate():
+    s = ViolationSentinel(0.05, SentinelConfig(window=512, alpha=1e-3,
+                                               min_count=64))
+    s.observe(26, 512)  # 5.1% — consistent with ε
+    assert not s.tripped()
+
+
+def test_sentinel_respects_min_count():
+    s = ViolationSentinel(0.05, SentinelConfig(window=512, alpha=1e-3,
+                                               min_count=64))
+    s.observe(10, 10)  # catastrophic but tiny sample
+    assert not s.tripped()
+
+
+def test_sentinel_window_evicts_and_reset_clears():
+    s = ViolationSentinel(0.05, SentinelConfig(window=100, alpha=1e-3,
+                                               min_count=10))
+    s.observe(50, 50)
+    for _ in range(4):
+        s.observe(0, 50)
+    k, n = s.counts  # the 50-violation batch fell out of the window
+    assert k == 0 and n <= 150
+    s.observe(5, 10)
+    s.reset()
+    assert s.counts == (0, 0) and np.isnan(s.rate())
+
+
+def test_sentinel_false_positive_rate_bounded():
+    """At the true rate ε the per-test trip probability is ≤ α by
+    construction of the exact tail; check empirically over seeded
+    windows (400 trials ⇒ P[>8 trips | α=1e-2] ≈ 2e-2... use 5σ)."""
+    rng = np.random.default_rng(0)
+    cfg = SentinelConfig(window=256, alpha=1e-2, min_count=256)
+    trips = 0
+    trials = 400
+    for _ in range(trials):
+        s = ViolationSentinel(0.05, cfg)
+        s.observe(int(rng.binomial(256, 0.05)), 256)
+        trips += int(s.tripped())
+    bound = trials * cfg.alpha
+    assert trips <= bound + 5 * np.sqrt(bound)
+
+
+def test_sentinel_validation():
+    with pytest.raises(ValueError, match="eps"):
+        ViolationSentinel(0.0)
+    with pytest.raises(ValueError, match="violations"):
+        ViolationSentinel(0.05).observe(5, 2)
+    with pytest.raises(ValueError, match="alpha"):
+        SentinelConfig(alpha=1.5)
+    with pytest.raises(ValueError, match="test"):
+        SentinelConfig(test="bayes")
+
+
+# ---------------------------------------------------------------------------
+# plan health + fixed-partition + contingencies
+# ---------------------------------------------------------------------------
+
+
+def test_plan_health_verdicts(fleet, healthy):
+    ok, reason = plan_health(healthy)
+    assert ok, reason
+    bad = healthy._replace(total_energy=jnp.asarray(jnp.nan))
+    ok, reason = plan_health(bad)
+    assert not ok and "finite" in reason
+    degraded = healthy._replace(status=jnp.asarray(PLAN_DEGRADED, jnp.int32))
+    assert not plan_health(degraded)[0]
+    # fallback statuses are *healthy* — they already are the recovery
+    fb = healthy._replace(status=jnp.asarray(PLAN_FALLBACK_DENSE, jnp.int32))
+    assert plan_health(fb)[0]
+    batched = jax.tree_util.tree_map(lambda x: jnp.stack([x, x]), healthy)
+    with pytest.raises(ValueError, match="batched"):
+        plan_health(batched)
+
+
+def test_plan_fixed_partition_respects_m(fleet):
+    m = jnp.full((8,), 3, jnp.int32)
+    p = plan_fixed_partition(fleet, m, 0.25, 0.05, 10e6)
+    np.testing.assert_array_equal(np.asarray(p.m_sel), np.asarray(m))
+    assert int(p.status) in (PLAN_OK, PLAN_DEGRADED)
+    # scalar m broadcasts and clamps to each device's own chain
+    p8 = plan_fixed_partition(fleet, jnp.int32(10**6), 0.25, 0.05, 10e6)
+    np.testing.assert_array_equal(
+        np.asarray(p8.m_sel), np.asarray(fleet.points_per_device - 1))
+
+
+def test_inflated_eps_properties():
+    np.testing.assert_allclose(inflated_eps(0.05, 1.0), 0.05, rtol=1e-12)
+    assert inflated_eps(0.05, 1.5) < 0.05  # more σ ⇒ rarer allowed misses
+    assert 0.0 < inflated_eps(0.05, 3.0) < inflated_eps(0.05, 1.5)
+
+
+def test_contingency_plans_shapes_and_pick(fleet, healthy):
+    cont = contingency_plans(fleet, 0.25, 0.05, 10e6)
+    np.testing.assert_array_equal(
+        np.asarray(cont["local_only"].m_sel),
+        np.asarray(fleet.points_per_device - 1))
+    np.testing.assert_array_equal(np.asarray(cont["full_offload"].m_sel),
+                                  np.zeros(8, np.int32))
+    picked = pick_contingency(cont, fleet, 0.25, 0.05)
+    # on the nominal fleet the smaller-margin candidate wins
+    margins = {k: float(plan_margin(fleet, p, 0.25, 0.05))
+               for k, p in cont.items()}
+    best = min(margins, key=lambda k: (margins[k], k))
+    np.testing.assert_array_equal(np.asarray(picked.m_sel),
+                                  np.asarray(cont[best].m_sel))
+
+
+def test_pick_contingency_keeps_incumbent_when_all_worse(fleet, healthy):
+    """At a deadline where neither precomputed shape is feasible the
+    incumbent must win — rung 3 never installs a known-worse plan."""
+    cont = contingency_plans(fleet, SC.deadline, SC.eps, SC.B)
+    assert not any(bool(np.all(np.asarray(p.feasible)))
+                   for p in cont.values())
+    picked = pick_contingency(cont, fleet, SC.deadline, SC.eps,
+                              incumbent=healthy)
+    np.testing.assert_array_equal(np.asarray(picked.m_sel),
+                                  np.asarray(healthy.m_sel))
+
+
+# ---------------------------------------------------------------------------
+# solver fail-soft (forced non-finite inner solve)
+# ---------------------------------------------------------------------------
+
+
+def _poisoning_entry(real_entry, poison_solvers):
+    """Wrap a compiled plan entry: solves whose static ``solver`` is in
+    ``poison_solvers`` come back with a NaN energy (as if the inner
+    barrier diverged); everything else is the real result."""
+    def entry(fleet, d, e, b, cap, m0, **statics):
+        p = real_entry(fleet, d, e, b, cap, m0, **statics)
+        if statics["solver"] in poison_solvers:
+            return p._replace(total_energy=p.total_energy * jnp.nan)
+        return p
+    return entry
+
+
+def test_fail_soft_dense_retry(fleet, monkeypatch):
+    monkeypatch.setattr(
+        api, "plan_multi_jit",
+        _poisoning_entry(api.plan_multi_jit, {"structured"}))
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                    pccp_iters=6))
+    with pytest.warns(RuntimeWarning, match="dense"):
+        p = planner.plan(fleet, SC)
+    assert int(p.status) == PLAN_FALLBACK_DENSE
+    assert np.isfinite(float(p.total_energy))
+
+
+def test_fail_soft_incumbent_fallback(fleet, healthy, monkeypatch):
+    monkeypatch.setattr(
+        api, "plan_multi_jit",
+        _poisoning_entry(api.plan_multi_jit, {"structured", "dense"}))
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                    pccp_iters=6))
+    with pytest.warns(RuntimeWarning, match="incumbent"):
+        p = planner.plan(fleet, SC, incumbent=healthy)
+    assert int(p.status) == PLAN_FALLBACK_INCUMBENT
+    np.testing.assert_array_equal(np.asarray(p.m_sel),
+                                  np.asarray(healthy.m_sel))
+
+
+def test_fail_soft_degraded_without_incumbent(fleet, monkeypatch):
+    monkeypatch.setattr(
+        api, "plan_multi_jit",
+        _poisoning_entry(api.plan_multi_jit, {"structured", "dense"}))
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                    pccp_iters=6))
+    with pytest.warns(RuntimeWarning, match="degraded"):
+        p = planner.plan(fleet, SC)
+    assert not np.isfinite(float(p.total_energy))
+
+
+def test_fail_soft_off_and_on_identical_when_healthy(fleet):
+    """A healthy solve must be returned unchanged: guard on/off plans are
+    leaf-identical (the golden suite pins the guarded default, this pins
+    the equivalence)."""
+    mk = lambda fs: Planner(PlannerConfig(
+        policy="robust_exact", outer_iters=3, pccp_iters=6, fail_soft=fs))
+    a = mk(True).plan(fleet, SC)
+    b = mk(False).plan(fleet, SC)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fail_soft_skipped_under_tracing(fleet):
+    """`plan` inside jit must not try host-side health checks."""
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=2,
+                                    pccp_iters=4))
+
+    @jax.jit
+    def traced(deadline):
+        return planner.plan(fleet, Scenario(deadline, 0.02, 10e6)).total_energy
+
+    assert np.isfinite(float(traced(jnp.asarray(0.18))))
+
+
+def test_planner_hot_path_under_debug_nans(fleet):
+    """The planner's compiled path must be NaN-free end to end — run it
+    with jax_debug_nans armed (which raises on any NaN intermediate the
+    moment it is produced)."""
+    jax.config.update("jax_debug_nans", True)
+    try:
+        planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=2,
+                                        pccp_iters=4))
+        p = planner.plan(fleet, Scenario(0.2, 0.05, 10e6))
+        assert np.isfinite(float(p.total_energy))
+    finally:
+        jax.config.update("jax_debug_nans", False)
+
+
+# ---------------------------------------------------------------------------
+# closed loop
+# ---------------------------------------------------------------------------
+
+
+def test_closed_loop_quiet_schedule_never_acts(fleet, planner):
+    r = run_closed_loop(fleet, Scenario(0.25, 0.05, 10e6),
+                        identity_schedule(6), planner,
+                        jax.random.PRNGKey(0), requests_per_step=32)
+    assert r.replans == 0 and r.churn == 0
+    assert r.first_trip_step is None
+    assert not r.tripped.any()
+    assert r.step_rate.shape == (6,) and r.rung.max() == 0
+
+
+def test_closed_loop_guard_recovers_incident(fleet, planner):
+    """A sustained straggler incident: unguarded stays in violation,
+    the guarded ladder restores the window rate ≤ ε."""
+    sched = straggler_burst(16, start=2, length=14, prob=0.5, extra_s=0.2)
+    sc = Scenario(0.25, 0.05, 10e6)
+    guard = GuardConfig(sentinel=SentinelConfig(window=512, alpha=1e-3,
+                                                min_count=64))
+    key = jax.random.PRNGKey(1)
+    ung = run_closed_loop(fleet, sc, sched, planner, key,
+                          requests_per_step=32, guarded=False, guard=guard)
+    grd = run_closed_loop(fleet, sc, sched, planner, key,
+                          requests_per_step=32, guarded=True, guard=guard)
+    assert ung.final_window_rate > 0.05
+    assert grd.final_window_rate <= 0.05
+    assert grd.replans >= 1 and grd.first_trip_step is not None
+    assert grd.recovery_steps is not None
