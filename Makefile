@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench-smoke bench dev-install
+.PHONY: test lint analyze bench-smoke bench dev-install
 
 # Tier-1 verification (ROADMAP.md). No -x: a first failure must not hide
 # the rest of the suite (PR 4 made the two long-standing seed failures
@@ -15,6 +15,13 @@ test:
 #   pip install ruff
 lint:
 	$(PY) -m ruff check src tests benchmarks examples
+
+# Trace-discipline analyzer (DESIGN.md §analysis): Layer 1 AST lint over
+# the compiled surface + Layer 2 jaxpr/compile audit (host callbacks,
+# dtype/weak-type leaks, const budget, pytree contracts, recompile
+# drill). Writes ANALYZE_report.json; exits nonzero on any finding.
+analyze:
+	$(PY) -m repro.analysis
 
 # Quick perf smoke: planner runtime + structured-vs-dense solver A/B +
 # PCCP convergence + scenario batching + heterogeneous fleets +

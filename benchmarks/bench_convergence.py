@@ -29,7 +29,7 @@ def run() -> list[Row]:
                                  ("resnet152", resnet152_fleet, 0.16, 30e6)):
         for n in (6, 12, 18, 30):
             fleet = fleet_fn(jax.random.PRNGKey(n), n)
-            p, us = timed(lambda: planner.plan(fleet, Scenario(D, 0.04, B)))
+            p, us = timed(lambda D=D, B=B: planner.plan(fleet, Scenario(D, 0.04, B)))
             iters = float(jnp.mean(p.pccp_iters[-1]))
             rows.append((f"fig9_pccp_iters_{name}_N{n}", us, f"avg_iters={iters:.2f}"))
 
@@ -64,7 +64,7 @@ def run() -> list[Row]:
         for init in inits:
             pl = Planner(PlannerConfig(policy="robust_exact", outer_iters=5,
                                        init_m=init, multi_start=False))
-            p, us = timed(lambda: pl.plan(fleet, Scenario(D, 0.04, B)))
+            p, us = timed(lambda D=D, B=B: pl.plan(fleet, Scenario(D, 0.04, B)))
             tr = [f"{float(v):.4f}" for v in p.objective_trace]
             finals.append(float(p.objective_trace[-1]))
             rows.append((f"fig10_traj_{name}_init{init}", us, "traj=" + "|".join(tr)))

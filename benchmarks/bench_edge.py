@@ -78,7 +78,7 @@ def run() -> list[Row]:
                              ("static_scale", legacy, legacy_fleet),
                              ("dedicated", naive, fleet_true)):
         planner = dep.planner(POLICY, **KW)
-        p, us = timed(lambda: planner.plan(fleet, dep.scenario()))
+        p, us = timed(lambda fleet=fleet, dep=dep: planner.plan(fleet, dep.scenario()))
         # every plan's decisions are judged on the PHYSICAL fleet under
         # the congestion ground truth (energy is t_vm-independent, so the
         # plan's own figure carries over)

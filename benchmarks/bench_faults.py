@@ -107,11 +107,13 @@ def run() -> list:
     if not payload["guarded_final_leq_eps"]:
         warnings.warn(
             f"guarded closed loop ended above eps: "
-            f"{grd.final_window_rate:.4f} > {EPS}", RuntimeWarning)
+            f"{grd.final_window_rate:.4f} > {EPS}", RuntimeWarning,
+            stacklevel=2)
     if not payload["unguarded_final_gt_eps"]:
         warnings.warn(
             "incident too weak: unguarded loop ended back under eps "
-            f"({ung.final_window_rate:.4f} <= {EPS})", RuntimeWarning)
+            f"({ung.final_window_rate:.4f} <= {EPS})", RuntimeWarning,
+            stacklevel=2)
     rows.append((
         "faults/headline", 0.0,
         f"unguarded_final={ung.final_window_rate:.4f}>"

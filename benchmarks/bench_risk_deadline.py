@@ -30,12 +30,12 @@ def run() -> list[Row]:
         fleet = fleet_fn(jax.random.PRNGKey(0), 12)
         # worst_case uses σ_hard ≡ 0, so ε never enters — one plan suffices.
         # Untimed calls (discarded `_`) skip the warmup: no point solving twice.
-        pw, _ = timed(lambda: PLANNERS["worst_case"].grid(fleet, D, EPSS[0], B),
+        pw, _ = timed(lambda D=D, B=B: PLANNERS["worst_case"].grid(fleet, D, EPSS[0], B),
                       repeats=1, warmup=0)
         ew = float(pw.total_energy[0, 0, 0])
-        pr, us = timed(lambda: PLANNERS["robust_exact"].grid(fleet, D, EPSS, B),
+        pr, us = timed(lambda D=D, B=B: PLANNERS["robust_exact"].grid(fleet, D, EPSS, B),
                        repeats=1)
-        pg, _ = timed(lambda: PLANNERS["gaussian"].grid(fleet, D, EPSS, B),
+        pg, _ = timed(lambda D=D, B=B: PLANNERS["gaussian"].grid(fleet, D, EPSS, B),
                       repeats=1, warmup=0)
         for j, eps in enumerate(EPSS):
             e = float(pr.total_energy[0, j, 0])
@@ -46,10 +46,12 @@ def run() -> list[Row]:
 
         eps_d = 0.02 if name == "alexnet" else 0.04
         pd, us = timed(
-            lambda: PLANNERS["robust_exact"].grid(fleet, deadlines, eps_d, B),
+            lambda deadlines=deadlines, B=B:
+                PLANNERS["robust_exact"].grid(fleet, deadlines, eps_d, B),
             repeats=1)
         pwd, _ = timed(
-            lambda: PLANNERS["worst_case"].grid(fleet, deadlines, 0.02, B),
+            lambda deadlines=deadlines, B=B:
+                PLANNERS["worst_case"].grid(fleet, deadlines, 0.02, B),
             repeats=1, warmup=0)
         for i, D2 in enumerate(deadlines):
             rows.append((f"fig13b_energy_{name}_D{int(D2*1e3)}ms", us / len(deadlines),

@@ -110,7 +110,7 @@ def run_runtime() -> list[Row]:
                 # Python outer loop, 168-Newton-step schedule AND dense
                 # autodiff inner solver
                 _, ref_us = timed(
-                    lambda: plan_reference(fleet, D, 0.04, B,
+                    lambda D=D, B=B: plan_reference(fleet, D, 0.04, B,
                                            pccp_schedule=SEED_SCHEDULE,
                                            solver="dense", **_CFG),
                     repeats=2)

@@ -25,7 +25,8 @@ def run() -> list[Row]:
     for name, fleet_fn, deadlines, B in scen:
         fleet = fleet_fn(jax.random.PRNGKey(0), 12)
         grid, grid_us = timed(
-            lambda: PLANNER.grid(fleet, deadlines, EPSS, B), repeats=1)
+            lambda deadlines=deadlines, B=B:
+            PLANNER.grid(fleet, deadlines, EPSS, B), repeats=1)
         warmed = set()
         for i, D in enumerate(deadlines):
             for j, eps in enumerate(EPSS):
@@ -36,7 +37,7 @@ def run() -> list[Row]:
                     # across grid cells, so later cells are already warm
                     warm = 1 if dist not in warmed else 0
                     warmed.add(dist)
-                    vr, us = timed(lambda: violation_report(
+                    vr, us = timed(lambda p=p, D=D, dist=dist: violation_report(
                         key, fleet, p.m_sel, p.alloc, D, dist=dist,
                         num_samples=20000, var_scale=1.0),
                         repeats=1, warmup=warm)

@@ -40,7 +40,7 @@ dep = MixedTwoTierDeployment(
     dedicated_vm=False,
 )
 print("population counts:", dict(zip([p.name for p in dep.populations],
-                                     dep.counts())))
+                                     dep.counts(), strict=True)))
 
 # 1. one compiled plan for the whole mixed population
 p, fleet = dep.plan(policy="robust_exact", outer_iters=3)
@@ -49,7 +49,8 @@ print(f"mixed plan: E = {float(p.total_energy):.4f} J, "
 
 # 2. per-device Monte-Carlo validation — every device against its own SLO
 per = dep.validate_per_device(p, fleet)
-for n, (g, m, v) in enumerate(zip(per["group"], per["m"], per["violation"])):
+for n, (g, m, v) in enumerate(zip(per["group"], per["m"], per["violation"],
+                                  strict=True)):
     print(f"  device {n}: {g:18s} m={m}  P(T>D)={float(v):.4f}  "
           f"{'ok' if per['ok'][n] else 'VIOLATED'}")
 assert per["ok"].all()

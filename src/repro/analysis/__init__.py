@@ -1,0 +1,16 @@
+"""Trace-discipline analyzer (DESIGN.md §analysis).
+
+Two layers guard the one-compiled-program invariant:
+
+- :mod:`repro.analysis.astcheck` — Layer 1, an AST lint over the
+  compiled surface (``repro.{core,solvers,serve,configs}``);
+- :mod:`repro.analysis.jaxpr_audit` — Layer 2, graph-level checks on
+  the actually-traced entry points plus a recompile counter.
+
+Run both with ``make analyze`` (= ``python -m repro.analysis``).
+
+This package is host-side tooling: importing it must stay cheap and
+must not pull in jax (Layer 2 imports lazily) so the AST layer can run
+in a bare CI job.
+"""
+from repro.analysis.rules import RULES, Finding  # noqa: F401

@@ -1,0 +1,60 @@
+"""``python -m repro.analysis`` — run both analyzer layers, write the
+CI artifact, exit nonzero on any finding.
+
+Options::
+
+    --report PATH   write the JSON report (default ANALYZE_report.json)
+    --ast-only      skip the jaxpr/compile layer (no jax import)
+    --devices N     tiny-fleet size for the jaxpr layer (default 3)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--report", default="ANALYZE_report.json")
+    ap.add_argument("--ast-only", action="store_true")
+    ap.add_argument("--devices", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    from repro.analysis.astcheck import analyze_repo
+    from repro.analysis.rules import render
+
+    findings = analyze_repo()
+    report = {
+        "ast": {
+            "ok": not findings,
+            "findings": [f.render() for f in findings],
+        },
+    }
+    print(f"[analyze] layer 1 (AST): {len(findings)} finding(s)")
+    if findings:
+        print(render(findings))
+
+    ok = not findings
+    if not args.ast_only:
+        from repro.analysis.jaxpr_audit import run_audit
+
+        audit = run_audit(n=args.devices)
+        report["jaxpr"] = audit
+        ok = ok and audit["ok"]
+        print(f"[analyze] layer 2 (jaxpr): "
+              f"{'ok' if audit['ok'] else 'FAIL'} — "
+              f"{len(audit['problems'])} problem(s), recompile drill "
+              f"{'ok' if audit['recompile_drill']['ok'] else 'FAIL'}")
+        for p in audit["problems"]:
+            print("  " + p)
+
+    report["ok"] = ok
+    Path(args.report).write_text(json.dumps(report, indent=1, sort_keys=True))
+    print(f"[analyze] report -> {args.report}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,714 @@
+"""Layer 1: AST trace-discipline lint (DESIGN.md §analysis).
+
+A package-level pass over ``repro.{core,solvers,serve,configs}`` that
+flags source patterns breaking the one-compiled-program invariant. The
+pass is deliberately heuristic — it runs a *syntactic taint analysis*
+(function parameters are potentially-traced unless the declared static
+contract says otherwise; ``.shape``/``len()``/``isinstance()``/``is
+None`` projections untaint) over every *jit-reachable* function
+(jit-wrapped, passed to a jax transform, called — by name — from a
+reachable function, or listed in ``contracts.ANALYSIS_SURFACE``).
+
+False positives are expected at the host/device boundary and are the
+point: each one must carry an explicit ``# analyze: ok(RULE): reason``
+annotation, turning implicit host-side escapes into reviewed,
+documented ones.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import contracts
+from repro.analysis.rules import Finding, Suppressions, parse_suppressions
+
+__all__ = ["analyze_files", "analyze_repo", "DEFAULT_SUBPACKAGES"]
+
+DEFAULT_SUBPACKAGES = ("core", "solvers", "serve", "configs")
+
+#: builtin casts that force a host sync on a tracer
+_CAST_BUILTINS = frozenset({"float", "int", "bool", "complex"})
+#: attribute projections of an array that are static under tracing
+_STATIC_ATTRS = frozenset(
+    {"shape", "ndim", "dtype", "size", "itemsize"}
+) | contracts.STATIC_PROPERTY_NAMES
+#: calls whose result is always host-static
+_STATIC_CALLS = frozenset({
+    "len", "isinstance", "issubclass", "hasattr", "getattr", "type", "id",
+    "repr", "str", "callable",
+})
+#: methods that materialize a tracer on the host
+_MATERIALIZE_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+#: dotted prefixes that mean "this call builds/uses a jax array"
+_JNP_PREFIXES = ("jax.numpy.", "jax.random.", "jax.nn.", "jax.scipy.")
+#: jax transforms that take callables worth marking as trace roots
+_TRANSFORMS = frozenset({
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.jacfwd", "jax.jacrev", "jax.hessian", "jax.checkpoint",
+    "jax.remat", "jax.make_jaxpr", "jax.custom_jvp", "jax.custom_vjp",
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.cond", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan", "jax.tree_util.tree_map", "jax.tree.map",
+})
+
+
+# ---------------------------------------------------------------------------
+# Per-module collection
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FuncInfo:
+    qualname: str
+    modname: str
+    path: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef
+    params: Tuple[str, ...]
+    has_var_kwargs: bool
+    calls: Set[str] = field(default_factory=set)
+    declared_statics: FrozenSet[str] = frozenset()
+    is_root: bool = False
+    reachable: bool = False
+    parent: Optional["FuncInfo"] = None
+    children: List["FuncInfo"] = field(default_factory=list)
+    suppressed: FrozenSet[str] = frozenset()  # def-level escape hatch
+
+    @property
+    def bare_name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    def allows(self, rule: str) -> bool:
+        if rule in self.suppressed:
+            return True
+        return self.parent.allows(rule) if self.parent is not None else False
+
+
+@dataclass
+class ModuleInfo:
+    path: Path
+    modname: str
+    tree: ast.Module
+    sup: Suppressions
+    #: local name -> dotted origin ("numpy", "jax.numpy", "functools.partial")
+    origins: Dict[str, str] = field(default_factory=dict)
+    #: module-level `NAME = ("a", "b")` string tuples (static_argnames refs)
+    str_tuples: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    functions: List[FuncInfo] = field(default_factory=list)
+
+    def resolve(self, dotted: Optional[str]) -> Optional[str]:
+        """Map a local dotted name to its import origin (np.x -> numpy.x)."""
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        origin = self.origins.get(head, head)
+        return f"{origin}.{rest}" if rest else origin
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _collect_imports(mod: ModuleInfo) -> None:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mod.origins[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for alias in node.names:
+                mod.origins[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+
+
+def _str_tuple(node: ast.AST, mod: ModuleInfo) -> Optional[Tuple[str, ...]]:
+    """Evaluate a static_argnames expression: str / tuple of str / module
+    constant / `+` concatenation thereof."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant) and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return tuple(out)
+    if isinstance(node, ast.Name):
+        return mod.str_tuples.get(node.id)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left, right = _str_tuple(node.left, mod), _str_tuple(node.right, mod)
+        if left is not None and right is not None:
+            return left + right
+    return None
+
+
+def _def_suppressions(node: ast.AST, sup: Suppressions) -> FrozenSet[str]:
+    """Escape hatches on the `def` line or a decorator line cover the
+    whole function body."""
+    lines = [node.lineno] + [d.lineno for d in getattr(node, "decorator_list", [])]
+    out: Set[str] = set()
+    for ln in lines:
+        out |= sup.by_line.get(ln, frozenset())
+    return frozenset(out)
+
+
+class _Collector(ast.NodeVisitor):
+    """Builds FuncInfos (incl. methods/nested defs), call-graph edges,
+    jit-root marks and module-level findings for one module."""
+
+    def __init__(self, mod: ModuleInfo, findings: List[Finding]):
+        self.mod = mod
+        self.findings = findings
+        self.stack: List[FuncInfo] = []
+        self.class_stack: List[str] = []
+        self.jit_decls: List[Tuple[FuncInfo, FrozenSet[str], int]] = []
+
+    # -- helpers ---------------------------------------------------------
+    def _qual(self, name: str) -> str:
+        scope = [f.qualname.rsplit(".", 1)[-1] for f in self.stack]
+        return ".".join(self.class_stack + scope + [name])
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        func = self.stack[-1].qualname if self.stack else "<module>"
+        line = getattr(node, "lineno", 1)
+        if self.mod.sup.allows(line, rule):
+            return
+        if self.stack and self.stack[-1].allows(rule):
+            return
+        self.findings.append(Finding(
+            rule=rule, path=str(self.mod.path), line=line,
+            col=getattr(node, "col_offset", 0), message=msg, func=func))
+
+    def _jit_static_argnames(self, call: ast.Call) -> Optional[FrozenSet[str]]:
+        """If `call` is jax.jit(...) or partial(jax.jit, ...), return its
+        static_argnames (possibly empty); else None."""
+        fn = self.mod.resolve(_dotted(call.func))
+        inner = call
+        if fn == "functools.partial" and call.args \
+                and self.mod.resolve(_dotted(call.args[0])) == "jax.jit":
+            pass  # kwargs live on the partial call itself
+        elif fn != "jax.jit":
+            return None
+        statics: FrozenSet[str] = frozenset()
+        for kw in inner.keywords:
+            if kw.arg in ("static_argnames", "static_argnums"):
+                if kw.arg == "static_argnums":
+                    self._emit("TRC006", call,
+                               "use static_argnames, not positional "
+                               "static_argnums — positions drift silently")
+                    continue
+                tup = _str_tuple(kw.value, self.mod)
+                if tup is None:
+                    self._emit("TRC006", kw.value,
+                               "static_argnames is not resolvable to a "
+                               "literal tuple of names — the analyzer (and "
+                               "the reader) cannot check the contract")
+                    return frozenset()
+                statics = frozenset(tup)
+        return statics
+
+    # -- module-level statements ----------------------------------------
+    def _module_level_scan(self, stmts: Sequence[ast.stmt]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                self._module_level_scan(stmt.body)
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                    break
+                if isinstance(node, ast.Call):
+                    fn = self.mod.resolve(_dotted(node.func))
+                    if fn and (fn.startswith(_JNP_PREFIXES)
+                               or fn in ("jax.numpy", "jax.random")):
+                        self._emit("TRC005", node,
+                                   f"`{_dotted(node.func)}(...)` runs at "
+                                   "import time — device work before "
+                                   "config/flags are settled, and a baked "
+                                   "constant in any trace that closes over it")
+
+    def _module_assigns(self) -> None:
+        for stmt in self.mod.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                tup = _str_tuple(stmt.value, self.mod)
+                if tup is not None:
+                    self.mod.str_tuples[stmt.targets[0].id] = tup
+
+    # -- visitors --------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def _visit_func(self, node) -> None:
+        args = node.args
+        params = tuple(
+            a.arg for a in [*args.posonlyargs, *args.args, *args.kwonlyargs]
+            if a.arg not in ("self", "cls"))
+        info = FuncInfo(
+            qualname=self._qual(node.name), modname=self.mod.modname,
+            path=str(self.mod.path), node=node, params=params,
+            has_var_kwargs=args.kwarg is not None,
+            parent=self.stack[-1] if self.stack else None,
+            suppressed=_def_suppressions(node, self.mod.sup))
+        if info.parent is not None:
+            info.parent.children.append(info)
+        self.mod.functions.append(info)
+
+        self._check_defaults(node, info)
+
+        # decorator-declared jit
+        for dec in node.decorator_list:
+            fn = self.mod.resolve(_dotted(dec))
+            if fn == "jax.jit":
+                info.is_root = True
+                self.jit_decls.append((info, frozenset(), dec.lineno))
+            elif isinstance(dec, ast.Call):
+                statics = self._jit_static_argnames(dec)
+                if statics is not None:
+                    info.is_root = True
+                    info.declared_statics = statics
+                    self.jit_decls.append((info, statics, dec.lineno))
+
+        self.stack.append(info)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _check_defaults(self, node, info: FuncInfo) -> None:
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            if isinstance(d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+                kind = "mutable literal"
+            elif isinstance(d, ast.Call):
+                fn = self.mod.resolve(_dotted(d.func))
+                if fn in ("tuple", "frozenset") and not d.args:
+                    continue
+                kind = "function call"
+            else:
+                continue
+            line = getattr(d, "lineno", node.lineno)
+            if self.mod.sup.allows(line, "TRC004") or info.allows("TRC004"):
+                continue
+            self.findings.append(Finding(
+                rule="TRC004", path=str(self.mod.path), line=line,
+                col=getattr(d, "col_offset", 0), func=info.qualname,
+                message=f"{kind} default for a parameter of "
+                        f"`{info.qualname}` is evaluated once at import "
+                        "and shared across calls"))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = self.mod.resolve(_dotted(node.func))
+        # call-graph edge by bare callee name
+        dotted = _dotted(node.func)
+        if self.stack is not None and self.stack:
+            if dotted:
+                self.stack[-1].calls.add(dotted.rsplit(".", 1)[-1])
+            elif isinstance(node.func, ast.Attribute):
+                self.stack[-1].calls.add(node.func.attr)
+        # callables handed to jax transforms become trace roots
+        if fn in _TRANSFORMS:
+            for arg in node.args:
+                name = _dotted(arg)
+                if name:
+                    self._mark_root_by_name(name.rsplit(".", 1)[-1])
+        self.generic_visit(node)
+
+    def _mark_root_by_name(self, bare: str) -> None:
+        for f in self.mod.functions:
+            if f.bare_name == bare:
+                f.is_root = True
+
+    def run(self) -> None:
+        _collect_imports(self.mod)
+        self._module_assigns()
+        self._module_level_scan(self.mod.tree.body)
+        self.visit(self.mod.tree)
+        self._module_jit_assigns()
+        if self.mod.sup.unjustified:
+            for line in self.mod.sup.unjustified:
+                self.findings.append(Finding(
+                    rule="TRC000", path=str(self.mod.path), line=line, col=0,
+                    message="escape hatch without a `: reason` tail"))
+
+    def _module_jit_assigns(self) -> None:
+        """`name = partial(jax.jit, static_argnames=S)(fn)` and
+        `name = jax.jit(fn, static_argnames=S)` module-level wrappings."""
+        by_name = {f.bare_name: f for f in self.mod.functions
+                   if f.parent is None}
+        for stmt in self.mod.tree.body:
+            value = stmt.value if isinstance(stmt, (ast.Assign, ast.AnnAssign)) \
+                else None
+            if not isinstance(value, ast.Call):
+                continue
+            statics: Optional[FrozenSet[str]] = None
+            wrapped: Optional[ast.AST] = None
+            if isinstance(value.func, ast.Call):  # partial(jax.jit, ...)(fn)
+                statics = self._jit_static_argnames(value.func)
+                wrapped = value.args[0] if value.args else None
+            else:  # jax.jit(fn, ...)
+                statics = self._jit_static_argnames(value)
+                wrapped = value.args[0] if value.args else None
+            if statics is None:
+                continue
+            name = _dotted(wrapped) if wrapped is not None else None
+            target = by_name.get(name.rsplit(".", 1)[-1]) if name else None
+            if target is not None:
+                target.is_root = True
+                target.declared_statics = statics
+                self.jit_decls.append((target, statics, stmt.lineno))
+
+
+# ---------------------------------------------------------------------------
+# TRC006: static/traced contract drift
+# ---------------------------------------------------------------------------
+
+
+def _check_static_contract(mod: ModuleInfo, info: FuncInfo,
+                           statics: FrozenSet[str], line: int,
+                           findings: List[Finding]) -> None:
+    def emit(msg: str) -> None:
+        if mod.sup.allows(line, "TRC006") or info.allows("TRC006"):
+            return
+        findings.append(Finding(
+            rule="TRC006", path=str(mod.path), line=line, col=0,
+            message=msg, func=info.qualname))
+
+    params = set(info.params)
+    for s in sorted(statics):
+        if s not in params and not info.has_var_kwargs:
+            emit(f"static_argnames names `{s}`, which is not a parameter "
+                 f"of `{info.qualname}` — dead static, or a rename drifted")
+        if s in contracts.TRACED_PARAM_NAMES:
+            emit(f"`{s}` is a traced scenario knob by contract but is "
+                 "declared static here — every distinct value recompiles")
+    for p in sorted(params & contracts.STATIC_PARAM_NAMES - statics):
+        emit(f"`{p}` is static by contract (code-path/shape selector) but "
+             f"is not in static_argnames of `{info.qualname}`")
+
+
+# ---------------------------------------------------------------------------
+# Taint walk over reachable functions (TRC001/TRC002/TRC003)
+# ---------------------------------------------------------------------------
+
+
+class _TaintChecker:
+    def __init__(self, mod: ModuleInfo, info: FuncInfo,
+                 findings: List[Finding]):
+        self.mod = mod
+        self.info = info
+        self.findings = findings
+        self.env: Dict[str, bool] = {}
+        for p in info.params:
+            self.env[p] = (p not in contracts.STATIC_PARAM_NAMES
+                           and p not in info.declared_statics)
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        line = getattr(node, "lineno", self.info.node.lineno)
+        if self.mod.sup.allows(line, rule) or self.info.allows(rule):
+            return
+        self.findings.append(Finding(
+            rule=rule, path=str(self.mod.path), line=line,
+            col=getattr(node, "col_offset", 0), message=msg,
+            func=self.info.qualname))
+
+    # -- expressions -----------------------------------------------------
+    def expr(self, node: Optional[ast.AST]) -> bool:
+        """Emit findings inside `node` and return its taint."""
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, False)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                self.expr(node.value)
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, ast.Compare):
+            tainted = self.expr(node.left)
+            for c in node.comparators:
+                tainted |= self.expr(c)
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False  # `x is None` is a trace-time gate
+            return tainted
+        if isinstance(node, ast.BoolOp):
+            return any([self.expr(v) for v in node.values])
+        if isinstance(node, ast.BinOp):
+            return self.expr(node.left) | self.expr(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, ast.IfExp):
+            if self.expr(node.test):
+                self._emit("TRC003", node,
+                           "ternary on a potentially-traced value — use "
+                           "jnp.where/lax.cond")
+            return self.expr(node.body) | self.expr(node.orelse)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value) | self.expr(node.slice)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any([self.expr(e) for e in node.elts])
+        if isinstance(node, ast.Dict):
+            return any([self.expr(k) for k in node.keys if k is not None]) \
+                | any([self.expr(v) for v in node.values])
+        if isinstance(node, ast.Slice):
+            return any([self.expr(s) for s in
+                        (node.lower, node.upper, node.step)])
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        if isinstance(node, ast.Lambda):
+            saved = dict(self.env)
+            for a in node.args.args:
+                self.env[a.arg] = False
+            self.expr(node.body)  # findings only; opaque value
+            self.env = saved
+            return False
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            return self._comp(node)
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                self.expr(v)
+            return False
+        if isinstance(node, ast.FormattedValue):
+            self.expr(node.value)
+            return False
+        if isinstance(node, (ast.Await, ast.YieldFrom)):
+            return self.expr(node.value)
+        if isinstance(node, ast.Yield):
+            return self.expr(node.value) if node.value else False
+        return False
+
+    def _comp(self, node) -> bool:
+        saved = dict(self.env)
+        tainted_iter = False
+        for gen in node.generators:
+            t = self.expr(gen.iter)
+            tainted_iter |= t
+            self._bind(gen.target, t)
+            for cond in gen.ifs:
+                self.expr(cond)
+        if isinstance(node, ast.DictComp):
+            out = self.expr(node.key) | self.expr(node.value)
+        else:
+            out = self.expr(node.elt)
+        self.env = saved
+        return out | tainted_iter
+
+    def _call(self, node: ast.Call) -> bool:
+        fn = self.mod.resolve(_dotted(node.func))
+        bare = fn.rsplit(".", 1)[-1] if fn else None
+        arg_taints = [self.expr(a) for a in node.args]
+        arg_taints += [self.expr(kw.value) for kw in node.keywords]
+        any_tainted = any(arg_taints)
+
+        if bare in _CAST_BUILTINS and fn == bare:
+            if any_tainted:
+                self._emit("TRC001", node,
+                           f"`{bare}()` on a potentially-traced value — "
+                           "host sync; ConcretizationTypeError under jit")
+            return False  # result is a host scalar
+        if fn in _STATIC_CALLS:
+            return False
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _MATERIALIZE_METHODS:
+            if self.expr(node.func.value):
+                self._emit("TRC002", node,
+                           f"`.{node.func.attr}()` on a potentially-traced "
+                           "value — host materialization")
+            return False
+        if fn and (fn == "numpy" or fn.startswith("numpy.")):
+            if any_tainted:
+                self._emit("TRC002", node,
+                           f"`{_dotted(node.func)}(...)` on a potentially-"
+                           "traced value — silent host-numpy fallback")
+            return False  # np results are host arrays
+        if fn and (fn.startswith(_JNP_PREFIXES) or fn in ("jax.numpy",)):
+            return True  # jnp results are (potential) tracers regardless
+        func_taint = self.expr(node.func) if isinstance(
+            node.func, (ast.Attribute, ast.Subscript, ast.Call)) else False
+        return any_tainted or func_taint
+
+    # -- statements ------------------------------------------------------
+    def _bind(self, target: ast.AST, taint: bool) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = taint
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, taint)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, taint)
+        # attribute/subscript targets: no local binding to track
+
+    def stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested defs are separate FuncInfos
+        if isinstance(node, ast.Assign):
+            t = self.expr(node.value)
+            for tgt in node.targets:
+                self._bind(tgt, t)
+        elif isinstance(node, ast.AnnAssign):
+            if node.value is not None:
+                self._bind(node.target, self.expr(node.value))
+        elif isinstance(node, ast.AugAssign):
+            t = self.expr(node.value)
+            if isinstance(node.target, ast.Name):
+                self.env[node.target.id] = self.env.get(node.target.id,
+                                                        False) | t
+        elif isinstance(node, ast.If):
+            if self.expr(node.test):
+                self._emit("TRC003", node,
+                           "`if` on a potentially-traced value — use "
+                           "jnp.where/lax.cond so the branch stays traced")
+            self._body(node.body)
+            self._body(node.orelse)
+        elif isinstance(node, ast.While):
+            if self.expr(node.test):
+                self._emit("TRC003", node,
+                           "`while` on a potentially-traced value — use "
+                           "lax.while_loop")
+            self._body(node.body)
+            self._body(node.orelse)
+        elif isinstance(node, ast.Assert):
+            if self.expr(node.test):
+                self._emit("TRC003", node,
+                           "`assert` on a potentially-traced value — "
+                           "fails under jit; use checkify or a sentinel")
+            if node.msg is not None:
+                self.expr(node.msg)
+        elif isinstance(node, ast.For):
+            t = self.expr(node.iter)
+            self._bind(node.target, t)
+            self._body(node.body)
+            self._body(node.orelse)
+        elif isinstance(node, ast.With):
+            for item in node.items:
+                t = self.expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, t)
+            self._body(node.body)
+        elif isinstance(node, ast.Try):
+            self._body(node.body)
+            for h in node.handlers:
+                self._body(h.body)
+            self._body(node.orelse)
+            self._body(node.finalbody)
+        elif isinstance(node, (ast.Return, ast.Expr)):
+            self.expr(node.value)
+        elif isinstance(node, ast.Raise):
+            self.expr(node.exc)
+            self.expr(node.cause)
+        elif isinstance(node, ast.Delete):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.env.pop(tgt.id, None)
+
+    def _body(self, stmts: Sequence[ast.stmt]) -> None:
+        for s in stmts:
+            self.stmt(s)
+
+    def run(self) -> None:
+        self._body(self.info.node.body)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def _matches_surface(info: FuncInfo) -> bool:
+    for mod_suffix, qual in contracts.ANALYSIS_SURFACE:
+        if info.qualname == qual and (
+                not mod_suffix or info.modname.endswith(mod_suffix)):
+            return True
+    return False
+
+
+def analyze_files(paths: Sequence[Path], src_root: Optional[Path] = None,
+                  surface: bool = True) -> List[Finding]:
+    """Run Layer 1 over `paths` (one shared call graph). With
+    ``surface=False`` only jit-wrapped/transform-passed functions are
+    reachability roots (fixture mode)."""
+    findings: List[Finding] = []
+    mods: List[ModuleInfo] = []
+    collectors: List[_Collector] = []
+    for path in paths:
+        path = Path(path)
+        source = path.read_text()
+        sup = parse_suppressions(source)
+        if sup.skip_file:
+            continue
+        if src_root is not None:
+            rel = path.relative_to(src_root).with_suffix("")
+            modname = ".".join(rel.parts)
+        else:
+            modname = path.stem
+        mod = ModuleInfo(path=path, modname=modname,
+                         tree=ast.parse(source, filename=str(path)), sup=sup)
+        mods.append(mod)
+        c = _Collector(mod, findings)
+        c.run()
+        collectors.append(c)
+
+    # TRC006 on every jit declaration
+    for mod, c in zip(mods, collectors, strict=True):
+        for info, statics, line in c.jit_decls:
+            _check_static_contract(mod, info, statics, line, findings)
+
+    # reachability: roots -> named callees -> nested defs
+    by_bare: Dict[str, List[FuncInfo]] = {}
+    all_funcs: List[FuncInfo] = []
+    for mod in mods:
+        for f in mod.functions:
+            all_funcs.append(f)
+            by_bare.setdefault(f.bare_name, []).append(f)
+    queue = [f for f in all_funcs
+             if f.is_root or (surface and _matches_surface(f))]
+    for f in queue:
+        f.reachable = True
+    while queue:
+        f = queue.pop()
+        nxt = list(f.children)
+        for callee in f.calls:
+            nxt.extend(by_bare.get(callee, ()))
+        for g in nxt:
+            if not g.reachable:
+                g.reachable = True
+                queue.append(g)
+
+    func_of = {id(f): mod for mod in mods for f in mod.functions}
+    for f in all_funcs:
+        if f.reachable:
+            _TaintChecker(func_of[id(f)], f, findings).run()
+
+    uniq = {(f.rule, f.path, f.line, f.col, f.message): f for f in findings}
+    return sorted(uniq.values(), key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def analyze_repo(src_root: Optional[Path] = None,
+                 subpackages: Sequence[str] = DEFAULT_SUBPACKAGES
+                 ) -> List[Finding]:
+    """Layer 1 over the repo's compiled surface: repro.{core,solvers,serve,configs}."""
+    if src_root is None:
+        src_root = Path(__file__).resolve().parents[2]
+    pkg = src_root / "repro"
+    paths = sorted(p for sub in subpackages for p in (pkg / sub).rglob("*.py"))
+    return analyze_files(paths, src_root=src_root)

@@ -1,0 +1,129 @@
+"""The declared traced-vs-static contract (DESIGN.md §analysis).
+
+This module is the single source of truth both analyzer layers check
+*against*. It intentionally duplicates knowledge that lives implicitly
+in ``core.api``/``core.planner`` — the whole point is that drift between
+this declaration and the code is an analyzer finding, not a silent
+recompile regression.
+"""
+from __future__ import annotations
+
+# --------------------------------------------------------------- Layer 1
+# Parameter names that are, by contract, TRACED leaves wherever they
+# appear on the compiled surface: per-scenario knobs (so sweeps reuse
+# one program) and array operands. Marking one of these static in a
+# `static_argnames` declaration means one XLA compile per value — TRC006.
+TRACED_PARAM_NAMES = frozenset({
+    # Scenario leaves (api.Scenario)
+    "deadline", "eps", "B", "edge_capacity_s",
+    # array operands of the jitted entry points
+    "fleet", "scenarios", "scenario", "m0", "m_sel", "init_m", "x_init",
+    "key", "alloc", "faults", "e_table", "t_table", "var_table", "sigma",
+    "edge_cap",
+})
+
+# Parameter names that are, by contract, STATIC wherever they appear on
+# the compiled surface: they select code paths / shapes (PlannerConfig
+# fields and solver/sampler selectors), so leaving one traced either
+# fails to trace (Python branching on it) or silently bloats the
+# program. A jitted function taking one of these without declaring it
+# in `static_argnames` is TRC006.
+STATIC_PARAM_NAMES = frozenset({
+    # PlannerConfig statics (api._BATCH_STATICS / planner._STATICS)
+    "policy", "outer_iters", "pccp_iters", "channel_cv", "multi_start",
+    "solver", "pccp_gated",
+    # per-function statics on other entry points
+    "sigma_model", "dist", "num_samples", "num_iters", "schedule", "gated",
+    "endpoint",
+})
+
+# Shape-derived int properties on the pytree containers (BlockChain /
+# Fleet): static under tracing, so projecting them does not taint.
+STATIC_PROPERTY_NAMES = frozenset({
+    "num_devices", "max_points", "points_per_device",
+})
+
+# Entry points treated as jit-reachability roots even though they are
+# not themselves jit-wrapped: the public surface whose bodies feed
+# values into (or host-orchestrate) the compiled programs. Matched as
+# (module-suffix, qualname) pairs; module-suffix "" matches any module.
+ANALYSIS_SURFACE = (
+    ("core.api", "Planner.plan"),
+    ("core.api", "Planner.plan_many"),
+    ("core.api", "Planner.grid"),
+    ("core.api", "plan_many"),
+    ("core.planner", "plan_health"),
+    ("core.planner", "initial_points"),
+    ("core.resource", "allocate_ipm"),
+    ("serve.closedloop", "run_closed_loop"),
+    ("serve.guard", "contingency_plans"),
+    ("serve.guard", "pick_contingency"),
+    ("serve.guard", "plan_margin"),
+    ("serve.partitioned", "_DeploymentBase.plan"),
+    ("serve.partitioned", "_DeploymentBase.validate"),
+)
+
+# --------------------------------------------------------------- Layer 2
+#: total bytes of constants allowed to be baked into one traced program.
+#: The planner's closures legitimately capture small index/schedule
+#: tables (~1.5 KiB today); a fleet or profile table leaking in as a
+#: constant (instead of an argument) is orders of magnitude bigger.
+CONST_BYTE_BUDGET = 1 << 16  # 64 KiB
+
+#: dtypes allowed on *outputs* of the compiled surface. The planner is a
+#: float64 precision island (x64 flipped on at `repro.core` import —
+#: goldens pin 1e-8 agreement with the paper tables); float32 on an
+#: output means an accidental downcast mixed in, int64 means an
+#: unstable integer leaf (cf. the Plan.pccp_iters int64 fix).
+ALLOWED_OUTPUT_DTYPES = frozenset({"float64", "int32", "bool"})
+
+# Pytree leaf contracts: (path, dtype) in flattening order — exactly
+# what the golden files and any scan/cond over these trees assume.
+# `jax.tree_util.keystr` paths.
+SCENARIO_LEAVES = (
+    (".deadline", "float64"),
+    (".eps", "float64"),
+    (".B", "float64"),
+    (".edge_capacity_s", "float64"),
+)
+
+PLAN_LEAVES = (
+    (".m_sel", "int32"),
+    (".alloc.b", "float64"),
+    (".alloc.f", "float64"),
+    (".alloc.e_loc", "float64"),
+    (".alloc.e_off", "float64"),
+    (".alloc.feasible", "bool"),
+    (".alloc.lam", "float64"),
+    (".alloc.mu", "float64"),
+    (".total_energy", "float64"),
+    (".feasible", "bool"),
+    (".objective_trace", "float64"),
+    (".pccp_iters", "int32"),
+    (".margins", "float64"),
+    (".status", "int32"),
+)
+
+ALLOCATION_LEAVES = tuple(
+    (path[len(".alloc"):], dt) for path, dt in PLAN_LEAVES
+    if path.startswith(".alloc.")
+)
+
+FAULTSTATE_LEAVES = (
+    (".loc_mean_scale", "float64"),
+    (".loc_var_scale", "float64"),
+    (".vm_mean_scale", "float64"),
+    (".vm_var_scale", "float64"),
+    (".gain_scale", "float64"),
+    (".cap_scale", "float64"),
+    (".straggler_prob", "float64"),
+    (".straggler_extra_s", "float64"),
+    (".straggler_cv", "float64"),
+)
+
+PYTREE_CONTRACTS = {
+    "Scenario": SCENARIO_LEAVES,
+    "Plan": PLAN_LEAVES,
+    "Allocation": ALLOCATION_LEAVES,
+    "FaultState": FAULTSTATE_LEAVES,
+}

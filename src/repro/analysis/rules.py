@@ -1,0 +1,151 @@
+"""Rule catalog + escape-hatch grammar for the trace-discipline analyzer.
+
+The analyzer (DESIGN.md §analysis) enforces the one invariant the whole
+performance story rests on: every scenario knob is a *traced leaf* of a
+single compiled program, so sweeps and closed-loop re-plans never
+recompile. Layer 1 (``astcheck``) flags source patterns that silently
+break that invariant; Layer 2 (``jaxpr_audit``) checks the traced
+programs themselves.
+
+Escape hatch
+------------
+A finding is suppressed by an inline comment carrying an explicit rule
+list *and* a one-line justification::
+
+    x = float(best_energy)  # analyze: ok(TRC001): host fail-soft path, never traced
+
+Placed on a ``def`` line (or its decorator) the suppression covers the
+whole function body. A first-lines comment::
+
+    # analyze: skip-file: deliberate host-loop reference port
+
+skips the entire file. An ``ok(...)`` without the ``: reason`` tail is
+itself reported (TRC000) — silent exemptions are not allowed.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Tuple
+
+__all__ = [
+    "RULES", "Finding", "Suppressions", "parse_suppressions", "render",
+]
+
+#: rule id -> (title, what it catches)
+RULES: Dict[str, Tuple[str, str]] = {
+    "TRC000": (
+        "unjustified escape hatch",
+        "an `# analyze: ok(...)` comment without a `: reason` tail — "
+        "suppressions must say why the host-side op is safe",
+    ),
+    "TRC001": (
+        "host cast of a traced value",
+        "float()/int()/bool()/complex() applied to a potentially-traced "
+        "value inside jit-reachable code — forces a device sync and a "
+        "ConcretizationTypeError under jit",
+    ),
+    "TRC002": (
+        "host materialization of a traced value",
+        ".item()/.tolist()/np.* applied to a potentially-traced value "
+        "inside jit-reachable code — silently falls back to host numpy "
+        "and breaks tracing",
+    ),
+    "TRC003": (
+        "Python control flow on a traced value",
+        "if/while/assert/ternary whose test depends on a potentially-"
+        "traced value inside jit-reachable code — branch decisions must "
+        "use jnp.where/lax.cond so they stay in the program",
+    ),
+    "TRC004": (
+        "mutable or call default argument",
+        "a list/dict/set or function-call default — evaluated once at "
+        "import, shared across calls, and (for array defaults) baked "
+        "into every trace",
+    ),
+    "TRC005": (
+        "jnp computation at module import time",
+        "a jax.numpy/jax.random call executed at module (or class-body) "
+        "import time — allocates device buffers before config/flags are "
+        "settled and bakes constants into unrelated traces",
+    ),
+    "TRC006": (
+        "static/traced contract drift",
+        "a jit declaration whose static_argnames disagree with the "
+        "declared contract: a traced scenario knob marked static (one "
+        "compile per value), a known-static knob left traced, or a "
+        "static name that is not a parameter of the wrapped function",
+    ),
+}
+
+_OK_RE = re.compile(
+    r"#\s*analyze:\s*ok\(\s*([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)\s*\)"
+    r"(?P<reason>\s*:\s*\S.*)?"
+)
+_SKIP_RE = re.compile(r"#\s*analyze:\s*skip-file\s*(?P<reason>:\s*\S.*)?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer hit, pointing at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    func: str = "<module>"
+
+    def render(self) -> str:
+        title = RULES[self.rule][0]
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{title}] in {self.func}: {self.message}")
+
+
+@dataclass
+class Suppressions:
+    """Per-file escape hatches parsed from comments.
+
+    ``by_line`` maps a 1-based source line to the rule ids suppressed on
+    that line; ``def``-line placement is widened to the whole function by
+    the AST layer (which knows body extents). ``skip_file`` covers the
+    entire file.
+    """
+
+    by_line: Dict[int, FrozenSet[str]] = field(default_factory=dict)
+    skip_file: bool = False
+    #: `ok(...)` comments missing the `: reason` tail -> TRC000
+    unjustified: List[int] = field(default_factory=list)
+
+    def allows(self, line: int, rule: str) -> bool:
+        return rule in self.by_line.get(line, frozenset())
+
+
+def parse_suppressions(source: str) -> Suppressions:
+    """Scan raw source for escape-hatch comments (regex over lines: the
+    marker never legitimately appears inside string literals)."""
+    sup = Suppressions()
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        if "analyze:" not in text:
+            continue
+        m = _SKIP_RE.search(text)
+        if m:
+            if m.group("reason"):
+                sup.skip_file = True
+            else:
+                sup.unjustified.append(lineno)
+            continue
+        m = _OK_RE.search(text)
+        if m:
+            rules = frozenset(r.strip() for r in m.group(1).split(","))
+            if m.group("reason"):
+                sup.by_line[lineno] = sup.by_line.get(lineno, frozenset()) | rules
+            else:
+                sup.unjustified.append(lineno)
+    return sup
+
+
+def render(findings: List[Finding]) -> str:
+    lines = [f.render() for f in findings]
+    lines.append(f"{len(findings)} finding(s)")
+    return "\n".join(lines)

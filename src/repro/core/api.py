@@ -336,7 +336,7 @@ class Planner:
                                sc.edge_capacity_s, **statics)
             entry = None
         else:
-            entry = plan_multi_jit if use_multi else plan_single_jit
+            entry = plan_multi_jit if use_multi else plan_single_jit  # analyze: ok(TRC003): host dispatch on static config/multi-start shape
             p = entry(fleet, sc.deadline, sc.eps, sc.B, sc.edge_capacity_s,
                       m0, **statics)
         if not self.config.fail_soft or isinstance(p.total_energy,
@@ -345,17 +345,17 @@ class Planner:
         cap = (int(self.config.pccp_iters)
                if statics["policy"].partition is pccp_partition_step else None)
         ok, reason = plan_health(p, pccp_iter_cap=cap)
-        if ok:
+        if ok:  # analyze: ok(TRC003): host fail-soft verdict; tracing returned above
             return p
         import warnings
 
-        if entry is not None and statics["solver"] != "dense":
+        if entry is not None and statics["solver"] != "dense":  # analyze: ok(TRC003): host fail-soft ladder on static config
             warnings.warn(f"plan fail-soft: {reason}; retrying with the "
                           "dense inner solver", RuntimeWarning, stacklevel=2)
             dense = dict(statics, solver="dense")
             p_dense = entry(fleet, sc.deadline, sc.eps, sc.B,
                             sc.edge_capacity_s, m0, **dense)
-            if plan_health(p_dense, pccp_iter_cap=cap)[0]:
+            if plan_health(p_dense, pccp_iter_cap=cap)[0]:  # analyze: ok(TRC003): host fail-soft verdict on the dense retry
                 return p_dense._replace(
                     status=jnp.asarray(PLAN_FALLBACK_DENSE, jnp.int32))
         if incumbent is not None:

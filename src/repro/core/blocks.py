@@ -59,7 +59,7 @@ class BlockChain(NamedTuple):
         return self.d_bits.shape[-1]
 
 
-def pad_chain(chain: BlockChain, to_points: int) -> BlockChain:
+def pad_chain(chain: BlockChain, to_points: int) -> BlockChain:  # analyze: ok(TRC003): builder-time shape validation; chains are concrete at build
     """Pad a single chain to ``to_points`` by repeating the terminal point.
 
     The duplicated full-local points are *placeholders*: builders mark them

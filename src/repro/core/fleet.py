@@ -99,7 +99,7 @@ class DeviceSpec:
             edge=EDGE_TIER if edge is None else edge,
             f_mid_hz=0.5 * (f_min_hz + f_max_hz), seed=seed,
         )
-        if vm_time_scale != 1.0:
+        if vm_time_scale != 1.0:  # analyze: ok(TRC003): builder-time deprecation check on a concrete float
             import warnings
 
             warnings.warn(
@@ -198,8 +198,8 @@ class FleetSpec:
             npts.append(np.full(g.count, g.chain.num_points, np.int32))
 
         cat = lambda parts: jnp.concatenate(parts, axis=0)
-        chain = BlockChain(*[cat(xs) for xs in zip(*chains)])
-        platform = Platform(*[cat(xs) for xs in zip(*plats)])
+        chain = BlockChain(*[cat(xs) for xs in zip(*chains, strict=True)])
+        platform = Platform(*[cat(xs) for xs in zip(*plats, strict=True)])
         p_tx = cat(ptxs) if p_tx is None else jnp.broadcast_to(_f64(p_tx), (n,))
         return Fleet(
             chain=chain,

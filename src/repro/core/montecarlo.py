@@ -187,7 +187,9 @@ def violation_report(
     total = t_loc + t_off + t_vm
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
     return ViolationReport(
-        rate=jnp.mean(total > deadline[None, :], axis=0),
+        # dtype pinned: jnp.mean over bool otherwise lands on float32
+        # even inside the x64 island (analysis contract: float64 outputs)
+        rate=jnp.mean(total > deadline[None, :], axis=0, dtype=jnp.float64),
         mean_time=jnp.mean(total, axis=0),
         p95_time=jnp.percentile(total, 95.0, axis=0),
         mean_local=jnp.mean(t_loc, axis=0),

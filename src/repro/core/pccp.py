@@ -302,7 +302,10 @@ def pccp_partition(
     converged = dxs < theta_err  # (K, N)
     first = jnp.argmax(converged, axis=0)
     never = ~jnp.any(converged, axis=0)
-    iters = jnp.where(never, num_iters, first + 1)
+    # int32, not the x64-default int64: Plan.pccp_iters must have one
+    # dtype across policies (the exact/optimal paths emit int32) or the
+    # pytree contract — and any scan/cond over plans — flips per policy.
+    iters = jnp.where(never, num_iters, first + 1).astype(jnp.int32)
 
     # Round + feasibility repair against the ECR constraint (28).
     margin = t_table + sigma[:, None] * jnp.sqrt(var_table) - deadline[:, None]

@@ -86,7 +86,7 @@ class Plan(NamedTuple):
     objective_trace: jnp.ndarray  # (outer_iters,) Algorithm-2 trajectory (Fig. 10)
     pccp_iters: jnp.ndarray  # (outer_iters, N) Algorithm-1 iterations (Fig. 9)
     margins: jnp.ndarray  # (N,) deadline margin (≤0 ⇒ guaranteed)
-    status: jnp.ndarray = jnp.int32(PLAN_OK)  # scalar PLAN_* code
+    status: jnp.ndarray = jnp.int32(PLAN_OK)  # scalar PLAN_* code  # analyze: ok(TRC005): tiny scalar NamedTuple default; a concrete int32 stamp is the contract
 
 
 # ---------------------------------------------------------------------------
@@ -359,8 +359,8 @@ def initial_points(fleet: Fleet, init_m, multi_start: bool):
     if init_m is None:
         return clamp(jnp.full((n,), m1 - 1, jnp.int32)), False
     if not isinstance(init_m, jax.core.Tracer):  # bounds-check concrete starts
-        arr = np.asarray(init_m)
-        if arr.size and (arr.min() < 0 or arr.max() > m1 - 1):
+        arr = np.asarray(init_m)  # analyze: ok(TRC002): concrete by the Tracer guard above
+        if arr.size and (arr.min() < 0 or arr.max() > m1 - 1):  # analyze: ok(TRC003): host bounds check on a concrete start
             raise ValueError(
                 f"init_m must lie in [0, {m1 - 1}] (partition points 0..M for "
                 f"a {m1 - 1}-block chain); got {init_m!r}")
@@ -726,7 +726,7 @@ def plan_fixed_partition(fleet: Fleet, m_sel, deadline, eps, B,
     )
 
 
-def plan_health(plan: Plan, pccp_iter_cap: Optional[int] = None):
+def plan_health(plan: Plan, pccp_iter_cap: Optional[int] = None):  # analyze: ok(TRC001,TRC002,TRC003): host-side verdict; the fail-soft caller skips it under tracing
     """Host-side health verdict on a single (unbatched) plan.
 
     Returns ``(ok, reason)``. Unhealthy when any actionable leaf

@@ -352,7 +352,7 @@ def _deadline_ok(b, f, sel: Selected, budget, p_tx, gain, sigma, v_base,
     return t_loc + t_off <= beff + tol
 
 
-def allocate_ipm(
+def allocate_ipm(  # analyze: ok(TRC001,TRC002,TRC003): host cross-check utility (barrier reference path), never jitted
     fleet: Fleet,
     m_sel: jnp.ndarray,
     deadline: jnp.ndarray,

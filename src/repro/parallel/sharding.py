@@ -63,7 +63,8 @@ def constrain(x, spec):
     fsdp = fs if len(fs) > 1 else fs[0]
     model_used = False
     out = []
-    for dim, ax in zip(x.shape, spec):
+    # strict=False: a spec shorter than the rank replicates trailing dims
+    for dim, ax in zip(x.shape, spec, strict=False):
         if ax == "fsdp" and dim % _size(mesh, fs) == 0 and dim >= _size(mesh, fs):
             out.append(fsdp)
         elif ax == "model" and not model_used and dim % mesh.shape["model"] == 0 \
@@ -130,7 +131,8 @@ def _leaf_spec(path, shape, mesh) -> P:
 
     def guard(spec_entries):
         out = []
-        for dim, ax in zip(dims, spec_entries):
+        # strict=False: short specs leave trailing dims replicated
+        for dim, ax in zip(dims, spec_entries, strict=False):
             out.append(ax if ax is not None and _ok(dim, mesh, ax) else None)
         return P(*(lead + out))
 

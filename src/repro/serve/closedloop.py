@@ -98,7 +98,7 @@ class ClosedLoopResult:
         return float(w[-1]) if w.size else float("nan")
 
 
-def _predicted_components(fleet: Fleet, plan: Plan):
+def _predicted_components(fleet: Fleet, plan: Plan):  # analyze: ok(TRC002): feeds the host-side controller; np is the boundary by design
     """(t_loc, t_off, t_vm) per device predicted by the *nominal* fleet."""
     sel = select_point(fleet, plan.m_sel)
     t_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, plan.alloc.f)
@@ -107,7 +107,7 @@ def _predicted_components(fleet: Fleet, plan: Plan):
     return np.asarray(t_loc), np.asarray(t_off), np.asarray(sel.t_vm)
 
 
-def _refit_scales(loc_hat: float, vm_hat: float, t_loc_pred, t_vm_pred,
+def _refit_scales(loc_hat: float, vm_hat: float, t_loc_pred, t_vm_pred,  # analyze: ok(TRC002,TRC003): host EWMA over already-materialized telemetry
                   obs_local, obs_vm, ewma: float):
     """Per-tier moment re-fit from observables only: each tier's scale
     is the EWMA of observed/predicted mean time *on that tier* (summed
@@ -137,7 +137,7 @@ def _refit_state(loc_hat: float, vm_hat: float) -> FaultState:
         vm_mean_scale=s, vm_var_scale=s**2)
 
 
-def run_closed_loop(
+def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; the jit boundary is violation_report/plan_fixed_partition inside
     fleet: Fleet,
     scenario: Scenario,
     schedule: FaultSchedule,
@@ -146,10 +146,12 @@ def run_closed_loop(
     *,
     requests_per_step: int = 64,
     guarded: bool = True,
-    guard: GuardConfig = GuardConfig(),
+    guard: Optional[GuardConfig] = None,
     dist: str = "gamma",
 ) -> ClosedLoopResult:
     """Drive ``schedule.steps`` steps of faulted serving; see module doc."""
+    if guard is None:
+        guard = GuardConfig()
     sc = Scenario(*scenario).normalized(fleet.num_devices)
     n = fleet.num_devices
     eps_scalar = float(np.asarray(sc.eps).mean())

@@ -100,16 +100,16 @@ class SentinelConfig:
 class ViolationSentinel:
     """Sliding-window monitor over per-request deadline outcomes."""
 
-    def __init__(self, eps: float, config: SentinelConfig = SentinelConfig()):
+    def __init__(self, eps: float, config: Optional[SentinelConfig] = None):
         if not 0.0 < eps < 1.0:
             raise ValueError(f"eps must be in (0, 1), got {eps}")
         self.eps = float(eps)
-        self.config = config
+        self.config = config if config is not None else SentinelConfig()
         self._batches: deque = deque()  # (violations, total) pairs
         self._k = 0
         self._n = 0
 
-    def observe(self, violations: int, total: int = 1) -> None:
+    def observe(self, violations: int, total: int = 1) -> None:  # analyze: ok(TRC003): sentinel counts are host python ints by contract
         """Feed a batch of outcomes (``violations`` of ``total`` requests
         missed their deadline)."""
         if total < 0 or not 0 <= violations <= total:
@@ -209,7 +209,7 @@ def pick_contingency(plans: Dict[str, Plan], fleet: Fleet, deadline,
     candidates = dict(plans)
     if incumbent is not None:
         candidates["incumbent"] = incumbent
-    scored = {name: float(plan_margin(fleet, p, deadline, eps))
+    scored = {name: float(plan_margin(fleet, p, deadline, eps))  # analyze: ok(TRC001): host selection over a handful of precomputed plans
               for name, p in candidates.items()}
     best = min(scored, key=lambda name: (scored[name], name))
     return candidates[best]

@@ -147,7 +147,7 @@ class _DeploymentBase:
         fleet = self.fleet()
         return self.planner(policy, **kw).plan_many(fleet, scenarios), fleet
 
-    def validate(self, p, fleet, key=None, dist: str = "gamma",
+    def validate(self, p, fleet, key=None, dist: str = "gamma",  # analyze: ok(TRC001): host acceptance report (floats for humans/JSON)
                  deadline=None) -> Dict[str, float]:
         """Monte-Carlo validation of a plan against its own scenario.
 
@@ -342,7 +342,8 @@ class MixedTwoTierDeployment(_DeploymentBase):
         legacy = self.legacy_vm_scale and not self.dedicated_vm
         scale = float(self.num_devices) if legacy else 1.0
         groups = []
-        for idx, (pop, count) in enumerate(zip(self.populations, self.counts())):
+        for idx, (pop, count) in enumerate(zip(self.populations, self.counts(),
+                                               strict=True)):
             groups.append(DeviceSpec.from_model(
                 pop.cfg, count=count, num_blocks=pop.num_blocks,
                 batch=pop.batch, seq_len=pop.seq_len, device=pop.device,
@@ -362,7 +363,7 @@ class MixedTwoTierDeployment(_DeploymentBase):
         ``validate_per_device`` calls this on every report)."""
         return [self._pop_name(pop, idx)
                 for idx, (pop, count) in enumerate(
-                    zip(self.populations, self.counts()))
+                    zip(self.populations, self.counts(), strict=True))
                 for _ in range(count)]
 
 

@@ -141,7 +141,7 @@ class BarrierResult(NamedTuple):
     #: is refused and the stage stops at the incumbent), but a poisoned
     #: *input* spec can still surface here. Callers treat ok=False as
     #: "discard this solve", not "crash".
-    ok: jnp.ndarray = jnp.bool_(True)
+    ok: jnp.ndarray = jnp.bool_(True)  # analyze: ok(TRC005): tiny scalar NamedTuple default; concrete bool stamp is the contract
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +170,7 @@ def structured_barrier(spec: StructuredSpec, z: jnp.ndarray, t) -> jnp.ndarray:
     return t * structured_objective(spec, z) - jnp.sum(jnp.log(-fi))
 
 
-def _structured_parts(spec: StructuredSpec, z: jnp.ndarray, t):
+def _structured_parts(spec: StructuredSpec, z: jnp.ndarray, t):  # analyze: ok(TRC002): StructuredSpec index metadata is concrete numpy by construction (trace-time shapes)
     """Closed-form barrier derivatives, decomposed by row class.
 
     Returns ``(fi, g, d, h, U, wd)`` with the Hessian of φ as

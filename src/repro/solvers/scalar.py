@@ -82,7 +82,7 @@ def golden_section(fn: Callable, lo, hi, iters: int = 72):
     return 0.5 * (a + b)
 
 
-@partial(jax.jit, static_argnums=(0, 3))
+@partial(jax.jit, static_argnames=("fn", "grid"))
 def minimize_grid_then_golden(fn: Callable, lo, hi, grid: int = 64):
     """Global-ish 1-D minimization: coarse grid to localize, then golden.
 

@@ -1,0 +1,18 @@
+"""Seeded violation: host casts of traced values (TRC001).
+
+MUST be flagged by TRC001 — the fixture regression-tests the analyzer.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _helper(y):
+    # reached through the call graph from the jitted root below
+    return float(y) * 2.0
+
+
+@jax.jit
+def energy(x):
+    scale = float(x)  # direct host cast of a traced operand
+    n = int(jnp.sum(x))  # cast of a jnp result
+    return scale * n + _helper(x)

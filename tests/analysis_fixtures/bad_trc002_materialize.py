@@ -1,0 +1,10 @@
+"""Seeded violation: host materialization of traced values (TRC002)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def summarize(x):
+    first = x[0].item()  # .item() syncs the device
+    arr = np.asarray(x)  # silent host-numpy fallback
+    return first + np.sum(arr)

@@ -1,0 +1,13 @@
+"""Seeded violation: Python control flow on traced values (TRC003)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clamp(x, lo):
+    assert x.ndim == 1  # fine: shape projection is static
+    if jnp.min(x) < lo:  # traced comparison driving a Python branch
+        x = jnp.maximum(x, lo)
+    while jnp.max(x) > 10.0:  # traced while
+        x = x * 0.5
+    return x if jnp.all(x > 0) else -x  # traced ternary

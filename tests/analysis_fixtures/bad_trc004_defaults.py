@@ -1,0 +1,14 @@
+"""Seeded violation: mutable / call defaults (TRC004)."""
+
+
+class Config:
+    pass
+
+
+def accumulate(x, out=[]):  # mutable literal default
+    out.append(x)
+    return out
+
+
+def configure(x, cfg=Config(), names={}):  # call default + dict literal
+    return x, cfg, names

@@ -1,0 +1,14 @@
+"""Seeded violation: jnp computation at module import time (TRC005)."""
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+GRID = jnp.linspace(0.0, 1.0, 128)  # device work at import
+
+
+class Result(NamedTuple):
+    value: jnp.ndarray = jnp.zeros(())  # class-body default runs at import
+
+
+def lookup(i):
+    return GRID[i]

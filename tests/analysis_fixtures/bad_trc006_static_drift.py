@@ -1,0 +1,25 @@
+"""Seeded violation: static/traced contract drift (TRC006)."""
+from functools import partial
+
+import jax
+
+_STATICS = ("policy", "deadline")
+
+
+@partial(jax.jit, static_argnames=_STATICS)
+def plan_bad(fleet, deadline, policy):
+    # `deadline` is a traced scenario knob by contract: marking it static
+    # recompiles per value.
+    return fleet, deadline, policy
+
+
+@jax.jit
+def solve_bad(x, policy):
+    # `policy` is static by contract but not declared static here.
+    return x, policy
+
+
+@partial(jax.jit, static_argnames=("solver",))
+def misnamed(x):
+    # static name that is not a parameter at all
+    return x

@@ -1,0 +1,26 @@
+"""Clean fixture: idiomatic trace discipline — MUST produce no findings."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("policy", "num_iters"))
+def plan_clean(fleet, deadline, eps, policy, num_iters):
+    if policy == "robust":  # static selector: fine to branch on
+        sigma = jnp.sqrt((1.0 - eps) / jnp.maximum(eps, 1e-12))
+    else:
+        sigma = jnp.zeros_like(eps)
+    m1 = fleet.shape[-1]  # shape projection is static
+    idx = np.arange(m1)  # np on static shape metadata is fine
+    margins = fleet - deadline[..., None] * sigma[..., None]
+    best = jnp.argmin(jnp.where(idx[None, :] >= 0, margins, jnp.inf), axis=-1)
+    for _ in range(num_iters):  # unrolled loop over a static budget
+        best = jnp.minimum(best, m1 - 1)
+    return jnp.where(margins.min() < 0, best, best + 1)
+
+
+def host_report(result):
+    # not jit-reachable: host casts are fine here
+    return {"best": int(np.asarray(result).max())}

@@ -1,0 +1,14 @@
+"""Escape-hatch fixture: justified suppressions silence findings;
+an unjustified one is itself a finding (TRC000)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def monitored(x):
+    peak = float(jnp.max(x))  # analyze: ok(TRC001): debug tap, removed under jit in prod
+    return x / peak
+
+
+def shortcut(y):  # analyze: ok(TRC003)
+    return y

@@ -45,7 +45,7 @@ def assert_plans_equal(a, b, rtol=0.0):
     """Leaf-for-leaf Plan comparison (exact ints/bools, rtol floats)."""
     la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         x, y = np.asarray(x), np.asarray(y)
         if x.dtype.kind in "fc" and rtol > 0.0:
             np.testing.assert_allclose(x, y, rtol=rtol, atol=0.0)

@@ -54,5 +54,5 @@ def test_prefill_and_decode_shapes(arch, rng):
     assert lg.shape == (B, 1, cfg.vocab_size)
     assert bool(jnp.isfinite(lg).all())
     # cache leaves keep their shapes
-    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)):
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2), strict=True):
         assert a.shape == b.shape

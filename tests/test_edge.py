@@ -53,7 +53,7 @@ def occupancy(fleet, m_sel) -> float:
 def assert_plans_equal(a, b):
     la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

@@ -65,7 +65,7 @@ def test_identity_schedule_and_state_at():
     assert s.steps == 5
     st = state_at(s, 3)
     ident = FaultState.identity()
-    for got, want in zip(st, ident):
+    for got, want in zip(st, ident, strict=True):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -135,7 +135,7 @@ def test_compose_rejects_mismatched_horizons():
 def test_apply_faults_identity_is_noop(fleet):
     out = apply_faults(fleet, FaultState.identity())
     for got, want in zip(jax.tree_util.tree_leaves(out),
-                         jax.tree_util.tree_leaves(fleet)):
+                         jax.tree_util.tree_leaves(fleet), strict=True):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -186,7 +186,7 @@ def test_identity_faults_bit_identical_to_none(fleet, plan):
     straggler stream is fold_in-based, never a re-split of ``key``."""
     base = _vr(fleet, plan, faults=None)
     ident = _vr(fleet, plan, faults=FaultState.identity())
-    for got, want in zip(ident, base):
+    for got, want in zip(ident, base, strict=True):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

@@ -122,7 +122,7 @@ def test_all_valid_mask_is_numerical_noop():
                                         pccp_iters=4))
         pm, pb = planner.plan(masked, SC), planner.plan(bare, SC)
         for lm, lb in zip(jax.tree_util.tree_leaves(pm),
-                          jax.tree_util.tree_leaves(pb)):
+                          jax.tree_util.tree_leaves(pb), strict=True):
             np.testing.assert_array_equal(np.asarray(lm), np.asarray(lb))
 
 

@@ -277,7 +277,7 @@ def test_fail_soft_off_and_on_identical_when_healthy(fleet):
     a = mk(True).plan(fleet, SC)
     b = mk(False).plan(fleet, SC)
     for x, y in zip(jax.tree_util.tree_leaves(a),
-                    jax.tree_util.tree_leaves(b)):
+                    jax.tree_util.tree_leaves(b), strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

@@ -23,7 +23,7 @@ def test_absorbed_equals_expanded(h, dh, r, dr, w, rng):
         ob, cb = M.mla_decode(p, xi, cb, jnp.int32(pos), num_heads=h, head_dim=dh,
                               rope_head_dim=dr, absorbed=False)
         np.testing.assert_allclose(np.asarray(oa), np.asarray(ob), atol=2e-5)
-    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+    for a, b in zip(jax.tree.leaves(ca), jax.tree.leaves(cb), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 

@@ -1,0 +1,118 @@
+"""Recompile-count regression tests (DESIGN.md §analysis).
+
+Protocol, per entry point: a cold call must grow the underlying jit
+cache (``_cache_size()``) by exactly 1, and a value-varied same-shaped
+repeat inside a :class:`CompileCounter` must trigger zero XLA backend
+compiles. A deliberately static-deadline variant pins ``> 1`` so the
+counter itself is proven live, not vacuously zero.
+
+Cache keys are (shapes, dtypes, statics), so these tests use a fleet
+size and static knobs no other test file warms — the ``== 1`` pins stay
+valid under a full-suite run in any order.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.jaxpr_audit import CompileCounter, tiny_fleet
+from repro.core import api
+from repro.core.api import Planner, PlannerConfig, Scenario
+from repro.core.montecarlo import violation_report
+from repro.core.planner import plan_fixed_partition
+from repro.serve.closedloop import GuardConfig, run_closed_loop
+from repro.serve.faults import straggler_burst
+from repro.serve.guard import SentinelConfig
+
+# pccp_iters=7 is used nowhere else in the suite: together with the
+# batch shapes below it makes this file's jit-cache entries unique.
+_CFG = PlannerConfig(policy="robust", outer_iters=2, pccp_iters=7)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return tiny_fleet(3)
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return Planner(_CFG)
+
+
+def _run(planner, fleet, scenarios):
+    return jax.block_until_ready(planner.plan_many(fleet, scenarios))
+
+
+def test_plan_many_8_scenarios_compiles_once(fleet, planner):
+    scs = [Scenario(0.15 + 0.01 * i, 0.02, 10e6) for i in range(8)]
+    before = api.plan_many_jit._cache_size()
+    _run(planner, fleet, scs)
+    assert api.plan_many_jit._cache_size() - before == 1, \
+        "8 zipped scenarios must be ONE compile, not 8"
+    varied = [Scenario(0.21 - 0.005 * i, 0.03, 12e6) for i in range(8)]
+    with CompileCounter() as c:
+        _run(planner, fleet, varied)
+    assert c.count == 0, "value-varied repeat must hit the cache"
+    assert api.plan_many_jit._cache_size() - before == 1
+
+
+def test_grid_3x3_compiles_once(fleet, planner):
+    # K=9 is a new batch shape: exactly one more cache entry
+    before = api.plan_many_jit._cache_size()
+    jax.block_until_ready(
+        planner.grid(fleet, [0.16, 0.18, 0.20], [0.01, 0.02, 0.05], 10e6))
+    assert api.plan_many_jit._cache_size() - before == 1, \
+        "a 3x3 sweep must be ONE compile, not 9"
+    with CompileCounter() as c:
+        jax.block_until_ready(
+            planner.grid(fleet, [0.17, 0.19, 0.21], [0.02, 0.03, 0.04], 12e6))
+    assert c.count == 0, "value-varied sweep must hit the cache"
+    assert api.plan_many_jit._cache_size() - before == 1
+
+
+def test_closed_loop_escalation_compiles_once():
+    """One escalating serving run: the per-step MC probe and the
+    price-rung replan each compile exactly once across all steps; a
+    second run under a different fault draw recompiles nothing."""
+    fleet = tiny_fleet(5)  # n=5: shapes no other test file warms
+    sc = Scenario(0.25, 0.05, 10e6)
+    guard = GuardConfig(sentinel=SentinelConfig(window=256, alpha=1e-3,
+                                                min_count=32),
+                        max_rung=1)  # price rung only: a closed ladder
+    planner = Planner(_CFG)
+    sched = straggler_burst(10, start=1, length=9, prob=0.5, extra_s=0.25)
+    vr0 = violation_report._cache_size()
+    pfp0 = plan_fixed_partition._cache_size()
+    r1 = run_closed_loop(fleet, sc, sched, planner, jax.random.PRNGKey(3),
+                         requests_per_step=48, guard=guard)
+    assert r1.replans >= 1, "the drill must actually escalate"
+    assert violation_report._cache_size() - vr0 == 1, \
+        "10 steps of varying faults must reuse ONE compiled probe"
+    assert plan_fixed_partition._cache_size() - pfp0 == 1, \
+        "contingency build + price-rung replans share ONE compile"
+    sched2 = straggler_burst(10, start=1, length=9, prob=0.6, extra_s=0.3)
+    with CompileCounter() as c:
+        r2 = run_closed_loop(fleet, sc, sched2, planner,
+                             jax.random.PRNGKey(7), requests_per_step=48,
+                             guard=guard)
+    assert r2.replans >= 1
+    assert c.count == 0, "a fresh fault draw must not recompile anything"
+
+
+def test_static_deadline_variant_recompiles(fleet):
+    """The anti-pattern TRC006 exists to catch: marking the deadline (a
+    traced scenario knob) static recompiles per value — and proves the
+    CompileCounter actually observes XLA backend compiles."""
+    @partial(jax.jit, static_argnames=("deadline",))
+    def bad_entry(fleet, m_sel, deadline):  # analyze: ok(TRC006): deliberate anti-pattern under test
+        plan = plan_fixed_partition(fleet, m_sel, jnp.asarray(deadline),
+                                    0.05, 10e6)
+        return plan.total_energy
+
+    m_sel = jnp.ones(fleet.num_devices, jnp.int32)
+    with CompileCounter() as c:
+        for d in (0.18, 0.20, 0.22):
+            jax.block_until_ready(bad_entry(fleet, m_sel, deadline=d))
+    assert bad_entry._cache_size() == 3, "one cache entry per deadline value"
+    assert c.count > 1, "static deadline must recompile per value"

@@ -79,7 +79,8 @@ def test_full_tree_specs_build(arch):
     def check(path, leaf):
         spec = _spec([getattr(p, "key", "") for p in path], leaf.shape, m)
         shape = leaf.shape
-        for dim, ax in zip(shape[len(shape) - len(spec):] if len(spec) < len(shape) else shape, spec):
+        # strict=False: specs may be shorter than the rank (trailing dims replicated)
+        for dim, ax in zip(shape[len(shape) - len(spec):] if len(spec) < len(shape) else shape, spec, strict=False):
             if ax is None:
                 continue
             axes = ax if isinstance(ax, tuple) else (ax,)

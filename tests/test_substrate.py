@@ -57,7 +57,8 @@ def test_checkpoint_roundtrip(tmp_path, rng):
     like = {"params": jax.tree.map(jnp.zeros_like, params)}
     restored, step = checkpoint.load(path, like)
     assert step == 42
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["params"])):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["params"]),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
