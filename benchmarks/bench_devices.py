@@ -1,33 +1,223 @@
-"""Fig. 12 — total energy vs number of devices; PCCP vs optimal policy.
+"""Fig. 12 (energy vs N) + the group-sharded device-scaling ladder.
 
-Paper settings: AlexNet D=200 ms, B=5 MHz; ResNet152 D=150 ms, B=15 MHz.
-Both policies dispatch through the same registry/Planner entry point —
-``"optimal"`` is an ordinary policy with a ``solve`` override.
+Sections (``--only fig12`` / ``--only devices``):
+
+- ``fig12`` — total energy vs number of devices; PCCP vs optimal policy.
+  Paper settings: AlexNet D=200 ms, B=5 MHz; ResNet152 D=150 ms, B=15 MHz.
+  Both policies dispatch through the same registry/Planner entry point —
+  ``"optimal"`` is an ordinary policy with a ``solve`` override.
+
+- ``devices`` — the group-decomposed planner (``Planner.plan_sharded``,
+  DESIGN.md §scale) at fleet scale: a wall-clock ladder over
+  N ∈ {10³, 10⁴, 10⁵} devices (per-device bandwidth held constant, so
+  the scenario physics does not drift with N), a sharded-vs-monolithic
+  A/B on a mixed 8-vs-64-block fleet (where the monolithic path pays
+  65-point padding on every 8-block row), and analytic peak-table-memory
+  estimates. Ratio metrics land in ``BENCH_planner.json`` under
+  ``devices``.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-from benchmarks.common import Row, timed
-from repro.configs.paper_tables import alexnet_fleet, resnet152_fleet
+from benchmarks.common import Row, timed, update_artifact
+from repro.configs.paper_tables import (
+    ALEXNET_D_MB,
+    ALEXNET_G,
+    ALEXNET_PLATFORM,
+    ALEXNET_VLOC_MS2,
+    ALEXNET_VM_FULL_S,
+    ALEXNET_W_GFLOPS,
+    AREA_M,
+    TX_POWER_W,
+    alexnet_chain,
+    alexnet_fleet,
+    build_chain,
+    resnet152_fleet,
+)
 from repro.core import Planner, PlannerConfig, Scenario
+from repro.core.decompose import bucket_size
+from repro.core.fleet import DeviceSpec, FleetSpec
 
-ROBUST = Planner(PlannerConfig(policy="robust", outer_iters=3, pccp_iters=6))
-OPTIMAL = Planner(PlannerConfig(policy="optimal"))
 
-
-def run() -> list[Row]:
+def run_fig12() -> list[Row]:
+    # planners are built inside the runner: module import must not touch
+    # jax (TRC005 — import-time planner construction warms jit state the
+    # analyzer cannot attribute)
+    robust = Planner(PlannerConfig(policy="robust", outer_iters=3,
+                                   pccp_iters=6))
+    optimal = Planner(PlannerConfig(policy="optimal"))
     rows: list[Row] = []
     for name, fleet_fn, D, B in (("alexnet", alexnet_fleet, 0.200, 5e6),
                                  ("resnet152", resnet152_fleet, 0.150, 15e6)):
         for n in (4, 8, 12):
             fleet = fleet_fn(jax.random.PRNGKey(1), n)
             scenario = Scenario(D, 0.04, B)
-            p, us = timed(lambda: ROBUST.plan(fleet, scenario))
-            po, _ = timed(lambda: OPTIMAL.plan(fleet, scenario))
+            p, us = timed(lambda: robust.plan(fleet, scenario))
+            po, _ = timed(lambda: optimal.plan(fleet, scenario))
             gap = (float(p.total_energy) - float(po.total_energy)) / max(
                 float(po.total_energy), 1e-12)
             rows.append((f"fig12_energy_{name}_N{n}", us,
                          f"pccp_J={float(p.total_energy):.4f};"
                          f"optimal_J={float(po.total_energy):.4f};gap={gap:.3f}"))
     return rows
+
+
+# ------------------------------------------------------------- devices
+# Per-device bandwidth share held constant across the ladder (the N=50
+# runtime-bench operating point), so every rung is the same per-device
+# problem and wall-clock differences are purely planner scaling.
+_PER_DEVICE_B_HZ = 200e3
+_LADDER = (1_000, 10_000, 100_000)
+_DEADLINE_S, _EPS = 0.22, 0.04
+
+_CHAIN_TABLES = 6  # BlockChain float64 leaves per device row
+
+
+def _alexnet_device(count: int, chain=None, name: str = "alexnet") -> DeviceSpec:
+    return DeviceSpec(chain=alexnet_chain() if chain is None else chain,
+                      kappa=ALEXNET_PLATFORM["kappa"],
+                      f_min_hz=ALEXNET_PLATFORM["f_min"],
+                      f_max_hz=ALEXNET_PLATFORM["f_max"],
+                      p_tx_w=TX_POWER_W, count=count, name=name)
+
+
+def _chain64():
+    """The AlexNet profile resampled onto 64 blocks / 65 partition points
+    (monotone in cumulative work/data, same endpoints): a deep-chain
+    population for the padding A/B below."""
+    m = np.linspace(0.0, 8.0, 65)
+    src = np.arange(9.0)
+
+    def rs(vals):
+        return np.interp(m, src, np.asarray(vals, np.float64))
+
+    return build_chain(rs(ALEXNET_D_MB), rs(ALEXNET_W_GFLOPS), rs(ALEXNET_G),
+                       rs(ALEXNET_VLOC_MS2), ALEXNET_VM_FULL_S)
+
+
+def _mixed_8v64_spec(n: int) -> FleetSpec:
+    n8 = (3 * n) // 4
+    return FleetSpec((_alexnet_device(n8, name="alexnet8"),
+                      _alexnet_device(n - n8, chain=_chain64(),
+                                      name="alexnet64")),
+                     area_m=AREA_M)
+
+
+def _table_bytes_monolithic(spec: FleetSpec) -> int:
+    """Chain-table bytes of the padded monolithic fleet: every row at the
+    fleet-wide maximum point count."""
+    return _CHAIN_TABLES * 8 * spec.num_devices * spec.max_points
+
+
+def _table_bytes_sharded_peak(spec: FleetSpec) -> int:
+    """Peak chain-table bytes of the streamed group decomposition: the
+    largest single group at its native width and bucketed lane count."""
+    return max(_CHAIN_TABLES * 8 * bucket_size(g.count) * g.chain.num_points
+               for g in spec.groups)
+
+
+def run_devices() -> list[Row]:
+    rows: list[Row] = []
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=2,
+                                    multi_start=False))
+
+    # -- wall-clock ladder: one homogeneous population per rung ----------
+    ladder = []
+    for n in _LADDER:
+        spec = FleetSpec((_alexnet_device(n),), area_m=AREA_M)
+        gains = spec.sample_gains(jax.random.PRNGKey(1))
+        sc = Scenario(_DEADLINE_S, _EPS, _PER_DEVICE_B_HZ * n)
+        plan, us = timed(lambda: planner.plan_sharded(spec, sc, gains=gains),
+                         repeats=1, warmup=1)
+        entry = {"n_devices": n, "us": us, "n_pad": bucket_size(n),
+                 "feasible": bool(np.asarray(plan.feasible).all()),
+                 "energy_j": float(plan.total_energy)}
+        ladder.append(entry)
+        rows.append((f"devices_sharded_N{n}", us,
+                     f"n_pad={entry['n_pad']};feasible={entry['feasible']};"
+                     f"energy_J={entry['energy_j']:.2f}"))
+    t_us = {e["n_devices"]: e["us"] for e in ladder}
+    n_lo, n_hi = min(_LADDER), max(_LADDER)
+    scaling_vs_linear = (t_us[n_hi] / t_us[n_lo]) / (n_hi / n_lo)
+
+    # -- sharded vs monolithic on a mixed 8-vs-64-block fleet ------------
+    # The PCCP policy iterates over the full table width, so the 65-point
+    # padding the monolithic path forces onto the 8-block rows is paid on
+    # every inner iteration; the per-group programs run at native width.
+    ab_n = 128
+    ab_spec = _mixed_8v64_spec(ab_n)
+    ab_gains = ab_spec.sample_gains(jax.random.PRNGKey(5))
+    ab_fleet = ab_spec.build(gains=ab_gains)
+    ab_sc = Scenario(_DEADLINE_S, _EPS, _PER_DEVICE_B_HZ * ab_n)
+    ab_planner = Planner(PlannerConfig(policy="robust", outer_iters=2,
+                                       pccp_iters=4, multi_start=False))
+    mono, mono_us = timed(lambda: ab_planner.plan(ab_fleet, ab_sc),
+                          repeats=2, warmup=1)
+    shard, shard_us = timed(
+        lambda: ab_planner.plan_sharded(ab_spec, ab_sc, gains=ab_gains),
+        repeats=2, warmup=1)
+    ratio = mono_us / shard_us
+    energy_rel_diff = abs(float(shard.total_energy) - float(mono.total_energy)
+                          ) / max(float(mono.total_energy), 1e-12)
+    rows.append((f"devices_mixed8v64_N{ab_n}_sharded", shard_us,
+                 f"mono_us={mono_us:.0f};ratio={ratio:.2f}x;"
+                 f"energy_rel_diff={energy_rel_diff:.2e}"))
+
+    # -- analytic peak memory (chain tables, the per-device state) -------
+    mem = {
+        "mixed_8v64": {
+            "monolithic_bytes": _table_bytes_monolithic(ab_spec),
+            "sharded_peak_bytes": _table_bytes_sharded_peak(ab_spec),
+        },
+        "ladder_max": {
+            "monolithic_bytes": _table_bytes_monolithic(
+                FleetSpec((_alexnet_device(n_hi),), area_m=AREA_M)),
+            "sharded_peak_bytes": _table_bytes_sharded_peak(
+                FleetSpec((_alexnet_device(n_hi),), area_m=AREA_M)),
+        },
+    }
+    for k in mem:
+        mem[k]["ratio"] = (mem[k]["monolithic_bytes"]
+                           / max(mem[k]["sharded_peak_bytes"], 1))
+
+    update_artifact("devices", {
+        "config": {"policy": "robust_exact", "outer_iters": 2,
+                   "multi_start": False, "deadline_s": _DEADLINE_S,
+                   "eps": _EPS, "per_device_b_hz": _PER_DEVICE_B_HZ},
+        "scaling": ladder,
+        "scaling_vs_linear": scaling_vs_linear,
+        "meets_1p3x_linear": scaling_vs_linear <= 1.3,
+        "max_n_devices": n_hi,
+        "feasible_at_max": ladder[-1]["feasible"],
+        "mixed_8v64": {
+            "n_devices": ab_n,
+            "config": {"policy": "robust", "outer_iters": 2, "pccp_iters": 4,
+                       "multi_start": False},
+            "monolithic_us": mono_us,
+            "sharded_us": shard_us,
+            "sharded_vs_monolithic_ratio": ratio,
+            "energy_rel_diff": energy_rel_diff,
+        },
+        "peak_table_bytes": mem,
+    })
+    rows.append((f"devices_scaling_N{n_lo}_to_N{n_hi}", 0.0,
+                 f"vs_linear={scaling_vs_linear:.2f}x;"
+                 f"mixed8v64_ratio={ratio:.2f}x"))
+    return rows
+
+
+SECTIONS = {"fig12": run_fig12, "devices": run_devices}
+
+# ``benchmarks.run`` selects sections without importing excluded modules,
+# so it keeps its own declaration — fail loudly if the two drift.
+from benchmarks.run import MODULE_SECTIONS as _DECLARED  # noqa: E402
+
+assert tuple(SECTIONS) == _DECLARED["bench_devices"], (
+    "benchmarks/run.py MODULE_SECTIONS is out of sync with "
+    "bench_devices.SECTIONS")
+
+
+def run() -> list[Row]:
+    return run_fig12() + run_devices()

@@ -76,7 +76,7 @@ def _phase_breakdown(fleet, D, eps, B, plan_us: float) -> dict:
         lambda: allocate(fleet, m0, deadline, epsv, B, pol.sigma_model,
                          pol.ub_k),
         repeats=3)
-    e_t, t_t, v_t = policy_point_tables(fleet, alloc, pol)
+    e_t, t_t, v_t = policy_point_tables(fleet, alloc.b, alloc.f, pol)
     sigma = SIGMA_FNS[pol.sigma_model](epsv)
     x_init = jax.nn.one_hot(m0, fleet.max_points, dtype=jnp.float64)
     _, pccp_us = timed(

@@ -18,7 +18,9 @@
 #   bench_convergence   — Fig. 9/10 (PCCP iterations; Alg.-2 trajectories)
 #   bench_runtime       — Fig. 11  (runtime vs N; steady-state + compile,
 #                         seed-loop speedup at N=50 → BENCH_planner.json)
-#   bench_devices       — Fig. 12  (energy vs N; PCCP vs optimal)
+#   bench_devices       — Fig. 12  (energy vs N; PCCP vs optimal) + the
+#                         group-sharded scaling ladder to N=10⁵ devices
+#                         (sharded-vs-monolithic ratio → BENCH_planner.json)
 #   bench_risk_deadline — Fig. 13a/b, 14a/b (energy vs ε / deadline,
 #                         one plan_grid call per sweep)
 #   bench_violation     — Fig. 13c/14c (violation probability ≤ ε)
@@ -68,6 +70,7 @@ MODULES = [
 #: ``SECTIONS`` dict; bench_runtime asserts the two agree.
 MODULE_SECTIONS = {
     "bench_runtime": ("runtime", "solver"),
+    "bench_devices": ("fig12", "devices"),
 }
 
 

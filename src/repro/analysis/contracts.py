@@ -20,6 +20,9 @@ TRACED_PARAM_NAMES = frozenset({
     "fleet", "scenarios", "scenario", "m0", "m_sel", "init_m", "x_init",
     "key", "alloc", "faults", "e_table", "t_table", "var_table", "sigma",
     "edge_cap",
+    # group-sharded planner operands (core.decompose): fleet-order link
+    # gains and the in-trace (log-price, need) lanes of the host loops
+    "gains", "log_lam", "log_mu",
 })
 
 # Parameter names that are, by contract, STATIC wherever they appear on
@@ -51,7 +54,10 @@ ANALYSIS_SURFACE = (
     ("core.api", "Planner.plan"),
     ("core.api", "Planner.plan_many"),
     ("core.api", "Planner.grid"),
+    ("core.api", "Planner.plan_sharded"),
     ("core.api", "plan_many"),
+    ("core.decompose", "plan_sharded"),
+    ("core.decompose", "build_groups"),
     ("core.planner", "plan_health"),
     ("core.planner", "initial_points"),
     ("core.resource", "allocate_ipm"),
@@ -61,6 +67,7 @@ ANALYSIS_SURFACE = (
     ("serve.guard", "plan_margin"),
     ("serve.partitioned", "_DeploymentBase.plan"),
     ("serve.partitioned", "_DeploymentBase.validate"),
+    ("serve.partitioned", "MixedTwoTierDeployment.plan_sharded"),
 )
 
 # --------------------------------------------------------------- Layer 2

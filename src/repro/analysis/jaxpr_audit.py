@@ -365,5 +365,30 @@ def run_audit(n: int = 3) -> Dict[str, Any]:
             f"recompile_drill: {c.count} backend compiles on a value-varied "
             "plan_many repeat — a scenario knob became static")
 
+    # group-sharded drill: the decomposed planner compiles one program per
+    # distinct (M_g, n_bucket) group shape; a value-varied repeat (new
+    # scenario values AND new gains, same group shapes) must compile zero
+    # times per group — prices/gains are traced operands, never baked in.
+    from repro.configs.paper_tables import mixed_spec
+
+    spec = mixed_spec(8)
+    sharded = Planner(PlannerConfig(policy="robust_exact", outer_iters=2))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    sharded.plan_sharded(spec, Scenario(deadline=0.2, eps=0.04, B=30e6),
+                         key=k1)  # warm
+    with CompileCounter() as cs:
+        varied = sharded.plan_sharded(
+            spec, Scenario(deadline=0.21, eps=0.05, B=28e6), key=k2)
+        jax.block_until_ready(varied.total_energy)
+    report["sharded_recompile_drill"] = {
+        "ok": cs.count == 0,
+        "backend_compiles_on_value_varied_repeat": cs.count,
+    }
+    if cs.count:
+        report["problems"].append(
+            f"sharded_recompile_drill: {cs.count} backend compiles on a "
+            "value-varied plan_sharded repeat — a per-group program is "
+            "recompiling on scenario/gain values")
+
     report["ok"] = not report["problems"]
     return report

@@ -26,6 +26,7 @@ from repro.core.planner import (  # noqa: E402,F401
     register_policy,
 )
 from repro.core.api import Planner, PlannerConfig, Scenario, scenario_at  # noqa: E402,F401
+from repro.core.decompose import bucket_size, build_groups, plan_sharded  # noqa: E402,F401
 from repro.core.batch import plan_at, plan_grid  # noqa: E402,F401
 from repro.core.resource import Allocation, allocate, allocate_ipm  # noqa: E402,F401
 from repro.core.pccp import pccp_partition  # noqa: E402,F401
@@ -40,6 +41,7 @@ __all__ = [
     "PLAN_OK", "PLAN_DEGRADED", "PLAN_FALLBACK_DENSE",
     "PLAN_FALLBACK_INCUMBENT", "PLAN_STATUS_NAMES",
     "Scenario", "PlannerConfig", "Planner", "scenario_at",
+    "plan_sharded", "build_groups", "bucket_size",
     "Policy", "register_policy", "get_policy", "available_policies",
     "Allocation", "allocate", "allocate_ipm",
     "pccp_partition", "violation_report",

@@ -388,6 +388,34 @@ class Planner:
         statics, m0, use_multi = self._dispatch(fleet, init_m)
         return plan_many_jit(fleet, batch, m0, multi_start=use_multi, **statics)
 
+    def plan_sharded(self, spec, scenario: Scenario, *, key=None, gains=None,
+                     mesh=None, init_m: Optional[int] = None) -> Plan:
+        """Plan a mixed fleet through the group decomposition
+        (``core.decompose``; DESIGN.md §scale).
+
+        Takes the :class:`~repro.core.fleet.FleetSpec` — the grouping
+        truth — instead of a built ``Fleet``: each homogeneous population
+        runs its own compiled program at native ``(n_g, M_g+1)`` shape and
+        the populations are coordinated only through the scalar dual
+        prices (λ, μ) in a host-level outer bisection. Plans match
+        ``plan(spec.build(key), scenario)`` leaf-wise at rtol ≤ 1e-6 for
+        the exact-enumeration policies; use it when the padded monolithic
+        program is too wide (mixed 8-vs-64-block fleets) or too big
+        (10⁵–10⁶ devices) to compile as one.
+
+        ``key``/``gains`` fix the link gains exactly as ``FleetSpec.build``
+        would; ``mesh`` is a ``parallel.sharding.planner_mesh`` to shard
+        device lanes across (defaults to all local devices); ``init_m``
+        must be a scalar (per-device warm-start arrays stay on the
+        monolithic path). No fail-soft ladder — ``Plan.status`` still
+        carries the traced health stamp.
+        """
+        from repro.core.decompose import plan_sharded as _plan_sharded
+
+        sc = self._apply_edge_default(Scenario(*scenario))
+        return _plan_sharded(spec, sc, self.config, key=key, gains=gains,
+                             mesh=mesh, init_m=init_m)
+
     def grid(self, fleet: Fleet, deadlines, epss, Bs, edge_capacities=None,
              init_m=None) -> Plan:
         """Cartesian sugar over ``plan_many``: every scenario in

@@ -155,13 +155,29 @@ class FleetSpec:
         """(N,) group name per device (reporting/validation labels)."""
         return [g.name for g in self.groups for _ in range(g.count)]
 
+    def sample_gains(self, key) -> jnp.ndarray:
+        """(N,) link gains from device positions sampled uniformly in the
+        ``area_m`` square (the §VI-A scenario; distance floored at
+        ``min_dist_m``).
+
+        The ONE sampling implementation: ``build`` routes through it, and
+        the group-sharded planner (``core.decompose``) calls it up front
+        and *slices* the result per group — so a sharded plan sees exactly
+        the gains the monolithic ``build(key)`` fleet would, which is what
+        makes the two paths value-comparable at the same key.
+        """
+        n = self.num_devices
+        xy = jax.random.uniform(key, (n, 2), jnp.float64,
+                                -self.area_m / 2, self.area_m / 2)
+        r = jnp.maximum(jnp.linalg.norm(xy, axis=-1), self.min_dist_m)
+        return pathloss_gain(r)
+
     def build(self, key=None, *, gains=None, p_tx=None) -> Fleet:
         """Materialize the padded ``Fleet``.
 
         Link gains come from ``gains`` (explicit per-device array) or from
-        device positions sampled uniformly in the ``area_m`` square with
-        ``key`` (the §VI-A scenario; distance floored at ``min_dist_m``).
-        ``p_tx`` optionally overrides the per-group transmit powers with a
+        device positions sampled with ``key`` (``sample_gains``). ``p_tx``
+        optionally overrides the per-group transmit powers with a
         per-device array.
         """
         n, mp = self.num_devices, self.max_points
@@ -169,10 +185,7 @@ class FleetSpec:
             if key is None:
                 raise ValueError("FleetSpec.build needs a PRNG key (to place "
                                  "devices) or explicit link gains")
-            xy = jax.random.uniform(key, (n, 2), jnp.float64,
-                                    -self.area_m / 2, self.area_m / 2)
-            r = jnp.maximum(jnp.linalg.norm(xy, axis=-1), self.min_dist_m)
-            gains = pathloss_gain(r)
+            gains = self.sample_gains(key)
         else:
             gains = _f64(gains)
             if gains.shape != (n,):

@@ -50,12 +50,14 @@ from repro.core.blocks import Fleet
 from repro.core.pccp import pccp_partition
 from repro.core.resource import (
     _EDGE_CAP_RTOL,
+    _LOG_PRICE_HI0,
     _LOG_PRICE_LO,
     Allocation,
     _device_best_b_at,
     _device_invariants,
     _expand_log_bracket,
     allocate,
+    allocate_with_bracket,
     select_point,
 )
 from repro.solvers.scalar import bisect
@@ -184,8 +186,9 @@ def available_policies() -> tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
-def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
-    """Per-(device, point) energy/time/variance tables at fixed (b, f).
+def _point_tables(fleet: Fleet, b, f, channel_cv: float = 0.0):
+    """Per-(device, point) energy/time/variance tables at fixed ``(b, f)``
+    (the per-device allocation vectors — pass ``alloc.b, alloc.f``).
 
     For ragged fleets the padded points are masked here — the one place
     every partition step (exact enumeration AND the PCCP barrier) reads
@@ -194,8 +197,8 @@ def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
     is a numerical no-op (pure selects).
     """
     c, plat, link = fleet.chain, fleet.platform, fleet.link
-    f = alloc.f[:, None]
-    b = alloc.b[:, None]
+    f = f[:, None]
+    b = b[:, None]
     e_loc = energy.expected_local_energy(plat.kappa[:, None], c.w_flops, c.g_eff, f)
     t_loc = energy.mean_local_time(c.w_flops, c.g_eff, f)
     t_off = channel.offload_time(c.d_bits, b, link.p_tx[:, None], link.gain[:, None])
@@ -214,15 +217,17 @@ def _point_tables(fleet: Fleet, alloc: Allocation, channel_cv: float = 0.0):
     return e_table, t_table, var_table
 
 
-def policy_point_tables(fleet: Fleet, alloc: Allocation, policy: Policy,
+def policy_point_tables(fleet: Fleet, b, f, policy: Policy,
                         channel_cv: float = 0.0):
     """``_point_tables`` with the policy's worst-case time inflation
     applied (mean + ub_k·std, variance dropped — §VI baseline). The ONE
     implementation of the policy-conditioned tables: the alternation, the
-    straight-line reference port and the phase-breakdown bench all read
-    their partition subproblem from here, so they cannot drift apart.
+    group-sharded decomposition, the straight-line reference port and the
+    phase-breakdown bench all read their partition subproblem from here,
+    so they cannot drift apart. Takes the raw ``(b, f)`` vectors (not an
+    ``Allocation``) so per-group programs can call it on sliced batches.
     """
-    e_table, t_table, var_table = _point_tables(fleet, alloc, channel_cv)
+    e_table, t_table, var_table = _point_tables(fleet, b, f, channel_cv)
     if policy.ub_k > 0.0:  # worst-case inflation: mean + ub_k·std, no variance
         t_table = t_table + policy.ub_k * (
             jnp.sqrt(jnp.maximum(fleet.chain.v_loc, 0.0))
@@ -256,8 +261,11 @@ def _exact_partition(e_table, t_table, var_table, sigma, deadline):
     return m_sel, jnp.take_along_axis(feas, m_sel[:, None], -1)[:, 0]
 
 
-def _clearing_price(occ_at, edge_cap):
-    """Smallest price μ ≥ 0 with ``occ_at(μ) ≤ edge_cap``.
+def _clearing_price(occ_at, edge_cap, prior_log_hi=None):
+    """Smallest price μ ≥ 0 with ``occ_at(μ) ≤ edge_cap``; returns
+    ``(μ, log_hi)`` where ``log_hi`` is the expanded bracket top (for
+    warm-starting the next clearing — value-identical, see
+    ``resource._expand_log_bracket``).
 
     ``occ_at`` must be a non-increasing step function of μ (a priced
     argmin's selected occupancy). The search is a log-space bisection
@@ -271,14 +279,27 @@ def _clearing_price(occ_at, edge_cap):
     def occ_excess(log_mu):
         return occ_at(10.0**log_mu) - edge_cap
 
-    log_hi, _ = _expand_log_bracket(occ_excess)
+    log_hi, _ = _expand_log_bracket(occ_excess, hi_start=prior_log_hi)
     log_mu = bisect(occ_excess, _LOG_PRICE_LO, log_hi, iters=60, endpoint="hi")
-    return jnp.where(need, 10.0**log_mu * _MU_SAFETY, 0.0)
+    return jnp.where(need, 10.0**log_mu * _MU_SAFETY, 0.0), log_hi
+
+
+def _edge_occ_prep(t_table, var_table, sigma, deadline):
+    """μ-invariant pieces of the priced partition argmin: per-point
+    feasibility, any-feasible flags, least-bad fallback points. Split out
+    so the group-sharded path can hoist them out of the μ bisection."""
+    margin = (t_table + sigma[:, None] * jnp.sqrt(jnp.maximum(var_table, 0.0))
+              - deadline[:, None])
+    feas = margin <= 1e-9
+    any_feas = jnp.any(feas, axis=-1)
+    m_least_bad = jnp.argmin(margin, axis=-1)
+    return feas, any_feas, m_least_bad
 
 
 def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
-                         occ_table, edge_cap):
-    """Market-clearing price μ of the shared-edge capacity at fixed (b, f).
+                         occ_table, edge_cap, prior_log_hi=None):
+    """Market-clearing price μ of the shared-edge capacity at fixed (b, f)
+    — returns ``(μ, log_hi)`` like ``_clearing_price``.
 
     The partition subproblem decouples per device at a given μ (each
     device argmins its priced table ``e + μ·occ`` over feasible points),
@@ -286,18 +307,15 @@ def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
     function of μ — priced by ``_clearing_price`` over the *tables*
     (no golden sections: ~60 cheap argmins).
     """
-    margin = (t_table + sigma[:, None] * jnp.sqrt(jnp.maximum(var_table, 0.0))
-              - deadline[:, None])
-    feas = margin <= 1e-9
-    any_feas = jnp.any(feas, axis=-1)
-    m_least_bad = jnp.argmin(margin, axis=-1)
+    feas, any_feas, m_least_bad = _edge_occ_prep(t_table, var_table, sigma,
+                                                 deadline)
 
     def occ_at(mu):
         cost = jnp.where(feas, e_table + mu * occ_table, jnp.inf)
         m = jnp.where(any_feas, jnp.argmin(cost, axis=-1), m_least_bad)
         return jnp.sum(jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0])
 
-    return _clearing_price(occ_at, edge_cap)
+    return _clearing_price(occ_at, edge_cap, prior_log_hi=prior_log_hi)
 
 
 def exact_partition_step(m, e_table, t_table, var_table, sigma, deadline,
@@ -392,14 +410,17 @@ def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
     sigma = ccp.SIGMA_FNS[sig_model](eps)
     occ_table = fleet.chain.t_vm  # (N, M+1) edge occupancy per point
 
-    def step(m, _):
-        alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k,
-                         channel_cv, edge_capacity_s=edge_cap)
+    def step(carry, _):
+        m, lam_hi, mu_hi = carry
+        alloc, lam_hi = allocate_with_bracket(
+            fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+            edge_capacity_s=edge_cap, prior_log_hi=lam_hi)
         e_table, t_table, var_table = policy_point_tables(
-            fleet, alloc, policy, channel_cv)
+            fleet, alloc.b, alloc.f, policy, channel_cv)
         if policy.edge_aware:
-            mu = _edge_clearing_price(e_table, t_table, var_table, sigma,
-                                      deadline, occ_table, edge_cap)
+            mu, mu_hi = _edge_clearing_price(e_table, t_table, var_table,
+                                             sigma, deadline, occ_table,
+                                             edge_cap, prior_log_hi=mu_hi)
         else:
             mu = jnp.asarray(0.0, jnp.float64)
         m_new, feas, pc = policy.partition(
@@ -407,15 +428,18 @@ def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
             pccp_iters, solver, pccp_gated)
         # the trace records true energy, not the μ-priced surrogate
         obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
-        return m_new, (obj, pc, feas, mu)
+        return (m_new, lam_hi, mu_hi), (obj, pc, feas, mu)
 
     m = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (n,))
-    m, (traces, pccp_trace, feas_seq, mu_seq) = jax.lax.scan(
-        step, m, None, length=outer_iters)
+    hi0 = jnp.asarray(_LOG_PRICE_HI0, jnp.float64)
+    carry, (traces, pccp_trace, feas_seq, mu_seq) = jax.lax.scan(
+        step, (m, hi0, hi0), None, length=outer_iters)
+    m, lam_hi, _ = carry
     feasible = feas_seq[-1]
 
-    alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
-                     edge_capacity_s=edge_cap, edge_price=mu_seq[-1])
+    alloc, _ = allocate_with_bracket(
+        fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+        edge_capacity_s=edge_cap, edge_price=mu_seq[-1], prior_log_hi=lam_hi)
     sel = select_point(fleet, m)
     t_mean = (
         energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
@@ -537,6 +561,63 @@ def plan(
     return Planner(cfg).plan(fleet, Scenario(deadline, eps, B), init_m=init_m)
 
 
+def _optimal_prep(fleet: Fleet, deadline, sigma, B):
+    """λ-invariant tables of the optimal joint search: per-(device, point)
+    deadline budgets and the feasibility bracket of ``_device_invariants``.
+    Shared by ``plan_optimal`` and the per-group programs of
+    ``core.decompose`` (which runs the same search at native group width)."""
+    c, plat, link = fleet.chain, fleet.platform, fleet.link
+    budget_all = (
+        deadline[:, None]
+        - c.t_vm
+        - sigma[:, None] * jnp.sqrt(jnp.maximum(c.v_loc + c.v_vm, 0.0))
+    )  # (N, M+1)
+    if fleet.valid is not None:  # ragged fleet: padded points are never
+        # feasible (negative budget ⇒ feas=False ⇒ cost=∞) nor the
+        # least-bad fallback (argmax over budgets)
+        budget_all = jnp.where(fleet.valid, budget_all, -MASK_TIME_S)
+    inv_points = jax.vmap(
+        lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B),
+        in_axes=(0, 0, 0, 0, None, None, None),
+    )
+    inv_devices = jax.vmap(inv_points, in_axes=(0, 0, 0, 0, 0, 0, 0))
+    b_lo_all, feas0_all = inv_devices(
+        budget_all, c.d_bits, c.w_flops, c.g_eff, plat.f_max, link.p_tx, link.gain
+    )  # (N, M+1) each
+    return budget_all, b_lo_all, feas0_all
+
+
+def _optimal_point_solve(fleet: Fleet, budget_all, b_lo_all, feas0_all, lam, B):
+    """Solve the 1-D convex bandwidth problem for every (device, point) at
+    price λ → ``(cost, b, f, e, feas)`` tables, cost ∞ on infeasible points."""
+    c, plat, link = fleet.chain, fleet.platform, fleet.link
+
+    def per_point(lam, bud, d, w, g, k, fmin, fmax, p, h, blo, fe):
+        b, f, feas = _device_best_b_at(lam, bud, d, w, g, k, fmin, fmax, p, h, B, blo, fe)
+        e = energy.expected_local_energy(k, w, g, f) + channel.offload_energy(d, b, p, h)
+        cost = jnp.where(feas, e + lam * b, jnp.inf)
+        return cost, b, f, e, feas
+
+    vm_points = jax.vmap(
+        per_point, in_axes=(None, 0, 0, 0, 0, None, None, None, None, None, 0, 0))
+    vm_devices = jax.vmap(vm_points, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+    return vm_devices(
+        lam, budget_all, c.d_bits, c.w_flops, c.g_eff,
+        plat.kappa, plat.f_min, plat.f_max, link.p_tx, link.gain,
+        b_lo_all, feas0_all,
+    )
+
+
+def _optimal_select(cost, feas, budget_all, occ_all, mu):
+    """Per-device argmin of the (λ, μ)-priced point scores (cost already ∞
+    on infeasible points; fallback = largest-budget point)."""
+    priced = cost + mu * occ_all
+    any_feas = jnp.any(feas, axis=-1)
+    m_sel = jnp.where(any_feas, jnp.argmin(priced, -1),
+                      jnp.argmax(budget_all, -1))
+    return m_sel.astype(jnp.int32), any_feas
+
+
 def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
                  edge_capacity_s=None) -> Plan:
     """§VI "Optimal policy": joint exact search over (m, b, f).
@@ -571,42 +652,10 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
     sigma = ccp.SIGMA_FNS[sigma_model](eps)
     occ_all = c.t_vm  # (N, M+1) shared-edge occupancy of each point
 
-    budget_all = (
-        deadline[:, None]
-        - c.t_vm
-        - sigma[:, None] * jnp.sqrt(jnp.maximum(c.v_loc + c.v_vm, 0.0))
-    )  # (N, M+1)
-    if fleet.valid is not None:  # ragged fleet: padded points are never
-        # feasible (negative budget ⇒ feas=False ⇒ cost=∞) nor the
-        # least-bad fallback (argmax over budgets)
-        budget_all = jnp.where(fleet.valid, budget_all, -MASK_TIME_S)
-
-    inv_points = jax.vmap(
-        lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B),
-        in_axes=(0, 0, 0, 0, None, None, None),
-    )
-    inv_devices = jax.vmap(inv_points, in_axes=(0, 0, 0, 0, 0, 0, 0))
-    b_lo_all, feas0_all = inv_devices(
-        budget_all, c.d_bits, c.w_flops, c.g_eff, plat.f_max, link.p_tx, link.gain
-    )  # (N, M+1) each
-
-    def per_point(lam, bud, d, w, g, k, fmin, fmax, p, h, blo, fe):
-        b, f, feas = _device_best_b_at(lam, bud, d, w, g, k, fmin, fmax, p, h, B, blo, fe)
-        e = energy.expected_local_energy(k, w, g, f) + channel.offload_energy(d, b, p, h)
-        cost = jnp.where(feas, e + lam * b, jnp.inf)
-        return cost, b, f, e, feas
-
-    vm_points = jax.vmap(
-        per_point, in_axes=(None, 0, 0, 0, 0, None, None, None, None, None, 0, 0))
-    vm_devices = jax.vmap(vm_points, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+    budget_all, b_lo_all, feas0_all = _optimal_prep(fleet, deadline, sigma, B)
 
     def select(cost, feas, mu):
-        """Per-device argmin of the (λ, μ)-priced point scores."""
-        priced = cost + mu * occ_all  # cost is already ∞ on infeasible points
-        any_feas = jnp.any(feas, axis=-1)
-        m_sel = jnp.where(any_feas, jnp.argmin(priced, -1),
-                          jnp.argmax(budget_all, -1))
-        return m_sel.astype(jnp.int32), any_feas
+        return _optimal_select(cost, feas, budget_all, occ_all, mu)
 
     def occ_of(m_sel):
         return jnp.sum(jnp.take_along_axis(occ_all, m_sel[:, None], -1)[:, 0])
@@ -616,14 +665,11 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
         ``_clearing_price`` search over the point tables (no golden
         sections re-run; the per-point (b, f) depend on λ only)."""
         return _clearing_price(
-            lambda mu: occ_of(select(cost, feas, mu)[0]), edge_cap)
+            lambda mu: occ_of(select(cost, feas, mu)[0]), edge_cap)[0]
 
     def solve_at(lam):
-        cost, b, f, e, feas = vm_devices(
-            lam, budget_all, c.d_bits, c.w_flops, c.g_eff,
-            plat.kappa, plat.f_min, plat.f_max, link.p_tx, link.gain,
-            b_lo_all, feas0_all,
-        )
+        cost, b, f, e, feas = _optimal_point_solve(
+            fleet, budget_all, b_lo_all, feas0_all, lam, B)
         mu = mu_star(cost, feas)
         m_sel, any_feas = select(cost, feas, mu)
         pick = lambda a: jnp.take_along_axis(a, m_sel[:, None], -1)[:, 0]

@@ -98,7 +98,7 @@ def plan_reference(
     for _ in range(outer_iters):
         alloc = allocate(fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv)
         e_table, t_table, var_table = policy_point_tables(
-            fleet, alloc, pol, channel_cv)
+            fleet, alloc.b, alloc.f, pol, channel_cv)
         if policy == "robust":
             x_init = jax.nn.one_hot(m, m1, dtype=jnp.float64)
             pccp_kw = {} if pccp_schedule is None else {"schedule": pccp_schedule}

@@ -57,14 +57,52 @@ _LOG_PRICE_STEP = 4.0
 _EDGE_CAP_RTOL = 1e-9
 
 
-def _expand_log_bracket(excess_fn):
+def _expand_log_bracket(excess_fn, hi_start=None):
     """Adaptively raise the log-price bracket top until the excess changes
     sign. Returns ``(hi, f_hi)``; ``f_hi > 0`` after expansion means even
     the max price cannot clear the constraint (⇒ infeasible). The common
     case (``excess(HI0) ≤ 0``) costs one extra evaluation and leaves the
     seed bracket — and therefore the bisection trajectory — unchanged.
+
+    ``hi_start`` (traced scalar, optional) warm-starts the search from a
+    prior bracket top — e.g. the previous Algorithm-2 step's result. It is
+    snapped to the expansion grid ``HI0 + k·STEP`` (the only values a cold
+    expansion can produce; all grid points are exact in float64), then
+    *contracted* while the next-lower grid point still clears and expanded
+    as usual. Because the excess is monotone non-increasing in the price,
+    both directions terminate at the same grid point a cold expansion
+    finds, so the warm path is **value-identical** to cold-start — it just
+    spends its evaluations near the answer instead of walking up from HI0.
     """
     hi0 = jnp.asarray(_LOG_PRICE_HI0, jnp.float64)
+
+    if hi_start is None:
+        start, f_start = hi0, excess_fn(hi0)
+    else:
+        k = jnp.round((jnp.asarray(hi_start, jnp.float64) - hi0)
+                      / _LOG_PRICE_STEP)
+        k_max = (_LOG_PRICE_HI_MAX - _LOG_PRICE_HI0) // _LOG_PRICE_STEP
+        start = hi0 + jnp.clip(k, 0.0, k_max) * _LOG_PRICE_STEP
+        f_start = excess_fn(start)
+
+        # Contract: while the grid point one step down still clears
+        # (excess ≤ 0), move down. Carries (hi, f_hi, f_dn) where f_dn is
+        # the excess one step below hi (a sentinel +1 at the grid floor).
+        def probe_down(hi):
+            return jnp.where(hi > hi0 + 1e-9, excess_fn(hi - _LOG_PRICE_STEP),
+                             1.0)
+
+        def c_cond(state):
+            hi, _, f_dn = state
+            return (hi > hi0 + 1e-9) & (f_dn <= 0.0)
+
+        def c_body(state):
+            hi, _, f_dn = state
+            hi = hi - _LOG_PRICE_STEP
+            return hi, f_dn, probe_down(hi)
+
+        start, f_start, _ = jax.lax.while_loop(
+            c_cond, c_body, (start, f_start, probe_down(start)))
 
     def cond(state):
         hi, f_hi = state
@@ -75,7 +113,7 @@ def _expand_log_bracket(excess_fn):
         hi = hi + _LOG_PRICE_STEP
         return hi, excess_fn(hi)
 
-    return jax.lax.while_loop(cond, body, (hi0, excess_fn(hi0)))
+    return jax.lax.while_loop(cond, body, (start, f_start))
 
 
 class Selected(NamedTuple):
@@ -210,6 +248,142 @@ def _device_best_b_at(lam, budget, d, w, g, kappa, f_min, f_max, p_tx, gain, B,
     return b_star, f_star, feasible
 
 
+class AllocPrep(NamedTuple):
+    """λ-invariant per-device state of the dual inner problem — everything
+    downstream of the partition gather that does not depend on the price.
+
+    Self-contained on purpose (platform/link columns ride along): the
+    per-λ solve and the finalize step read *only* this record, so the
+    group-sharded path (``core.decompose``) can concatenate per-group
+    preps into fleet order and run the identical global finalize without
+    ever materializing a cross-group padded ``Fleet``.
+    """
+
+    sel: Selected  # (N,) chain columns at the partition point
+    budget: jnp.ndarray  # (N,) deadline budget D'
+    sigma: jnp.ndarray  # (N,) σ(ε) of the ambiguity model
+    v_base: jnp.ndarray  # (N,) inference-time variance at the point
+    b_lo: jnp.ndarray  # (N,) feasibility floor on b
+    feas0: jnp.ndarray  # (N,) λ-invariant feasibility
+    kappa: jnp.ndarray  # (N,) platform/link columns
+    f_min: jnp.ndarray
+    f_max: jnp.ndarray
+    p_tx: jnp.ndarray
+    gain: jnp.ndarray
+
+
+def _alloc_prep(fleet: Fleet, m_sel, deadline, eps, B,
+                sigma_model: str = "cantelli", ub_k: float = 0.0,
+                channel_cv: float = 0.0) -> AllocPrep:
+    """λ-invariant work (point gather, deadline budget, b_feas bisection,
+    feasibility flags) — once per allocation, not once per dual-bisection
+    step."""
+    del channel_cv  # prep is channel-model independent (budget_eff is per-λ)
+    sel = select_point(fleet, m_sel)
+    budget = deadline_budget(sel, deadline, eps, sigma_model, ub_k)
+    sigma = ccp.SIGMA_FNS[sigma_model](jnp.broadcast_to(
+        jnp.asarray(eps, jnp.float64), (fleet.num_devices,)))
+    v_base = jnp.maximum(sel.v_loc + sel.v_vm, 0.0)
+    plat, link = fleet.platform, fleet.link
+    b_lo, feas0 = jax.vmap(
+        lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B)
+    )(budget, sel.d_bits, sel.w_flops, sel.g_eff, plat.f_max, link.p_tx, link.gain)
+    return AllocPrep(sel=sel, budget=budget, sigma=sigma, v_base=v_base,
+                     b_lo=b_lo, feas0=feas0, kappa=plat.kappa,
+                     f_min=plat.f_min, f_max=plat.f_max, p_tx=link.p_tx,
+                     gain=link.gain)
+
+
+def _alloc_solve_at(prep: AllocPrep, B, lam, channel_cv: float = 0.0):
+    """Per-device optimal ``(b, f, feasible)`` at bandwidth price λ."""
+    per_device = jax.vmap(
+        lambda lam_, bud, d, w, g, k, fmin, fmax, p, h, blo, fe, sg, vb: _device_best_b_at(
+            lam_, bud, d, w, g, k, fmin, fmax, p, h, B, blo, fe,
+            sigma=sg, v_base=vb, channel_cv=channel_cv,
+        ),
+        in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
+    )
+    sel = prep.sel
+    return per_device(
+        lam,
+        prep.budget,
+        sel.d_bits,
+        sel.w_flops,
+        sel.g_eff,
+        prep.kappa,
+        prep.f_min,
+        prep.f_max,
+        prep.p_tx,
+        prep.gain,
+        prep.b_lo,
+        prep.feas0,
+        prep.sigma,
+        prep.v_base,
+    )
+
+
+def _alloc_finalize(prep: AllocPrep, b, f, feas, B, lam, need_price,
+                    channel_cv: float = 0.0, edge_capacity_s=None,
+                    edge_price=None) -> Allocation:
+    """Global post-solve: floor-respecting rescale to Σb ≤ B, deadline
+    recheck, edge-capacity check, energies. Shared verbatim by the
+    monolithic ``allocate`` and the group-sharded path (which calls it on
+    fleet-order concatenations of per-group solves)."""
+    sel = prep.sel
+    # If the price was active, rescale residual slack to exactly meet B
+    # (bisection leaves O(1e-14 B) slack; harmless but keep Σb ≤ B exact).
+    # The rescale must not push a device below its λ-invariant feasibility
+    # floor b_lo: clamp to the floor and redistribute the shortfall to the
+    # unclamped devices (the final _deadline_ok recheck stays the
+    # authority on ``feasible``).
+    total = jnp.sum(b)
+    b = jnp.where(need_price & (total > B),
+                  _rescale_with_floor(b, prep.b_lo, B), b)
+    # The rescale shrinks b, which lengthens t_off — recheck the deadline
+    # at the final (b, f) so ``feasible`` reflects what is returned.
+    feas = feas & _deadline_ok(
+        b, f, sel, prep.budget, prep.p_tx, prep.gain, prep.sigma,
+        prep.v_base, channel_cv)
+
+    # Shared-edge capacity: Σ occupancy at the (fixed) selected points.
+    if edge_capacity_s is not None:
+        cap = jnp.asarray(edge_capacity_s, jnp.float64)
+        feas = feas & (jnp.sum(sel.t_vm) <= cap * (1.0 + _EDGE_CAP_RTOL))
+    mu = jnp.asarray(0.0 if edge_price is None else edge_price, jnp.float64)
+
+    e_loc = energy.expected_local_energy(prep.kappa, sel.w_flops, sel.g_eff, f)
+    e_off = channel.offload_energy(sel.d_bits, b, prep.p_tx, prep.gain)
+    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas,
+                      lam=lam, mu=mu)
+
+
+def _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
+                   channel_cv, edge_capacity_s, edge_price, prior_log_hi):
+    prep = _alloc_prep(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
+                       channel_cv)
+
+    def solve_at(lam):
+        return _alloc_solve_at(prep, B, lam, channel_cv)
+
+    b0, _, _ = solve_at(jnp.asarray(0.0, jnp.float64))
+    need_price = jnp.sum(b0) > B
+
+    def excess(log_lam):
+        b, _, _ = solve_at(10.0**log_lam)
+        return jnp.sum(b) - B
+
+    # Expand the bracket top until the excess changes sign: the seed's
+    # fixed [1e-16, 1e2] bracket silently pinned λ at 100 on bandwidth-
+    # starved scenarios and let the rescale mask the unmet budget.
+    log_hi, _ = _expand_log_bracket(excess, hi_start=prior_log_hi)
+    log_lam = bisect(excess, _LOG_PRICE_LO, log_hi, iters=60)
+    lam = jnp.where(need_price, 10.0**log_lam, 0.0)
+    b, f, feas = solve_at(lam)
+    alloc = _alloc_finalize(prep, b, f, feas, B, lam, need_price, channel_cv,
+                            edge_capacity_s, edge_price)
+    return alloc, log_hi
+
+
 @partial(jax.jit, static_argnames=("sigma_model", "channel_cv"))
 def allocate(
     fleet: Fleet,
@@ -222,6 +396,7 @@ def allocate(
     channel_cv: float = 0.0,
     edge_capacity_s=None,
     edge_price=None,
+    prior_log_hi=None,
 ) -> Allocation:
     """Solve problem (23) by dual decomposition over Σ b_n ≤ B.
 
@@ -234,84 +409,40 @@ def allocate(
     constants, so there is nothing to optimize here — the edge price μ
     that shaped the partition decision is passed in as ``edge_price``
     and recorded on the returned :class:`Allocation` next to λ.
+
+    ``prior_log_hi`` (traced scalar, optional) warm-starts the λ-bracket
+    expansion from a prior solve's bracket top — value-identical to a
+    cold start (see ``_expand_log_bracket``). Use ``allocate_with_bracket``
+    to also get the bracket top back for threading.
     """
-    sel = select_point(fleet, m_sel)
-    budget = deadline_budget(sel, deadline, eps, sigma_model, ub_k)
-    sigma = ccp.SIGMA_FNS[sigma_model](jnp.broadcast_to(
-        jnp.asarray(eps, jnp.float64), (fleet.num_devices,)))
-    v_base = jnp.maximum(sel.v_loc + sel.v_vm, 0.0)
-    plat, link = fleet.platform, fleet.link
+    return _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
+                          channel_cv, edge_capacity_s, edge_price,
+                          prior_log_hi)[0]
 
-    # λ-invariant work (b_feas bisection, feasibility flags) — once, not
-    # once per dual-bisection step.
-    b_lo, feas0 = jax.vmap(
-        lambda bud, d, w, g, fmax, p, h: _device_invariants(bud, d, w, g, fmax, p, h, B)
-    )(budget, sel.d_bits, sel.w_flops, sel.g_eff, plat.f_max, link.p_tx, link.gain)
 
-    per_device = jax.vmap(
-        lambda lam, bud, d, w, g, k, fmin, fmax, p, h, blo, fe, sg, vb: _device_best_b_at(
-            lam, bud, d, w, g, k, fmin, fmax, p, h, B, blo, fe,
-            sigma=sg, v_base=vb, channel_cv=channel_cv,
-        ),
-        in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0),
-    )
-
-    def solve_at(lam):
-        return per_device(
-            lam,
-            budget,
-            sel.d_bits,
-            sel.w_flops,
-            sel.g_eff,
-            plat.kappa,
-            plat.f_min,
-            plat.f_max,
-            link.p_tx,
-            link.gain,
-            b_lo,
-            feas0,
-            sigma,
-            v_base,
-        )
-
-    b0, _, _ = solve_at(jnp.asarray(0.0, jnp.float64))
-    need_price = jnp.sum(b0) > B
-
-    def excess(log_lam):
-        b, _, _ = solve_at(10.0**log_lam)
-        return jnp.sum(b) - B
-
-    # Expand the bracket top until the excess changes sign: the seed's
-    # fixed [1e-16, 1e2] bracket silently pinned λ at 100 on bandwidth-
-    # starved scenarios and let the rescale mask the unmet budget.
-    log_hi, _ = _expand_log_bracket(excess)
-    log_lam = bisect(excess, _LOG_PRICE_LO, log_hi, iters=60)
-    lam = jnp.where(need_price, 10.0**log_lam, 0.0)
-    b, f, feas = solve_at(lam)
-    # If the price was active, rescale residual slack to exactly meet B
-    # (bisection leaves O(1e-14 B) slack; harmless but keep Σb ≤ B exact).
-    # The rescale must not push a device below its λ-invariant feasibility
-    # floor b_lo: clamp to the floor and redistribute the shortfall to the
-    # unclamped devices (the final _deadline_ok recheck stays the
-    # authority on ``feasible``).
-    total = jnp.sum(b)
-    b = jnp.where(need_price & (total > B),
-                  _rescale_with_floor(b, b_lo, B), b)
-    # The rescale shrinks b, which lengthens t_off — recheck the deadline
-    # at the final (b, f) so ``feasible`` reflects what is returned.
-    feas = feas & _deadline_ok(
-        b, f, sel, budget, link.p_tx, link.gain, sigma, v_base, channel_cv)
-
-    # Shared-edge capacity: Σ occupancy at the (fixed) selected points.
-    if edge_capacity_s is not None:
-        cap = jnp.asarray(edge_capacity_s, jnp.float64)
-        feas = feas & (jnp.sum(sel.t_vm) <= cap * (1.0 + _EDGE_CAP_RTOL))
-    mu = jnp.asarray(0.0 if edge_price is None else edge_price, jnp.float64)
-
-    e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
-    e_off = channel.offload_energy(sel.d_bits, b, link.p_tx, link.gain)
-    return Allocation(b=b, f=f, e_loc=e_loc, e_off=e_off, feasible=feas,
-                      lam=lam, mu=mu)
+@partial(jax.jit, static_argnames=("sigma_model", "channel_cv"))
+def allocate_with_bracket(
+    fleet: Fleet,
+    m_sel: jnp.ndarray,
+    deadline: jnp.ndarray,
+    eps: jnp.ndarray,
+    B: float,
+    sigma_model: str = "cantelli",
+    ub_k: float = 0.0,
+    channel_cv: float = 0.0,
+    edge_capacity_s=None,
+    edge_price=None,
+    prior_log_hi=None,
+):
+    """``allocate`` that also returns the expanded λ-bracket top (log10),
+    for threading across repeated solves (the Algorithm-2 alternation
+    carries it through its scan so step k+1 starts at step k's bracket).
+    The bracket is returned *next to* the :class:`Allocation` — not on it —
+    because ``Allocation``'s flattening is a pinned pytree contract
+    (``analysis.contracts.ALLOCATION_LEAVES``)."""
+    return _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
+                          channel_cv, edge_capacity_s, edge_price,
+                          prior_log_hi)
 
 
 def _rescale_with_floor(b, b_lo, B):

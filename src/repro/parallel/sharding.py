@@ -215,6 +215,25 @@ def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def planner_mesh(devices=None):
+    """1-D ``("devices",)`` mesh for the group-sharded planner
+    (``core.decompose``): fleet *lane* axes — per-device chains, gains,
+    allocation vectors — shard across it, scalar prices replicate.
+
+    Distinct from the model-parameter meshes above: the planner's data
+    parallelism is over *fleet devices* (rows of the per-group tables),
+    not over model weights, so it gets its own axis name and no
+    fsdp/model structure. On a single-device host this is a size-1 mesh
+    and ``shard_map`` degenerates to an identity wrapper — same trace,
+    same values.
+    """
+    from jax.sharding import Mesh
+
+    if devices is None:
+        devices = jax.local_devices()
+    return Mesh(np.asarray(devices), ("devices",))
+
+
 def batch_sharding(mesh, batch_dim: int, ndim: int) -> NamedSharding:
     fs = fsdp_axes(mesh)
     fsdp = fs if len(fs) > 1 else fs[0]

@@ -366,6 +366,24 @@ class MixedTwoTierDeployment(_DeploymentBase):
                     zip(self.populations, self.counts(), strict=True))
                 for _ in range(count)]
 
+    def plan_sharded(self, policy: str = "robust_exact", *, mesh=None, **kw):
+        """Plan the default scenario through the group decomposition
+        (``core.decompose``): one compiled program per population at its
+        native partition-point count, coordinated only through the scalar
+        bandwidth/edge prices — no cross-population padding, so a few
+        huge homogeneous populations plan in O(largest group) memory.
+
+        Gains come from the deployment seed — the same draw
+        ``self.fleet()`` uses — so ``validate(plan, self.fleet())``
+        scores exactly the planned links. Returns ``(plan, spec)``; the
+        padded monolithic fleet is never materialized here.
+        """
+        spec = self.spec()
+        plan = self.planner(policy, **kw).plan_sharded(
+            spec, self.scenario(), key=jax.random.PRNGKey(self.seed),
+            mesh=mesh)
+        return plan, spec
+
 
 def measured_chain(base: BlockChain, decode_stats: Dict[str, float],
                    blocks_scale: Optional[np.ndarray] = None) -> BlockChain:

@@ -131,7 +131,7 @@ def test_all_valid_mask_is_numerical_noop():
 def test_masked_tables_sentinel_values(mixed):
     m0 = jnp.minimum(jnp.full((8,), 9, jnp.int32), mixed.num_points - 1)
     al = allocate(mixed, m0, jnp.full((8,), 0.2), jnp.full((8,), 0.04), B)
-    e, t, v = _point_tables(mixed, al)
+    e, t, v = _point_tables(mixed, al.b, al.f)
     valid = np.asarray(mixed.valid)
     assert (np.asarray(t)[~valid] == MASK_TIME_S).all()
     assert (np.asarray(v)[~valid] == 0.0).all()
@@ -145,7 +145,7 @@ def test_exact_partition_never_selects_padding(mixed):
     eps = jnp.full((8,), 0.04)
     m0 = jnp.minimum(jnp.full((8,), 9, jnp.int32), mixed.num_points - 1)
     al = allocate(mixed, m0, deadline, eps, B)
-    e, t, v = _point_tables(mixed, al)
+    e, t, v = _point_tables(mixed, al.b, al.f)
     sigma = ccp.SIGMA_FNS["cantelli"](eps)
     m_sel, feas = _exact_partition(e, t, v, sigma, deadline)
     m_np, npts = np.asarray(m_sel), np.asarray(mixed.num_points)

@@ -116,3 +116,40 @@ def test_static_deadline_variant_recompiles(fleet):
             jax.block_until_ready(bad_entry(fleet, m_sel, deadline=d))
     assert bad_entry._cache_size() == 3, "one cache entry per deadline value"
     assert c.count > 1, "static deadline must recompile per value"
+
+
+def test_plan_sharded_compiles_once_per_group_shape():
+    """Group-sharded planning (``core.decompose``): the per-group
+    programs compile once per distinct (chain width, lane bucket) shape
+    — the two populations of a mixed fleet are two entries each — and a
+    value-varied repeat (new scenario, new gains) triggers zero XLA
+    backend compiles and grows no program cache."""
+    from repro.configs.paper_tables import mixed_spec
+    from repro.core import decompose
+
+    # pccp_iters=9 is unique to this test: a fresh per-group program set
+    # whose cache growth is exactly attributable to this file
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=2,
+                                    pccp_iters=9))
+    spec = mixed_spec(10)  # 5 alexnet (9 pts) + 5 resnet152 (10 pts)
+    before = decompose.program_cache_sizes()
+    p1 = planner.plan_sharded(spec, Scenario(0.2, 0.04, 30e6),
+                              key=jax.random.PRNGKey(0))
+    jax.block_until_ready(p1.total_energy)
+    after = decompose.program_cache_sizes()
+    # programs whose inputs carry the chain-width axis: one compile per
+    # distinct (M_g, n-bucket) shape — two populations, two entries
+    for name in ("group_prep", "group_partition"):
+        assert after[name] - before.get(name, 0) == 2, \
+            f"{name}: one compile per distinct group shape, not per device"
+    # the λ-probe programs only see the width-free AllocPrep lanes: both
+    # populations share (S, n_bucket) here, so ONE program serves both
+    for name in ("group_bsum", "group_solve"):
+        assert after[name] - before.get(name, 0) == 1, \
+            f"{name}: width-free lane shapes must share one program"
+    with CompileCounter() as c:
+        p2 = planner.plan_sharded(spec, Scenario(0.21, 0.05, 28e6),
+                                  key=jax.random.PRNGKey(1))
+        jax.block_until_ready(p2.total_energy)
+    assert c.count == 0, "value-varied sharded repeat must hit the cache"
+    assert decompose.program_cache_sizes() == after

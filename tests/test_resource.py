@@ -144,3 +144,40 @@ def test_deadline_recheck_flags_shrunken_bandwidth(fleet):
     # the allocator drives (b, f) onto the deadline, so halving b must
     # violate it wherever the constraint was active
     assert not bool(jnp.all(ok_half))
+
+
+def test_bracket_warm_start_value_identical(fleet):
+    """``allocate_with_bracket`` threads the λ-bracket top across repeated
+    solves (the Algorithm-2 alternation and the group-sharded planner's
+    price loop both carry it). Reuse must be value-IDENTICAL to a cold
+    start — not merely close — because the warm expansion snaps to the
+    same log-price grid the cold walk uses and contracts to the same
+    canonical top, whether the prior bracket is far too high, spot-on,
+    or far too low for the new scenario."""
+    from repro.core.resource import allocate_with_bracket
+
+    m = jnp.full((6,), 7, jnp.int32)
+    # a bandwidth-starved scenario whose clearing price sits far up the
+    # grid (λ > 100: beyond the pre-expansion seed bracket)
+    starved, hi_starved = allocate_with_bracket(fleet, m, 2000.0, 0.02, 36.0)
+    assert float(starved.lam) > 100.0
+    cold, hi_cold = allocate_with_bracket(fleet, m, 0.2, 0.02, 10e6)
+    assert float(hi_starved) > float(hi_cold)
+
+    def assert_identical(a, b):
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    # over-wide prior (starved bracket) on the easy scenario: contracts
+    # back to the cold top, bit-identical allocation
+    warm, hi_warm = allocate_with_bracket(fleet, m, 0.2, 0.02, 10e6,
+                                          prior_log_hi=hi_starved)
+    assert float(hi_warm) == float(hi_cold)
+    assert_identical(warm, cold)
+    # under-wide prior (easy bracket) on the starved scenario: re-expands
+    # to the starved top, bit-identical allocation
+    warm2, hi_warm2 = allocate_with_bracket(fleet, m, 2000.0, 0.02, 36.0,
+                                            prior_log_hi=hi_cold)
+    assert float(hi_warm2) == float(hi_starved)
+    assert_identical(warm2, starved)
