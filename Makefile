@@ -32,7 +32,7 @@ analyze:
 # runs this and uploads the artifact per PR. ``--only solver`` alone
 # runs just the solver A/B section (see benchmarks/run.py).
 bench-smoke:
-	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge,faults,devices
+	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge,placement,faults,devices
 
 # Full paper-figure benchmark sweep
 bench:

@@ -23,12 +23,22 @@ Headline ratios in the ``edge`` section of ``BENCH_planner.json``:
 ``coupled_vs_static_energy_ratio`` (< 1: the dual-priced plan dominates
 the static approximation on energy) at ``coupled_minus_static_violation``
 ≤ 0 + MC noise (no robustness given up for it).
+
+The ``placement`` section (DESIGN.md §placement) moves to E=3
+heterogeneous edge nodes on a mixed fleet: the per-node-priced planner
+with the Hybrid allocator vs the round-robin and greedy-load baselines
+(same ε, same capacity vector), judged by planned energy + the per-node
+congestion ground truth + the duality-gap certificate, plus a Cantelli
+``edge_eps`` sweep showing the chance-constrained occupancy rows buy
+monotone capacity headroom.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, timed, update_artifact
@@ -60,7 +70,7 @@ def _dep(**kw):
         device=_DEV, edge=_EDGE, f_max_hz=2.5e9, **kw)
 
 
-def run() -> list[Row]:
+def run_edge() -> list[Row]:
     coupled = _dep(dedicated_vm=False)  # real coupling, C = deadline
     naive = _dep(dedicated_vm=True)  # dedicated-VM assumption
     with warnings.catch_warnings():
@@ -116,3 +126,112 @@ def run() -> list[Row]:
     }
     update_artifact("edge", section)
     return rows
+
+
+# ------------------------------------------------------------- placement
+
+PLACE_N = 8
+PLACE_SC = (0.2, 0.04, 30e6)  # deadline, eps, B — pricing has room to move
+#: per-node shares of the slack plan's occupancy: total 0.35× — tight
+#: enough that assignment quality decides how much pricing (and
+#: therefore energy) each allocator pays, with the scarcest node barely
+#: usable at all
+PLACE_SHARES = (0.2, 0.1, 0.05)
+
+
+def run_placement() -> list[Row]:
+    from repro.configs.paper_tables import mixed_spec
+    from repro.core import Planner, PlannerConfig, Scenario
+    from repro.core.placement import node_loads, plan_duality_gap
+    from repro.core.planner import get_policy
+
+    d, eps, bw = PLACE_SC
+    spec = mixed_spec(PLACE_N)
+    fleet = spec.build(jax.random.PRNGKey(11))
+    deadline_vec = np.full(PLACE_N, d)
+    key = jax.random.PRNGKey(2)
+
+    slack = Planner(PlannerConfig(policy=POLICY, **KW)).plan(
+        fleet, Scenario(d, eps, bw))
+    occ0 = float(select_point(fleet, slack.m_sel).t_vm.sum())
+    caps = jnp.asarray(PLACE_SHARES) * occ0
+    sc = Scenario(d, eps, bw, caps)
+
+    rows: list[Row] = []
+    res = {}
+    for name in ("hybrid", "balanced", "weighted", "round_robin",
+                 "greedy_load"):
+        pol = dataclasses.replace(get_policy(POLICY), assign=name)
+        planner = Planner(PlannerConfig(policy=pol, **KW))
+        p, us = timed(lambda planner=planner: planner.plan(fleet, sc))
+        vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline_vec,
+                              edge_capacity_s=caps, assignment=p.assignment)
+        occ_e = np.asarray(node_loads(select_point(fleet, p.m_sel).t_vm,
+                                      p.assignment, caps.shape[0]))
+        res[name] = {
+            "us": us,
+            "energy_j": float(p.total_energy),
+            "max_violation": float(vr.rate.max()),
+            "planner_feasible": bool(p.feasible.all()),
+            "node_occupancy_s": occ_e.tolist(),
+            "mu": np.asarray(p.alloc.mu).tolist(),
+            "duality_gap_j": float(plan_duality_gap(fleet, p, d, eps, caps)),
+        }
+        rows.append((
+            f"placement_{name}_e{caps.shape[0]}", us,
+            f"E={res[name]['energy_j']:.4f}J;"
+            f"viol={res[name]['max_violation']:.4f};"
+            f"gap={res[name]['duality_gap_j']:.2e}J"))
+
+    # Cantelli chance-constrained occupancy rows: tightening ε_edge buys
+    # monotone per-node headroom (occupancy backs off the capacity by the
+    # σ_e·√(Σ v_vm) margin). The MC sweep drifts the true VM times to 3×
+    # the profiled mean: the mean-row plan books zero headroom and
+    # congests into deadline violations; the Cantelli plans' headroom
+    # absorbs the drift — the violation gap the rows exist to close.
+    from repro.serve.faults import FaultState
+
+    drift = FaultState.identity()._replace(
+        vm_mean_scale=jnp.asarray(3.0), vm_var_scale=jnp.asarray(9.0))
+    cc = {}
+    for edge_eps in (None, 0.2, 0.05):
+        planner = Planner(PlannerConfig(policy=POLICY, edge_eps=edge_eps,
+                                        **KW))
+        p = planner.plan(fleet, sc)
+        mc = lambda faults: float(violation_report(
+            key, fleet, p.m_sel, p.alloc, deadline_vec, edge_capacity_s=caps,
+            assignment=p.assignment, faults=faults).rate.max())
+        occ_e = np.asarray(node_loads(select_point(fleet, p.m_sel).t_vm,
+                                      p.assignment, caps.shape[0]))
+        cc["mean" if edge_eps is None else f"{edge_eps:g}"] = {
+            "energy_j": float(p.total_energy),
+            "max_violation": mc(None),
+            "max_violation_vm_drift_3x": mc(drift),
+            "planner_feasible": bool(p.feasible.all()),
+            "min_headroom_s": float(np.min(np.asarray(caps) - occ_e)),
+        }
+
+    section = {
+        "n_devices": PLACE_N,
+        "policy": POLICY,
+        "config": KW,
+        "scenario": {"deadline_s": d, "eps": eps, "bandwidth_hz": bw},
+        "caps_s": np.asarray(caps).tolist(),
+        "plans": res,
+        "hybrid_vs_round_robin_energy_ratio":
+            res["hybrid"]["energy_j"] / res["round_robin"]["energy_j"],
+        "hybrid_minus_round_robin_violation":
+            res["hybrid"]["max_violation"] - res["round_robin"]["max_violation"],
+        "hybrid_duality_gap_j": res["hybrid"]["duality_gap_j"],
+        "edge_eps_sweep": cc,
+    }
+    update_artifact("placement", section)
+    return rows
+
+
+#: --only-selectable sections (benchmarks/run.py MODULE_SECTIONS)
+SECTIONS = {"edge": run_edge, "placement": run_placement}
+
+
+def run() -> list[Row]:
+    return run_edge() + run_placement()

@@ -30,7 +30,10 @@
 #                         per-group sequential (ratios → BENCH_planner.json)
 #   bench_edge          — shared-edge capacity pricing vs static N-scaling
 #                         vs dedicated-VM (DESIGN.md §edge; energy at
-#                         matched MC violation → BENCH_planner.json)
+#                         matched MC violation → BENCH_planner.json) + the
+#                         E=3 multi-node placement A/B (priced Hybrid vs
+#                         round-robin/greedy baselines + Cantelli ε_edge
+#                         sweep → BENCH_planner.json §placement)
 #   bench_faults        — closed-loop fault drill: guarded vs unguarded
 #                         serving through an injected incident (DESIGN.md
 #                         §robustness; recovery/churn → BENCH_planner.json)
@@ -71,6 +74,7 @@ MODULES = [
 MODULE_SECTIONS = {
     "bench_runtime": ("runtime", "solver"),
     "bench_devices": ("fig12", "devices"),
+    "bench_edge": ("edge", "placement"),
 }
 
 

@@ -23,6 +23,9 @@ TRACED_PARAM_NAMES = frozenset({
     # group-sharded planner operands (core.decompose): fleet-order link
     # gains and the in-trace (log-price, need) lanes of the host loops
     "gains", "log_lam", "log_mu",
+    # multi-edge placement operands (core.placement): device→node
+    # assignment vectors, per-device occupancy and per-node capacities
+    "assignment", "occ", "caps",
 })
 
 # Parameter names that are, by contract, STATIC wherever they appear on
@@ -38,6 +41,9 @@ STATIC_PARAM_NAMES = frozenset({
     # per-function statics on other entry points
     "sigma_model", "dist", "num_samples", "num_iters", "schedule", "gated",
     "endpoint",
+    # placement statics: allocator-strategy selector and the
+    # chance-constraint level (both pick code paths, not values)
+    "strategy", "assign", "edge_eps",
 })
 
 # Shape-derived int properties on the pytree containers (BlockChain /
@@ -60,6 +66,10 @@ ANALYSIS_SURFACE = (
     ("core.decompose", "build_groups"),
     ("core.planner", "plan_health"),
     ("core.planner", "initial_points"),
+    ("core.placement", "assign_devices"),
+    ("core.placement", "node_loads"),
+    ("core.placement", "duality_gap"),
+    ("core.placement", "plan_duality_gap"),
     ("core.resource", "allocate_ipm"),
     ("serve.closedloop", "run_closed_loop"),
     ("serve.guard", "contingency_plans"),
@@ -109,6 +119,7 @@ PLAN_LEAVES = (
     (".pccp_iters", "int32"),
     (".margins", "float64"),
     (".status", "int32"),
+    (".assignment", "int32"),
 )
 
 ALLOCATION_LEAVES = tuple(

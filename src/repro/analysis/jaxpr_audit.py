@@ -390,5 +390,24 @@ def run_audit(n: int = 3) -> Dict[str, Any]:
             "value-varied plan_sharded repeat — a per-group program is "
             "recompiling on scenario/gain values")
 
+    # placement drill: per-node capacity vectors are traced operands of
+    # the same compiled program — a value-varied (E,) capacity repeat
+    # (same E, different node budgets) must trigger zero backend compiles.
+    caps0 = jnp.asarray([0.08, 0.05, 0.03], jnp.float64)
+    planner.plan(fleet, sc._replace(edge_capacity_s=caps0))  # warm
+    with CompileCounter() as cp:
+        shifted = sc._replace(
+            edge_capacity_s=jnp.asarray([0.06, 0.07, 0.02], jnp.float64))
+        jax.block_until_ready(planner.plan(fleet, shifted).total_energy)
+    report["placement_recompile_drill"] = {
+        "ok": cp.count == 0,
+        "backend_compiles_on_value_varied_repeat": cp.count,
+    }
+    if cp.count:
+        report["problems"].append(
+            f"placement_recompile_drill: {cp.count} backend compiles on a "
+            "value-varied per-node capacity repeat — the capacity vector "
+            "or assignment leaked into a static")
+
     report["ok"] = not report["problems"]
     return report

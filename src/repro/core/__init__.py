@@ -31,6 +31,15 @@ from repro.core.batch import plan_at, plan_grid  # noqa: E402,F401
 from repro.core.resource import Allocation, allocate, allocate_ipm  # noqa: E402,F401
 from repro.core.pccp import pccp_partition  # noqa: E402,F401
 from repro.core.montecarlo import violation_report  # noqa: E402,F401
+from repro.core.placement import (  # noqa: E402,F401
+    assign_devices,
+    assign_devices_host,
+    available_assignments,
+    duality_gap,
+    edge_sigma,
+    node_loads,
+    plan_duality_gap,
+)
 
 __all__ = [
     "BlockChain", "Fleet", "Link", "Platform", "broadcast_fleet", "covariance",
@@ -45,4 +54,6 @@ __all__ = [
     "Policy", "register_policy", "get_policy", "available_policies",
     "Allocation", "allocate", "allocate_ipm",
     "pccp_partition", "violation_report",
+    "assign_devices", "assign_devices_host", "available_assignments",
+    "duality_gap", "edge_sigma", "node_loads", "plan_duality_gap",
 ]

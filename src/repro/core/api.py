@@ -35,7 +35,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional, Sequence, Union
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -83,12 +83,20 @@ class Scenario(NamedTuple):
     the paper's §III-B assumption — and normalizes to ∞, under which the
     edge pricing is a numerical no-op. It is a *traced leaf*, so capacity
     sweeps batch through ``plan_many``/``grid`` without recompiling.
+
+    An ``(E,)`` vector of per-node capacities (E ≥ 2) turns the single
+    shared edge into E placement nodes (DESIGN.md §placement): the
+    planner then also picks a device→node assignment and clears one
+    price μ_e per node. A 0 entry marks an absent node (never assigned),
+    which keeps node-count what-ifs on one traced shape; a ``(1,)``
+    vector collapses to the scalar path so E=1 stays leaf-identical to
+    the scalar goldens.
     """
 
     deadline: jnp.ndarray  # s — scalar or (N,)
     eps: jnp.ndarray  # risk level in (0, 1) — scalar or (N,)
     B: jnp.ndarray  # Hz — scalar bandwidth budget
-    edge_capacity_s: Optional[jnp.ndarray] = None  # s — scalar; None → ∞
+    edge_capacity_s: Optional[jnp.ndarray] = None  # s — scalar or (E,); None → ∞
 
     def normalized(self, num_devices: int) -> "Scenario":
         """Broadcast deadline/eps to ``(N,)``, B/edge capacity to scalars."""
@@ -110,15 +118,21 @@ class Scenario(NamedTuple):
                 f"a scalar, got shape {b.shape}")
         cap = f64(jnp.inf if self.edge_capacity_s is None
                   else self.edge_capacity_s)
-        if cap.size != 1:
+        if cap.ndim >= 2:
             raise ValueError(
-                "Scenario.edge_capacity_s is the fleet-wide shared-edge "
-                f"budget and must be a scalar, got shape {cap.shape}")
+                "Scenario.edge_capacity_s must be a scalar (one shared "
+                "edge) or a per-node (E,) capacity vector, got shape "
+                f"{cap.shape}")
+        if cap.size == 1:
+            # E=1 reduction policy (DESIGN.md §placement): a 1-node vector
+            # IS the scalar shared edge — collapse it so E=1 plans stay
+            # leaf-identical to the scalar-path goldens by construction.
+            cap = jnp.reshape(cap, ())
         return Scenario(
             deadline=per_device(self.deadline, "deadline"),
             eps=per_device(self.eps, "eps"),
             B=jnp.reshape(b, ()),
-            edge_capacity_s=jnp.reshape(cap, ()),
+            edge_capacity_s=cap,
         )
 
 
@@ -152,12 +166,16 @@ def stack_scenarios(
 
         cap = f64(jnp.inf if scenarios.edge_capacity_s is None
                   else scenarios.edge_capacity_s)
-        if cap.ndim not in (0, 1) or (cap.ndim == 1 and cap.shape[0] != k):
+        if cap.ndim == 0:
+            cap = jnp.broadcast_to(cap, (k,))
+        elif cap.ndim == 2 and cap.shape[1] == 1:
+            cap = cap[:, 0]  # (K, 1) rows ARE the scalar edge (E=1 policy)
+        if (cap.ndim not in (1, 2) or cap.shape[0] != k):
             raise ValueError(
-                "scenario batch leaf 'edge_capacity_s' must be a scalar or "
-                f"(K,) with K={k}, got shape {cap.shape}")
-        return Scenario(fix(d, "deadline"), fix(e, "eps"), b,
-                        jnp.broadcast_to(cap, (k,)))
+                "scenario batch leaf 'edge_capacity_s' must be a scalar, "
+                f"(K,) of scalar capacities, or (K, E) per-node capacity "
+                f"rows with K={k}, got shape {cap.shape}")
+        return Scenario(fix(d, "deadline"), fix(e, "eps"), b, cap)
     if len(scenarios) == 0:
         raise ValueError("plan_many needs at least one scenario")
     norm = [Scenario(*s).normalized(num_devices) for s in scenarios]
@@ -197,7 +215,14 @@ class PlannerConfig:
     multi_start: bool = True
     init_m: Optional[int] = None
     channel_cv: float = 0.0
-    edge_capacity_s: Optional[float] = None
+    #: scalar shared-edge budget, or a tuple of per-node capacities
+    #: (DESIGN.md §placement) — resolved into the scenario's traced leaf.
+    edge_capacity_s: Optional[Union[float, Tuple[float, ...]]] = None
+    #: Cantelli edge-occupancy risk: with ``edge_eps=ε`` the capacity rows
+    #: tighten to P{Σ t_vm > C_e} ≤ ε (DESIGN.md §placement). A jit cache
+    #: key (it scales a variance term inside the trace); ``None`` keeps
+    #: the mean occupancy row bit-for-bit.
+    edge_eps: Optional[float] = None
     solver: str = "structured"
     pccp_gated: bool = False
     #: solver fail-soft (DESIGN.md §robustness): after ``plan()``, check
@@ -216,8 +241,18 @@ class PlannerConfig:
             raise ValueError("outer_iters must be >= 1")
         if self.pccp_iters < 1:
             raise ValueError("pccp_iters must be >= 1")
-        if self.edge_capacity_s is not None and not self.edge_capacity_s > 0:
+        if isinstance(self.edge_capacity_s, (list, tuple)):
+            caps = tuple(float(c) for c in self.edge_capacity_s)
+            object.__setattr__(self, "edge_capacity_s", caps)
+            if len(caps) == 0 or any(c < 0 for c in caps) \
+                    or not any(c > 0 for c in caps):
+                raise ValueError(
+                    "a per-node edge_capacity_s tuple needs entries >= 0 "
+                    "with at least one node > 0 (0 marks an absent node)")
+        elif self.edge_capacity_s is not None and not self.edge_capacity_s > 0:
             raise ValueError("edge_capacity_s must be positive (or None)")
+        if self.edge_eps is not None and not 0.0 < self.edge_eps < 1.0:
+            raise ValueError("edge_eps must lie in (0, 1) (or None)")
         if self.solver not in SOLVERS:
             raise ValueError(
                 f"solver must be one of {SOLVERS}, got {self.solver!r}")
@@ -228,13 +263,13 @@ class PlannerConfig:
 
 
 _BATCH_STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv",
-                  "multi_start", "solver", "pccp_gated")
+                  "multi_start", "solver", "pccp_gated", "edge_eps")
 
 
 @partial(jax.jit, static_argnames=_BATCH_STATICS)
 def _plan_many_impl(fleet, scenarios: Scenario, m0, *, policy: Policy,
                     outer_iters, pccp_iters, channel_cv, multi_start,
-                    solver, pccp_gated):
+                    solver, pccp_gated, edge_eps=None):
     """K zipped scenarios vmapped over ONE compiled program.
 
     Each scenario is planned exactly as the single-scenario entry would
@@ -245,15 +280,15 @@ def _plan_many_impl(fleet, scenarios: Scenario, m0, *, policy: Policy,
     if policy.solve is not None:
         run = lambda d, e, b, cap: _solve_entry(
             fleet, d, e, b, cap, policy, outer_iters, pccp_iters, channel_cv,
-            solver, pccp_gated)
+            solver, pccp_gated, edge_eps)
     elif multi_start:
         run = lambda d, e, b, cap: _multi_start(
             fleet, d, e, b, cap, m0, policy, outer_iters, pccp_iters,
-            channel_cv, solver, pccp_gated)
+            channel_cv, solver, pccp_gated, edge_eps)
     else:
         run = lambda d, e, b, cap: _alternation(
             fleet, d, e, b, cap, m0, policy, outer_iters, pccp_iters,
-            channel_cv, solver, pccp_gated)
+            channel_cv, solver, pccp_gated, edge_eps)
     return jax.vmap(run)(scenarios.deadline, scenarios.eps, scenarios.B,
                          scenarios.edge_capacity_s)
 
@@ -282,7 +317,8 @@ class Planner:
         return dict(policy=self.policy, outer_iters=int(c.outer_iters),
                     pccp_iters=int(c.pccp_iters),
                     channel_cv=float(c.channel_cv), solver=str(c.solver),
-                    pccp_gated=bool(c.pccp_gated))
+                    pccp_gated=bool(c.pccp_gated),
+                    edge_eps=None if c.edge_eps is None else float(c.edge_eps))
 
     def _starts(self, fleet: Fleet, init_m):
         if init_m is None:
@@ -427,14 +463,33 @@ class Planner:
         ``edge_capacities`` appends a fourth shared-edge-capacity axis
         (DESIGN.md §edge) — left at ``None`` the config default (or ∞)
         applies to every cell and the grid keeps its three axes.
+
+        ``edge_capacities`` may also be a (K, E) array of per-node
+        capacity rows (DESIGN.md §placement): the fourth axis then sweeps
+        placement what-ifs — "add one edge node vs upgrade two" as rows
+        of one compiled sweep (0 marks an absent node, so node-count
+        variants share the traced shape E).
         """
         as_axis = lambda v: jnp.atleast_1d(jnp.asarray(v, jnp.float64))
         axes = [as_axis(deadlines), as_axis(epss), as_axis(Bs)]
+        cap_rows = None
         if edge_capacities is not None:
-            axes.append(as_axis(edge_capacities))
+            caps = jnp.asarray(edge_capacities, jnp.float64)
+            if caps.ndim == 2 and caps.shape[1] == 1:
+                caps = caps[:, 0]  # (K, 1) rows ARE the scalar edge
+            if caps.ndim == 2:
+                cap_rows = caps  # (K, E): sweep rows via a float index axis
+                axes.append(jnp.arange(caps.shape[0], dtype=jnp.float64))
+            else:
+                axes.append(as_axis(caps))
         mesh = jnp.meshgrid(*axes, indexing="ij")
         shape = mesh[0].shape
-        batch = Scenario(*[a.ravel() for a in mesh])
+        leaves = [a.ravel() for a in mesh]
+        if cap_rows is not None:
+            idx = leaves[3].astype(jnp.int32)
+            batch = Scenario(leaves[0], leaves[1], leaves[2], cap_rows[idx])
+        else:
+            batch = Scenario(*leaves)
         plans = self.plan_many(fleet, batch, init_m=init_m)
         return jax.tree_util.tree_map(
             lambda x: x.reshape(shape + x.shape[1:]), plans)

@@ -65,6 +65,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import ccp, channel, energy
 from repro.core.blocks import Fleet
 from repro.core.fleet import FleetSpec
+from repro.core.placement import assign_devices_host
 from repro.core.planner import (
     _MU_SAFETY,
     Plan,
@@ -229,6 +230,8 @@ class GroupPrograms(NamedTuple):
     edge_state: object  # (fleet, b, f, deadline, eps) -> μ-invariant tables
     occ_sum: object  # (occ, state…, w, log_mu, need) -> (S,) Σ w·occ[m*]
     partition: object  # (fleet, m, b, f, log_mu, mu_need, dl, eps, w) -> step
+    occ_sum_node: object  # (occ, mask (S,n), state…, w, log_mu, need) -> (S,)
+    partition_nodes: object  # per-device (S,n) μ variant of ``partition``
 
 
 @lru_cache(maxsize=None)
@@ -341,14 +344,56 @@ def _group_programs(mesh, policy: Policy, pccp_iters: int, solver: str,
 
         return jax.vmap(one)(m, b, f, log_mu, mu_need)
 
+    # ---- placement path (per-node capacity vectors, DESIGN.md §placement):
+    # compiled only when a vector capacity is planned, so the scalar path's
+    # program_cache_sizes pins are untouched ----
+
+    @jax.jit
+    def occ_sum_node(occ, mask, e_t, feas, any_feas, mlb, w, log_mu, need):
+        """One node's occupancy partial: every lane argmins the full priced
+        table at the node's trial μ (exactly ``_node_clearing_prices``) and
+        only the lanes *assigned to the node* count toward the sum."""
+        def one(mk1, e1, fe1, af1, mlb1, lm, nd):
+            mu = jnp.where(nd, 10.0 ** lm, 0.0)  # probes: no safety factor
+            cost = jnp.where(fe1, e1 + mu * occ, jnp.inf)
+            m = jnp.where(af1, jnp.argmin(cost, axis=-1), mlb1)
+            occ_sel = jnp.take_along_axis(occ, m[:, None], -1)[:, 0]
+            return jnp.sum(jnp.where(mk1, w * occ_sel, 0.0))
+
+        return jax.vmap(one)(mask, e_t, feas, any_feas, mlb, log_mu, need)
+
+    @jax.jit
+    def partition_nodes(fleet, m, b, f, log_mu_dev, mu_need_dev, deadline,
+                        eps, w):
+        """``partition`` with a per-device price row: each lane pays its
+        own node's μ_{a_n}·occ in the priced table."""
+        sigma = ccp.SIGMA_FNS[sig_model](eps)
+        occ = fleet.chain.t_vm
+
+        def one(m1, b1, f1, lmd, mnd):
+            mu_dev = jnp.where(mnd, 10.0 ** lmd * _MU_SAFETY, 0.0)
+            e_t, t_t, v_t = policy_point_tables(fleet, b1, f1, policy,
+                                                channel_cv)
+            m_new, feas, iters = policy.partition(
+                m1, e_t + mu_dev[:, None] * occ, t_t, v_t, sigma, deadline,
+                pccp_iters, solver, pccp_gated)
+            obj = jnp.sum(
+                w * jnp.take_along_axis(e_t, m_new[:, None], -1)[:, 0])
+            return m_new, feas, iters, obj
+
+        return jax.vmap(one)(m, b, f, log_mu_dev, mu_need_dev)
+
     for name, fn in (("group_prep", prep), ("group_bsum", bsum),
                      ("group_solve", solve), ("group_edge_state", edge_state),
                      ("group_occ_sum", occ_sum),
-                     ("group_partition", partition)):
+                     ("group_partition", partition),
+                     ("group_occ_sum_node", occ_sum_node),
+                     ("group_partition_nodes", partition_nodes)):
         _register(name, fn)
     return GroupPrograms(prep=prep, bsum=bsum, solve=solve,
                          edge_state=edge_state, occ_sum=occ_sum,
-                         partition=partition)
+                         partition=partition, occ_sum_node=occ_sum_node,
+                         partition_nodes=partition_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -395,8 +440,40 @@ def _global_finish(prep_v, b, f, feas, part_feas, B, log_lam, need, edge_cap,
                          log_mu, mu_need)
 
 
+@partial(jax.jit, static_argnames=("sigma_model", "channel_cv"))
+def _global_finish_nodes(prep_v, b, f, feas, part_feas, B, log_lam, need,
+                         edge_cap, log_mu_node, mu_need_node, assignment,
+                         deadline, eps, sigma_model="cantelli",
+                         channel_cv=0.0):
+    """Per-node-price variant of ``_global_finish`` (DESIGN.md §placement):
+    ``_alloc_finalize`` checks each node's occupancy against its own C_e at
+    the device→node assignment and stamps the (E,) price vector into
+    ``alloc.mu``. ``log_mu_node``/``mu_need_node`` are (S, E),
+    ``assignment`` is (S, N) int32."""
+
+    def one(p, b1, f1, fe1, pf1, ll, nd, lmn, mnn, a1):
+        lam = jnp.where(nd, 10.0 ** ll, 0.0)
+        mu_node = jnp.where(mnn, 10.0 ** lmn * _MU_SAFETY, 0.0)
+        alloc = _alloc_finalize(p, b1, f1, fe1, B, lam, nd, channel_cv,
+                                edge_capacity_s=edge_cap, edge_price=mu_node,
+                                assignment=a1)
+        sel = p.sel
+        t_mean = (energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
+                  + channel.offload_time(sel.d_bits, alloc.b, p.p_tx, p.gain)
+                  + sel.t_vm)
+        margins = ccp.deterministic_deadline_margin(
+            t_mean, sel.v_loc + sel.v_vm, eps, deadline, sigma_model)
+        total = jnp.sum(alloc.energy)
+        return (alloc, total, pf1 & alloc.feasible, margins,
+                _traced_status(alloc, total, margins))
+
+    return jax.vmap(one)(prep_v, b, f, feas, part_feas, log_lam, need,
+                         log_mu_node, mu_need_node, assignment)
+
+
 _register("global_rescale", _global_rescale)
 _register("global_finish", _global_finish)
+_register("global_finish_nodes", _global_finish_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -519,6 +596,42 @@ def _mu_clear(programs, groups, states, cap_host, S, mu_hi):  # analyze: ok(TRC0
     return log_mu, need, hi
 
 
+def _mu_clear_nodes(programs, groups, states, masks, caps_host, S, mu_hi):  # analyze: ok(TRC001,TRC002,TRC003): host-level global price loop by design
+    """Per-node μ clearing at a fixed device→node assignment (DESIGN.md
+    §placement): node e's occupancy sums masked per-group partials
+    (``occ_sum_node``) against its own C_e — E independent replicas of
+    ``_mu_clear`` with per-node warm brackets. ``masks`` is a per-group
+    list of (E, S, n_pad) lane masks; ``mu_hi`` is (E, S). Returns
+    ``(log_mu (E, S), need (E, S), mu_hi)`` — absent (C_e = 0) and
+    unconstrained (C_e = ∞) nodes never clear (occupancy 0 resp. excess
+    −∞ keeps ``need`` False)."""
+    e_count = caps_host.shape[0]
+    log_mu = np.zeros((e_count, S))
+    mu_need = np.zeros((e_count, S), bool)
+    hi_out = np.array(mu_hi, np.float64, copy=True)
+    all_on = np.ones(S, bool)
+    for e in range(e_count):
+        def occ_excess(lm_s, need_s, e=e):
+            ll, nd = jnp.asarray(lm_s, jnp.float64), jnp.asarray(need_s)
+            tot = None
+            for g, st, mk in zip(groups, states, masks, strict=True):
+                part = programs.occ_sum_node(g.fleet.chain.t_vm, mk[e], *st,
+                                             g.w, ll, nd)
+                tot = part if tot is None else tot + part
+            return np.asarray(tot) - caps_host[e]
+
+        need_e = occ_excess(np.zeros(S), np.zeros(S, bool)) > 0.0
+        if not need_e.any():
+            continue
+        fn = lambda x: occ_excess(x, all_on)
+        hi, _ = _host_expand(fn, hi_start=mu_hi[e])
+        log_mu[e] = _host_bisect(fn, np.full(S, _LOG_PRICE_LO), hi, iters=60,
+                                 endpoint="hi")
+        mu_need[e] = need_e
+        hi_out[e] = hi
+    return log_mu, mu_need, hi_out
+
+
 # ---------------------------------------------------------------------------
 # The decomposed Algorithm-2 alternation
 # ---------------------------------------------------------------------------
@@ -538,13 +651,66 @@ def _plan_groups(groups, sc, policy: Policy, outer_iters, m0_groups, S,  # analy
     eps_np = np.asarray(sc.eps)
     B_dev, cap_dev = sc.B, sc.edge_capacity_s
     B_host = float(np.asarray(sc.B))
-    cap_host = float(np.asarray(cap_dev))
-    price_edge = np.isfinite(cap_host) and policy.edge_aware
+    cap_np = np.asarray(cap_dev, np.float64)
+    multi_node = cap_np.ndim == 1  # per-node capacity vector (§placement)
+    if multi_node:
+        caps_host = cap_np
+        e_count = int(caps_host.shape[0])
+        price_edge = policy.edge_aware
+    else:
+        cap_host = float(cap_np)
+        price_edge = np.isfinite(cap_host) and policy.edge_aware
 
     dls = [jnp.asarray(_pad_lanes(deadline_np[g.start:g.stop], g.n_pad))
            for g in groups]
     epss = [jnp.asarray(_pad_lanes(eps_np[g.start:g.stop], g.n_pad))
             for g in groups]
+    t_vm_np = [np.asarray(g.fleet.chain.t_vm) for g in groups]
+
+    def host_assignment(m_gs):
+        """Fleet-order (S, N) device→node map at the current partitions —
+        the host replay of the monolithic per-step ``assign_devices`` (the
+        numpy mirror is pinned bit-identical in ``tests/test_placement``)."""
+        occ_parts = []
+        for g, m_g, tv in zip(groups, m_gs, t_vm_np, strict=True):
+            m_np = np.asarray(m_g)[:, :g.n]  # (S, n) real lanes
+            occ_parts.append(np.take_along_axis(
+                tv[None, :g.n, :], m_np[:, :, None], axis=2)[:, :, 0])
+        occ = np.concatenate(occ_parts, axis=1)  # (S, N)
+        return np.stack([
+            assign_devices_host(occ[s], caps_host, policy.assign)
+            for s in range(occ.shape[0])]).astype(np.int32)
+
+    def node_masks(a):
+        """Per-group (E, S, n_pad) lane masks from a fleet-order (S, N)
+        assignment (pad lanes match no node → zero partials)."""
+        out = []
+        for g in groups:
+            a_g = a[:, g.start:g.stop]
+            pad = np.full((a.shape[0], g.n_pad - g.n), -1, a_g.dtype)
+            a_p = np.concatenate([a_g, pad], axis=1)
+            out.append(jnp.asarray(
+                a_p[None, :, :] == np.arange(e_count)[:, None, None]))
+        return out
+
+    def per_device_prices(a, log_mu_e, mu_need_e):
+        """Per-group (S, n_pad) price rows: lane n pays its node's
+        μ_{a_n} (pad lanes priced 0 via need=False)."""
+        rows = np.arange(a.shape[0])[:, None]
+        lm_dev = log_mu_e.T[rows, a]  # (S, N)
+        nd_dev = mu_need_e.T[rows, a]
+        lms, nds = [], []
+        for g in groups:
+            k = g.n_pad - g.n
+            lm_g = np.concatenate(
+                [lm_dev[:, g.start:g.stop],
+                 np.zeros((a.shape[0], k))], axis=1)
+            nd_g = np.concatenate(
+                [nd_dev[:, g.start:g.stop],
+                 np.zeros((a.shape[0], k), bool)], axis=1)
+            lms.append(jnp.asarray(lm_g))
+            nds.append(jnp.asarray(nd_g))
+        return lms, nds
     # The initial starts are committed with the replicated mesh sharding
     # the program outputs carry: from iteration 2 on, m is a loop-carried
     # program output, and an uncommitted first m would re-key the
@@ -556,6 +722,10 @@ def _plan_groups(groups, sc, policy: Policy, outer_iters, m0_groups, S,  # analy
     lam_hi = np.full(S, _LOG_PRICE_HI0)
     mu_hi = np.full(S, _LOG_PRICE_HI0)
     log_mu, mu_need = np.zeros(S), np.zeros(S, bool)
+    if multi_node:
+        mu_hi_e = np.full((e_count, S), _LOG_PRICE_HI0)
+        log_mu_e = np.zeros((e_count, S))
+        mu_need_e = np.zeros((e_count, S), bool)
     objs, iters_steps = [], []
     part_feas = None
 
@@ -577,16 +747,32 @@ def _plan_groups(groups, sc, policy: Policy, outer_iters, m0_groups, S,  # analy
             _cat_real([p.b_lo for p in preps], groups), nd, B_dev)
         b_gs = [_repad(b_cat[:, g.start:g.stop], g.n_pad) for g in groups]
         f_gs = [s[1] for s in sols]
-        if price_edge:
-            states = [programs.edge_state(g.fleet, b, f, dl, ep)
-                      for g, b, f, dl, ep in zip(groups, b_gs, f_gs, dls,
-                                                 epss, strict=True)]
-            log_mu, mu_need, mu_hi = _mu_clear(programs, groups, states,
-                                               cap_host, S, mu_hi)
-        lm, mn = jnp.asarray(log_mu), jnp.asarray(mu_need)
-        parts = [programs.partition(g.fleet, m, b, f, lm, mn, dl, ep, g.w)
-                 for g, m, b, f, dl, ep in zip(groups, m_gs, b_gs, f_gs, dls,
-                                               epss, strict=True)]
+        if multi_node:
+            a_now = host_assignment(m_gs)
+            if price_edge:
+                states = [programs.edge_state(g.fleet, b, f, dl, ep)
+                          for g, b, f, dl, ep in zip(groups, b_gs, f_gs, dls,
+                                                     epss, strict=True)]
+                log_mu_e, mu_need_e, mu_hi_e = _mu_clear_nodes(
+                    programs, groups, states, node_masks(a_now), caps_host,
+                    S, mu_hi_e)
+            lms, nds = per_device_prices(a_now, log_mu_e, mu_need_e)
+            parts = [programs.partition_nodes(g.fleet, m, b, f, lmd, ndd,
+                                              dl, ep, g.w)
+                     for g, m, b, f, lmd, ndd, dl, ep in zip(
+                         groups, m_gs, b_gs, f_gs, lms, nds, dls, epss,
+                         strict=True)]
+        else:
+            if price_edge:
+                states = [programs.edge_state(g.fleet, b, f, dl, ep)
+                          for g, b, f, dl, ep in zip(groups, b_gs, f_gs, dls,
+                                                     epss, strict=True)]
+                log_mu, mu_need, mu_hi = _mu_clear(programs, groups, states,
+                                                   cap_host, S, mu_hi)
+            lm, mn = jnp.asarray(log_mu), jnp.asarray(mu_need)
+            parts = [programs.partition(g.fleet, m, b, f, lm, mn, dl, ep, g.w)
+                     for g, m, b, f, dl, ep in zip(groups, m_gs, b_gs, f_gs,
+                                                   dls, epss, strict=True)]
         m_gs = [pt[0] for pt in parts]
         part_feas = _cat_real([pt[1] for pt in parts], groups)
         iters_steps.append(_cat_real([pt[2] for pt in parts], groups))
@@ -595,13 +781,27 @@ def _plan_groups(groups, sc, policy: Policy, outer_iters, m0_groups, S,  # analy
     preps, sols, log_lam, lam_need, lam_hi = lam_solve(m_gs)
     prep_cat = jax.tree_util.tree_map(
         lambda *xs: _cat_real(xs, groups), *preps)
-    alloc_s, total_s, feas_s, margins_s, status_s = _global_finish(
-        prep_cat, _cat_real([s[0] for s in sols], groups),
-        _cat_real([s[1] for s in sols], groups),
-        _cat_real([s[2] for s in sols], groups), part_feas, B_dev,
-        jnp.asarray(log_lam), jnp.asarray(lam_need), cap_dev,
-        jnp.asarray(log_mu), jnp.asarray(mu_need), sc.deadline, sc.eps,
-        sigma_model=policy.sigma_model, channel_cv=channel_cv)
+    b_cat = _cat_real([s[0] for s in sols], groups)
+    f_cat = _cat_real([s[1] for s in sols], groups)
+    feas_cat = _cat_real([s[2] for s in sols], groups)
+    if multi_node:
+        # like the monolithic tail: assignment recomputed at the final m,
+        # priced with the last step's node prices
+        assignment_s = jnp.asarray(host_assignment(m_gs))
+        alloc_s, total_s, feas_s, margins_s, status_s = _global_finish_nodes(
+            prep_cat, b_cat, f_cat, feas_cat, part_feas, B_dev,
+            jnp.asarray(log_lam), jnp.asarray(lam_need), cap_dev,
+            jnp.asarray(log_mu_e.T), jnp.asarray(mu_need_e.T), assignment_s,
+            sc.deadline, sc.eps, sigma_model=policy.sigma_model,
+            channel_cv=channel_cv)
+    else:
+        assignment_s = jnp.zeros(
+            (S, int(b_cat.shape[1])), jnp.int32)
+        alloc_s, total_s, feas_s, margins_s, status_s = _global_finish(
+            prep_cat, b_cat, f_cat, feas_cat, part_feas, B_dev,
+            jnp.asarray(log_lam), jnp.asarray(lam_need), cap_dev,
+            jnp.asarray(log_mu), jnp.asarray(mu_need), sc.deadline, sc.eps,
+            sigma_model=policy.sigma_model, channel_cv=channel_cv)
 
     plans = Plan(
         m_sel=_cat_real(m_gs, groups),
@@ -613,6 +813,7 @@ def _plan_groups(groups, sc, policy: Policy, outer_iters, m0_groups, S,  # analy
         pccp_iters=jnp.stack(iters_steps, axis=1),  # (S, outer, N)
         margins=margins_s,
         status=status_s,
+        assignment=assignment_s,
     )
     idx = int(_select_best(plans))
     return jax.tree_util.tree_map(lambda x: x[idx], plans)
@@ -734,7 +935,13 @@ def _plan_optimal_sharded(groups, sc, policy: Policy, mesh) -> Plan:  # analyze:
     eps_np = np.asarray(sc.eps)
     B_dev, cap_dev = sc.B, sc.edge_capacity_s
     B_host = float(np.asarray(sc.B))
-    cap_host = float(np.asarray(cap_dev))
+    cap_np = np.asarray(cap_dev)
+    if cap_np.ndim:
+        raise NotImplementedError(
+            "plan_sharded with a per-node edge_capacity_s vector needs an "
+            "alternating policy (the exact solve-override path is "
+            "monolithic-only — use Planner.plan, or policy='robust')")
+    cap_host = float(cap_np)
     finite_cap = np.isfinite(cap_host)
 
     dls = [jnp.asarray(_pad_lanes(deadline_np[g.start:g.stop], g.n_pad))
@@ -813,6 +1020,7 @@ def _plan_optimal_sharded(groups, sc, policy: Policy, mesh) -> Plan:  # analyze:
         pccp_iters=jnp.ones((1, n), jnp.int32),
         margins=margins,
         status=_traced_status(alloc, total_energy, margins),
+        assignment=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -861,6 +1069,11 @@ def plan_sharded(spec: FleetSpec, scenario, config, *, key=None, gains=None,  # 
     carries the traced OK/DEGRADED stamp for the caller to act on.
     """
     policy = get_policy(config.policy)
+    if getattr(config, "edge_eps", None) is not None:
+        raise NotImplementedError(
+            "plan_sharded does not support the Cantelli edge_eps occupancy "
+            "row yet — plan monolithically (Planner.plan) for "
+            "chance-constrained edge capacity")
     if mesh is None:
         mesh = planner_mesh()
     if gains is None:

@@ -105,6 +105,7 @@ def violation_report(
     channel_cv: float = 0.0,
     edge_capacity_s=None,
     faults=None,
+    assignment=None,
 ) -> ViolationReport:
     """Empirical per-device P{T > D} under moment-matched sampling.
 
@@ -132,6 +133,12 @@ def violation_report(
     plan that keeps Σ t̄_vm ≤ C is validated unchanged — this is what
     lets the capacity-priced planner be scored against plans made under
     the dedicated or statically-scaled assumptions on equal terms.
+
+    A per-node ``(E,)`` capacity vector congests per node (DESIGN.md
+    §placement): pass the plan's device→node map via ``assignment``
+    (traced ``(N,)`` int32, e.g. ``plan.assignment``) and each node e
+    processor-shares among its own devices — slow_e = max(1, occ_e/C_e)
+    applied to the devices assigned there.
     """
     sel = select_point(fleet, m_sel)
     gain = fleet.link.gain
@@ -147,7 +154,17 @@ def violation_report(
         cap = jnp.asarray(edge_capacity_s, jnp.float64)
         if faults is not None:
             cap = cap * faults.cap_scale
-        slow = jnp.maximum(1.0, jnp.sum(sel.t_vm) / cap)
+        if cap.ndim == 0:
+            slow = jnp.maximum(1.0, jnp.sum(sel.t_vm) / cap)
+        else:
+            if assignment is None:
+                raise ValueError(
+                    "a per-node edge_capacity_s vector needs the plan's "
+                    "device→node assignment (pass assignment=plan.assignment)")
+            a = jnp.asarray(assignment, jnp.int32)
+            occ_e = jax.ops.segment_sum(sel.t_vm, a, num_segments=cap.shape[0])
+            slow_e = jnp.maximum(1.0, occ_e / jnp.maximum(cap, 1e-30))
+            slow = slow_e[a]
         sel = sel._replace(t_vm=sel.t_vm * slow, v_vm=sel.v_vm * slow**2)
     n = m_sel.shape[0]
     mean_loc = energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)

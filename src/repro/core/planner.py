@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ccp, channel, energy
+from repro.core import ccp, channel, energy, placement
 from repro.core.blocks import Fleet
 from repro.core.pccp import pccp_partition
 from repro.core.resource import (
@@ -89,6 +89,9 @@ class Plan(NamedTuple):
     pccp_iters: jnp.ndarray  # (outer_iters, N) Algorithm-1 iterations (Fig. 9)
     margins: jnp.ndarray  # (N,) deadline margin (≤0 ⇒ guaranteed)
     status: jnp.ndarray = jnp.int32(PLAN_OK)  # scalar PLAN_* code  # analyze: ok(TRC005): tiny scalar NamedTuple default; a concrete int32 stamp is the contract
+    #: device→edge-node map a ∈ {0..E−1}^N (DESIGN.md §placement). All
+    #: zeros on the scalar-capacity path (one shared edge ⇒ node 0).
+    assignment: jnp.ndarray = jnp.int32(0)  # analyze: ok(TRC005): tiny scalar NamedTuple default; traced solves stamp the (N,) map
 
 
 # ---------------------------------------------------------------------------
@@ -133,8 +136,8 @@ class Policy:
     (partition steps that do not run the PCCP ignore them). ``solve``,
     when set,
     replaces the whole alternation (signature ``(fleet, deadline, eps, B,
-    edge_cap, policy, outer_iters, pccp_iters, channel_cv) -> Plan``) —
-    used by ``"optimal"``.
+    edge_cap, policy, outer_iters, pccp_iters, channel_cv, edge_eps)
+    -> Plan``) — used by ``"optimal"``.
     """
 
     name: str
@@ -148,6 +151,10 @@ class Policy:
     #: False to register a policy that ignores edge contention when
     #: partitioning (the capacity check still gates feasibility).
     edge_aware: bool = True
+    #: device→node assignment strategy under a per-node capacity vector
+    #: (key into ``placement.ASSIGN_FNS``; DESIGN.md §placement). Ignored
+    #: on the scalar-capacity path.
+    assign: str = "hybrid"
 
     def __post_init__(self):
         if self.sigma_model not in ccp.SIGMA_FNS:
@@ -156,6 +163,10 @@ class Policy:
                 f"got {self.sigma_model!r}")
         if self.partition is None and self.solve is None:
             raise ValueError("a Policy needs a partition step or a solve override")
+        if self.assign not in placement.ASSIGN_FNS:
+            raise ValueError(
+                f"assign must be one of {placement.available_assignments()}, "
+                f"got {self.assign!r}")
 
 
 _REGISTRY: dict[str, Policy] = {}
@@ -297,7 +308,8 @@ def _edge_occ_prep(t_table, var_table, sigma, deadline):
 
 
 def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
-                         occ_table, edge_cap, prior_log_hi=None):
+                         occ_table, edge_cap, prior_log_hi=None,
+                         occ_var=None, edge_sigma: float = 0.0):
     """Market-clearing price μ of the shared-edge capacity at fixed (b, f)
     — returns ``(μ, log_hi)`` like ``_clearing_price``.
 
@@ -306,6 +318,11 @@ def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
     so the fleet's total occupancy Σ occ(m*(μ)) is a non-increasing step
     function of μ — priced by ``_clearing_price`` over the *tables*
     (no golden sections: ~60 cheap argmins).
+
+    ``edge_sigma`` > 0 (static — from ``placement.edge_sigma(edge_eps)``)
+    clears against the Cantelli chance-constrained occupancy
+    Σ occ + σ_e·√(Σ var) instead of the mean (``occ_var`` is the per-point
+    VM variance table); at 0.0 the trace is untouched.
     """
     feas, any_feas, m_least_bad = _edge_occ_prep(t_table, var_table, sigma,
                                                  deadline)
@@ -313,9 +330,52 @@ def _edge_clearing_price(e_table, t_table, var_table, sigma, deadline,
     def occ_at(mu):
         cost = jnp.where(feas, e_table + mu * occ_table, jnp.inf)
         m = jnp.where(any_feas, jnp.argmin(cost, axis=-1), m_least_bad)
-        return jnp.sum(jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0])
+        occ = jnp.sum(jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0])
+        if edge_sigma > 0.0:
+            var = jnp.sum(jnp.take_along_axis(occ_var, m[:, None], -1)[:, 0])
+            occ = occ + edge_sigma * jnp.sqrt(jnp.maximum(var, 0.0))
+        return occ
 
     return _clearing_price(occ_at, edge_cap, prior_log_hi=prior_log_hi)
+
+
+def _node_clearing_prices(e_table, t_table, var_table, sigma, deadline,
+                          occ_table, assignment, caps, prior_log_hi=None,
+                          occ_var=None, edge_sigma: float = 0.0):
+    """Per-node clearing prices μ ∈ R^E at a fixed assignment — the
+    transport subproblem's continuous half (DESIGN.md §placement).
+
+    Each node clears independently: all devices argmin their table priced
+    at the node's trial μ, and only the occupancy of the devices *assigned
+    to that node* is summed against its capacity C_e — the same
+    ``_clearing_price`` log-space bracket arithmetic as the scalar edge,
+    vmapped over nodes (so ``plan_sharded``'s host loop can replay each
+    node's bisection IEEE-identically). Returns ``(μ_vec, log_hi_vec)``,
+    both ``(E,)``; ``prior_log_hi`` warm-starts per node.
+    """
+    feas, any_feas, m_least_bad = _edge_occ_prep(t_table, var_table, sigma,
+                                                 deadline)
+    e_count = caps.shape[0]
+    masks = assignment[None, :] == jnp.arange(e_count)[:, None]  # (E, N)
+
+    def occ_at_node(mask, mu):
+        cost = jnp.where(feas, e_table + mu * occ_table, jnp.inf)
+        m = jnp.where(any_feas, jnp.argmin(cost, axis=-1), m_least_bad)
+        occ_sel = jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0]
+        occ = jnp.sum(jnp.where(mask, occ_sel, 0.0))
+        if edge_sigma > 0.0:
+            var_sel = jnp.take_along_axis(occ_var, m[:, None], -1)[:, 0]
+            occ = occ + edge_sigma * jnp.sqrt(jnp.maximum(
+                jnp.sum(jnp.where(mask, var_sel, 0.0)), 0.0))
+        return occ
+
+    def one(mask, cap, hi):
+        return _clearing_price(lambda mu: occ_at_node(mask, mu), cap,
+                               prior_log_hi=hi)
+
+    if prior_log_hi is None:
+        prior_log_hi = jnp.full((e_count,), _LOG_PRICE_HI0, jnp.float64)
+    return jax.vmap(one)(masks, caps, prior_log_hi)
 
 
 def exact_partition_step(m, e_table, t_table, var_table, sigma, deadline,
@@ -385,61 +445,12 @@ def initial_points(fleet: Fleet, init_m, multi_start: bool):
     return clamp(jnp.broadcast_to(jnp.asarray(init_m, jnp.int32), (n,))), False
 
 
-def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
-                 outer_iters: int, pccp_iters: int, channel_cv: float,
-                 solver: str = "structured", pccp_gated: bool = False) -> Plan:
-    """One Algorithm-2 alternation from initial points ``m0`` — fully traced.
-
-    The outer loop is a ``lax.scan`` carrying the partition decision; each
-    step re-allocates (b, f) at the current m and re-partitions at the new
-    (b, f). No host syncs, so the whole alternation stays one XLA program.
-    Policy behaviour (σ model, time inflation, partition step) comes from
-    the ``Policy`` record — no per-policy branches live here.
-
-    ``edge_cap`` is the shared-edge VM-time budget (traced; ∞ ⇒ dedicated
-    VMs): each step discovers the clearing price μ on the current tables
-    and charges μ·t̄_vm per candidate point, so the partition internalizes
-    edge contention; with ∞ capacity μ = 0 and the step is numerically
-    identical to the uncoupled planner.
-    """
-    n = fleet.num_devices
-    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
-    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
-    edge_cap = jnp.asarray(edge_cap, jnp.float64)
-    sig_model, ub_k = policy.sigma_model, policy.ub_k
-    sigma = ccp.SIGMA_FNS[sig_model](eps)
-    occ_table = fleet.chain.t_vm  # (N, M+1) edge occupancy per point
-
-    def step(carry, _):
-        m, lam_hi, mu_hi = carry
-        alloc, lam_hi = allocate_with_bracket(
-            fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
-            edge_capacity_s=edge_cap, prior_log_hi=lam_hi)
-        e_table, t_table, var_table = policy_point_tables(
-            fleet, alloc.b, alloc.f, policy, channel_cv)
-        if policy.edge_aware:
-            mu, mu_hi = _edge_clearing_price(e_table, t_table, var_table,
-                                             sigma, deadline, occ_table,
-                                             edge_cap, prior_log_hi=mu_hi)
-        else:
-            mu = jnp.asarray(0.0, jnp.float64)
-        m_new, feas, pc = policy.partition(
-            m, e_table + mu * occ_table, t_table, var_table, sigma, deadline,
-            pccp_iters, solver, pccp_gated)
-        # the trace records true energy, not the μ-priced surrogate
-        obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
-        return (m_new, lam_hi, mu_hi), (obj, pc, feas, mu)
-
-    m = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (n,))
-    hi0 = jnp.asarray(_LOG_PRICE_HI0, jnp.float64)
-    carry, (traces, pccp_trace, feas_seq, mu_seq) = jax.lax.scan(
-        step, (m, hi0, hi0), None, length=outer_iters)
-    m, lam_hi, _ = carry
-    feasible = feas_seq[-1]
-
-    alloc, _ = allocate_with_bracket(
-        fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
-        edge_capacity_s=edge_cap, edge_price=mu_seq[-1], prior_log_hi=lam_hi)
+def _plan_tail(fleet: Fleet, m, alloc, deadline, eps, sig_model, feasible,
+               traces, pccp_trace, assignment) -> Plan:
+    """Shared plan assembly: margins + status at the final (m, alloc).
+    Pure function of its inputs — the scalar and vector alternation
+    branches (and only they) both end here, so the scalar path's ops are
+    unchanged from the pre-placement goldens."""
     sel = select_point(fleet, m)
     t_mean = (
         energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
@@ -459,7 +470,125 @@ def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
         pccp_iters=pccp_trace,
         margins=margins,
         status=_traced_status(alloc, total_energy, margins),
+        assignment=assignment,
     )
+
+
+def _alternation(fleet: Fleet, deadline, eps, B, edge_cap, m0, policy: Policy,
+                 outer_iters: int, pccp_iters: int, channel_cv: float,
+                 solver: str = "structured", pccp_gated: bool = False,
+                 edge_eps=None) -> Plan:
+    """One Algorithm-2 alternation from initial points ``m0`` — fully traced.
+
+    The outer loop is a ``lax.scan`` carrying the partition decision; each
+    step re-allocates (b, f) at the current m and re-partitions at the new
+    (b, f). No host syncs, so the whole alternation stays one XLA program.
+    Policy behaviour (σ model, time inflation, partition step) comes from
+    the ``Policy`` record — no per-policy branches live here.
+
+    ``edge_cap`` is the shared-edge VM-time budget (traced; ∞ ⇒ dedicated
+    VMs): each step discovers the clearing price μ on the current tables
+    and charges μ·t̄_vm per candidate point, so the partition internalizes
+    edge contention; with ∞ capacity μ = 0 and the step is numerically
+    identical to the uncoupled planner.
+
+    A **per-node ``(E,)`` capacity vector** (DESIGN.md §placement) routes
+    to the placement branch: each step assigns devices to nodes with the
+    policy's ``assign`` strategy at the current occupancies, clears a
+    per-node price vector μ ∈ R^E (``_node_clearing_prices``, warm-started
+    per node through the scan), and charges each device its *own* node's
+    price μ_{a_n}·t̄_vm in the partition tables. The capacity's *shape* is
+    static, so the scalar path's jaxpr is untouched (E=1 vectors are
+    collapsed to scalars by ``Scenario.normalized`` — goldens stay
+    leaf-identical). ``edge_eps`` (static) swaps the mean occupancy rows
+    for Cantelli chance-constrained rows everywhere the capacity is
+    checked or cleared.
+    """
+    n = fleet.num_devices
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
+    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float64), (n,))
+    edge_cap = jnp.asarray(edge_cap, jnp.float64)
+    sig_model, ub_k = policy.sigma_model, policy.ub_k
+    sigma = ccp.SIGMA_FNS[sig_model](eps)
+    occ_table = fleet.chain.t_vm  # (N, M+1) edge occupancy per point
+    occ_var = fleet.chain.v_vm  # (N, M+1) VM variance (Cantelli row)
+    edge_sig = placement.edge_sigma(edge_eps)
+    m = jnp.broadcast_to(jnp.asarray(m0, jnp.int32), (n,))
+    hi0 = jnp.asarray(_LOG_PRICE_HI0, jnp.float64)
+
+    if edge_cap.ndim == 0:  # one shared edge (scalar μ — the seed goldens)
+        def step(carry, _):
+            m, lam_hi, mu_hi = carry
+            alloc, lam_hi = allocate_with_bracket(
+                fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+                edge_capacity_s=edge_cap, prior_log_hi=lam_hi,
+                edge_eps=edge_eps)
+            e_table, t_table, var_table = policy_point_tables(
+                fleet, alloc.b, alloc.f, policy, channel_cv)
+            if policy.edge_aware:
+                mu, mu_hi = _edge_clearing_price(e_table, t_table, var_table,
+                                                 sigma, deadline, occ_table,
+                                                 edge_cap, prior_log_hi=mu_hi,
+                                                 occ_var=occ_var,
+                                                 edge_sigma=edge_sig)
+            else:
+                mu = jnp.asarray(0.0, jnp.float64)
+            m_new, feas, pc = policy.partition(
+                m, e_table + mu * occ_table, t_table, var_table, sigma, deadline,
+                pccp_iters, solver, pccp_gated)
+            # the trace records true energy, not the μ-priced surrogate
+            obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
+            return (m_new, lam_hi, mu_hi), (obj, pc, feas, mu)
+
+        carry, (traces, pccp_trace, feas_seq, mu_seq) = jax.lax.scan(
+            step, (m, hi0, hi0), None, length=outer_iters)
+        m, lam_hi, _ = carry
+        alloc, _ = allocate_with_bracket(
+            fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+            edge_capacity_s=edge_cap, edge_price=mu_seq[-1],
+            prior_log_hi=lam_hi, edge_eps=edge_eps)
+        assignment = jnp.zeros((n,), jnp.int32)
+    else:  # per-node capacities: assignment + per-node prices
+        e_count = edge_cap.shape[0]
+
+        def step(carry, _):
+            m, lam_hi, mu_hi = carry
+            occ_now = jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0]
+            assign = placement.assign_devices(occ_now, edge_cap, policy.assign)
+            alloc, lam_hi = allocate_with_bracket(
+                fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+                edge_capacity_s=edge_cap, prior_log_hi=lam_hi,
+                assignment=assign, edge_eps=edge_eps)
+            e_table, t_table, var_table = policy_point_tables(
+                fleet, alloc.b, alloc.f, policy, channel_cv)
+            if policy.edge_aware:
+                mu_vec, mu_hi = _node_clearing_prices(
+                    e_table, t_table, var_table, sigma, deadline, occ_table,
+                    assign, edge_cap, prior_log_hi=mu_hi, occ_var=occ_var,
+                    edge_sigma=edge_sig)
+            else:
+                mu_vec = jnp.zeros((e_count,), jnp.float64)
+            mu_dev = mu_vec[assign]  # each device pays its own node's price
+            m_new, feas, pc = policy.partition(
+                m, e_table + mu_dev[:, None] * occ_table, t_table, var_table,
+                sigma, deadline, pccp_iters, solver, pccp_gated)
+            obj = jnp.sum(jnp.take_along_axis(e_table, m_new[:, None], -1)[:, 0])
+            return (m_new, lam_hi, mu_hi), (obj, pc, feas, mu_vec)
+
+        mu_hi0 = jnp.full((e_count,), _LOG_PRICE_HI0, jnp.float64)
+        carry, (traces, pccp_trace, feas_seq, mu_seq) = jax.lax.scan(
+            step, (m, hi0, mu_hi0), None, length=outer_iters)
+        m, lam_hi, _ = carry
+        occ_final = jnp.take_along_axis(occ_table, m[:, None], -1)[:, 0]
+        assignment = placement.assign_devices(occ_final, edge_cap,
+                                              policy.assign)
+        alloc, _ = allocate_with_bracket(
+            fleet, m, deadline, eps, B, sig_model, ub_k, channel_cv,
+            edge_capacity_s=edge_cap, edge_price=mu_seq[-1],
+            prior_log_hi=lam_hi, assignment=assignment, edge_eps=edge_eps)
+
+    return _plan_tail(fleet, m, alloc, deadline, eps, sig_model, feas_seq[-1],
+                      traces, pccp_trace, assignment)
 
 
 def _select_best(plans: Plan) -> jnp.ndarray:
@@ -485,12 +614,12 @@ def _select_best(plans: Plan) -> jnp.ndarray:
 def _multi_start(fleet: Fleet, deadline, eps, B, edge_cap, m0_batch,
                  policy: Policy, outer_iters: int, pccp_iters: int,
                  channel_cv: float, solver: str = "structured",
-                 pccp_gated: bool = False) -> Plan:
+                 pccp_gated: bool = False, edge_eps=None) -> Plan:
     """vmapped multi-start alternation + traced best-plan selection."""
     plans = jax.vmap(
         lambda m0: _alternation(fleet, deadline, eps, B, edge_cap, m0, policy,
                                 outer_iters, pccp_iters, channel_cv, solver,
-                                pccp_gated)
+                                pccp_gated, edge_eps)
     )(m0_batch)
     idx = _select_best(plans)
     return jax.tree_util.tree_map(lambda x: x[idx], plans)
@@ -498,16 +627,17 @@ def _multi_start(fleet: Fleet, deadline, eps, B, edge_cap, m0_batch,
 
 def _solve_entry(fleet: Fleet, deadline, eps, B, edge_cap, policy: Policy,
                  outer_iters: int, pccp_iters: int, channel_cv: float,
-                 solver: str = "structured", pccp_gated: bool = False) -> Plan:
+                 solver: str = "structured", pccp_gated: bool = False,
+                 edge_eps=None) -> Plan:
     """Entry for solve-override policies (no alternation, no starts; the
     inner-barrier statics do not apply to exact solves)."""
     del solver, pccp_gated
     return policy.solve(fleet, deadline, eps, B, edge_cap, policy,
-                        outer_iters, pccp_iters, channel_cv)
+                        outer_iters, pccp_iters, channel_cv, edge_eps)
 
 
 _STATICS = ("policy", "outer_iters", "pccp_iters", "channel_cv", "solver",
-            "pccp_gated")
+            "pccp_gated", "edge_eps")
 
 #: Jitted entry points. Exposed at module level (not hidden in ``plan``) so
 #: tests can assert cache behaviour via ``_cache_size()``. ``policy`` is a
@@ -619,7 +749,8 @@ def _optimal_select(cost, feas, budget_all, occ_all, mu):
 
 
 def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
-                 edge_capacity_s=None) -> Plan:
+                 edge_capacity_s=None, assign: str = "hybrid",
+                 edge_eps=None) -> Plan:
     """§VI "Optimal policy": joint exact search over (m, b, f).
 
     At a fixed bandwidth price λ the joint problem separates per device
@@ -642,6 +773,14 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
 
     Fully traced (fixed-iteration bisection), so the ``"optimal"`` policy
     vmaps over zipped scenario batches like any other registry entry.
+
+    A per-node ``(E,)`` capacity vector (DESIGN.md §placement) runs the
+    placement variant: at each λ the assignment is built from the
+    unpriced selection's occupancies (strategy ``assign``), per-node
+    prices μ ∈ R^E are cleared over the same point tables, and the final
+    selection is priced per device at its own node's μ_{a_n}. ``edge_eps``
+    (static) makes every occupancy row/clearing Cantelli
+    chance-constrained.
     """
     n = fleet.num_devices
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
@@ -651,29 +790,71 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
     c, plat, link = fleet.chain, fleet.platform, fleet.link
     sigma = ccp.SIGMA_FNS[sigma_model](eps)
     occ_all = c.t_vm  # (N, M+1) shared-edge occupancy of each point
+    var_all = c.v_vm  # (N, M+1) VM variance (Cantelli row)
+    edge_sig = placement.edge_sigma(edge_eps)
 
     budget_all, b_lo_all, feas0_all = _optimal_prep(fleet, deadline, sigma, B)
 
     def select(cost, feas, mu):
         return _optimal_select(cost, feas, budget_all, occ_all, mu)
 
-    def occ_of(m_sel):
-        return jnp.sum(jnp.take_along_axis(occ_all, m_sel[:, None], -1)[:, 0])
+    def occ_dev(m_sel):
+        return jnp.take_along_axis(occ_all, m_sel[:, None], -1)[:, 0]
 
-    def mu_star(cost, feas):
-        """Clearing price of the edge capacity at fixed λ — a cheap
-        ``_clearing_price`` search over the point tables (no golden
-        sections re-run; the per-point (b, f) depend on λ only)."""
-        return _clearing_price(
-            lambda mu: occ_of(select(cost, feas, mu)[0]), edge_cap)[0]
+    def var_dev(m_sel):
+        return jnp.take_along_axis(var_all, m_sel[:, None], -1)[:, 0]
 
-    def solve_at(lam):
-        cost, b, f, e, feas = _optimal_point_solve(
-            fleet, budget_all, b_lo_all, feas0_all, lam, B)
-        mu = mu_star(cost, feas)
-        m_sel, any_feas = select(cost, feas, mu)
-        pick = lambda a: jnp.take_along_axis(a, m_sel[:, None], -1)[:, 0]
-        return (m_sel, pick(b), pick(f), pick(e), pick(feas) & any_feas, mu)
+    if edge_cap.ndim == 0:  # one shared edge (scalar μ — the seed goldens)
+        def occ_of(m_sel):
+            occ = jnp.sum(occ_dev(m_sel))
+            if edge_sig > 0.0:
+                occ = occ + edge_sig * jnp.sqrt(
+                    jnp.maximum(jnp.sum(var_dev(m_sel)), 0.0))
+            return occ
+
+        def mu_star(cost, feas):
+            """Clearing price of the edge capacity at fixed λ — a cheap
+            ``_clearing_price`` search over the point tables (no golden
+            sections re-run; the per-point (b, f) depend on λ only)."""
+            return _clearing_price(
+                lambda mu: occ_of(select(cost, feas, mu)[0]), edge_cap)[0]
+
+        def solve_at(lam):
+            cost, b, f, e, feas = _optimal_point_solve(
+                fleet, budget_all, b_lo_all, feas0_all, lam, B)
+            mu = mu_star(cost, feas)
+            m_sel, any_feas = select(cost, feas, mu)
+            pick = lambda a: jnp.take_along_axis(a, m_sel[:, None], -1)[:, 0]
+            return (m_sel, pick(b), pick(f), pick(e), pick(feas) & any_feas,
+                    mu, jnp.zeros((n,), jnp.int32))
+    else:  # per-node capacities: assignment + per-node prices
+        e_count = edge_cap.shape[0]
+        node_ids = jnp.arange(e_count)
+
+        def eff_node_occ(m_sel, mask):
+            occ = jnp.sum(jnp.where(mask, occ_dev(m_sel), 0.0))
+            if edge_sig > 0.0:
+                occ = occ + edge_sig * jnp.sqrt(jnp.maximum(
+                    jnp.sum(jnp.where(mask, var_dev(m_sel), 0.0)), 0.0))
+            return occ
+
+        def solve_at(lam):
+            cost, b, f, e, feas = _optimal_point_solve(
+                fleet, budget_all, b_lo_all, feas0_all, lam, B)
+            m0_sel, _ = select(cost, feas, jnp.asarray(0.0, jnp.float64))
+            a = placement.assign_devices(occ_dev(m0_sel), edge_cap, assign)
+            masks = a[None, :] == node_ids[:, None]  # (E, N)
+
+            def one(mask, cap):
+                return _clearing_price(
+                    lambda mu: eff_node_occ(select(cost, feas, mu)[0], mask),
+                    cap)[0]
+
+            mu_vec = jax.vmap(one)(masks, edge_cap)
+            m_sel, any_feas = select(cost, feas, mu_vec[a][:, None])
+            pick = lambda arr: jnp.take_along_axis(arr, m_sel[:, None], -1)[:, 0]
+            return (m_sel, pick(b), pick(f), pick(e), pick(feas) & any_feas,
+                    mu_vec, a)
 
     _, b0, *_ = solve_at(jnp.asarray(0.0, jnp.float64))
     need_price = jnp.sum(b0) > B
@@ -685,9 +866,16 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
     log_hi, _ = _expand_log_bracket(excess)
     log_lam = bisect(excess, _LOG_PRICE_LO, log_hi, iters=60)
     lam = jnp.where(need_price, 10.0**log_lam, 0.0)
-    m_sel, b, f, e, feas, mu = solve_at(lam)
+    m_sel, b, f, e, feas, mu, assignment = solve_at(lam)
     # primal capacity check at the rounded discrete selection
-    feas = feas & (occ_of(m_sel) <= edge_cap * (1.0 + _EDGE_CAP_RTOL))
+    if edge_cap.ndim == 0:
+        feas = feas & (occ_of(m_sel) <= edge_cap * (1.0 + _EDGE_CAP_RTOL))
+    else:
+        occ_nodes = jax.vmap(
+            lambda mask: eff_node_occ(m_sel, mask)
+        )(assignment[None, :] == node_ids[:, None])
+        node_ok = occ_nodes <= edge_cap * (1.0 + _EDGE_CAP_RTOL)
+        feas = feas & node_ok[assignment]
 
     sel = select_point(fleet, m_sel)
     e_loc = energy.expected_local_energy(plat.kappa, sel.w_flops, sel.g_eff, f)
@@ -712,22 +900,25 @@ def plan_optimal(fleet: Fleet, deadline, eps, B, sigma_model: str = "cantelli",
         pccp_iters=jnp.ones((1, fleet.num_devices), jnp.int32),
         margins=margins,
         status=_traced_status(alloc, total_energy, margins),
+        assignment=assignment,
     )
 
 
 def _optimal_solve(fleet, deadline, eps, B, edge_cap, policy: Policy,
-                   outer_iters, pccp_iters, channel_cv) -> Plan:
+                   outer_iters, pccp_iters, channel_cv, edge_eps=None) -> Plan:
     """Registry ``solve`` adapter for the optimal baseline (iteration
     counts and channel_cv do not apply to the exact search)."""
     del outer_iters, pccp_iters, channel_cv
     return plan_optimal(fleet, deadline, eps, B, sigma_model=policy.sigma_model,
-                        edge_capacity_s=edge_cap)
+                        edge_capacity_s=edge_cap, assign=policy.assign,
+                        edge_eps=edge_eps)
 
 
-@partial(jax.jit, static_argnames=("sigma_model",))
+@partial(jax.jit, static_argnames=("sigma_model", "assign", "edge_eps"))
 def plan_fixed_partition(fleet: Fleet, m_sel, deadline, eps, B,
                          edge_capacity_s=None,
-                         sigma_model: str = "cantelli") -> Plan:
+                         sigma_model: str = "cantelli",
+                         assign: str = "hybrid", edge_eps=None) -> Plan:
     """A full :class:`Plan` at a *forced* partition: allocate (b, f) by
     the dual decomposition at the given ``m_sel`` and score it — no
     partitioning loop, no PCCP.
@@ -740,6 +931,11 @@ def plan_fixed_partition(fleet: Fleet, m_sel, deadline, eps, B,
 
     ``m_sel`` is broadcast to ``(N,)`` and clamped to each device's own
     chain on ragged fleets.
+
+    A per-node ``(E,)`` ``edge_capacity_s`` vector computes the
+    device→node assignment at the forced partition with the ``assign``
+    strategy (DESIGN.md §placement) and checks per-node occupancy;
+    ``edge_eps`` makes the rows Cantelli chance-constrained.
     """
     n = fleet.num_devices
     deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64), (n,))
@@ -748,8 +944,17 @@ def plan_fixed_partition(fleet: Fleet, m_sel, deadline, eps, B,
         jnp.inf if edge_capacity_s is None else edge_capacity_s, jnp.float64)
     m = jnp.broadcast_to(jnp.asarray(m_sel, jnp.int32), (n,))
     m = jnp.minimum(m, fleet.points_per_device - 1)
-    alloc = allocate(fleet, m, deadline, eps, B, sigma_model,
-                     edge_capacity_s=edge_cap)
+    if edge_cap.ndim == 0:
+        assignment = jnp.zeros((n,), jnp.int32)
+        alloc = allocate(fleet, m, deadline, eps, B, sigma_model,
+                         edge_capacity_s=edge_cap, edge_eps=edge_eps)
+    else:
+        assignment = placement.assign_devices(
+            select_point(fleet, m).t_vm, edge_cap, assign)
+        alloc = allocate(fleet, m, deadline, eps, B, sigma_model,
+                         edge_capacity_s=edge_cap, assignment=assignment,
+                         edge_price=jnp.zeros(edge_cap.shape, jnp.float64),
+                         edge_eps=edge_eps)
     sel = select_point(fleet, m)
     t_mean = (
         energy.mean_local_time(sel.w_flops, sel.g_eff, alloc.f)
@@ -769,6 +974,7 @@ def plan_fixed_partition(fleet: Fleet, m_sel, deadline, eps, B,
         pccp_iters=jnp.ones((1, n), jnp.int32),
         margins=margins,
         status=_traced_status(alloc, total_energy, margins),
+        assignment=assignment,
     )
 
 

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ccp, channel, energy
+from repro.core import ccp, channel, energy, placement
 from repro.core.blocks import Fleet
 from repro.solvers.scalar import bisect, golden_section
 from repro.solvers.ipm import BarrierSpec, barrier_solve
@@ -324,7 +324,8 @@ def _alloc_solve_at(prep: AllocPrep, B, lam, channel_cv: float = 0.0):
 
 def _alloc_finalize(prep: AllocPrep, b, f, feas, B, lam, need_price,
                     channel_cv: float = 0.0, edge_capacity_s=None,
-                    edge_price=None) -> Allocation:
+                    edge_price=None, assignment=None,
+                    edge_eps=None) -> Allocation:
     """Global post-solve: floor-respecting rescale to Σb ≤ B, deadline
     recheck, edge-capacity check, energies. Shared verbatim by the
     monolithic ``allocate`` and the group-sharded path (which calls it on
@@ -346,9 +347,30 @@ def _alloc_finalize(prep: AllocPrep, b, f, feas, B, lam, need_price,
         prep.v_base, channel_cv)
 
     # Shared-edge capacity: Σ occupancy at the (fixed) selected points.
+    # ``edge_eps`` (static float, DESIGN.md §placement) turns the mean row
+    # into the Cantelli chance-constrained row  Σ t̄ + σ_e·√(Σ v_vm) ≤ C
+    # with σ_e = √((1−ε)/ε); at ``None`` the trace is untouched.
     if edge_capacity_s is not None:
         cap = jnp.asarray(edge_capacity_s, jnp.float64)
-        feas = feas & (jnp.sum(sel.t_vm) <= cap * (1.0 + _EDGE_CAP_RTOL))
+        sig_edge = placement.edge_sigma(edge_eps)
+        if cap.ndim == 0:  # one shared edge (scalar path — the PR 4 goldens)
+            occ = jnp.sum(sel.t_vm)
+            if sig_edge > 0.0:
+                occ = occ + sig_edge * jnp.sqrt(
+                    jnp.maximum(jnp.sum(sel.v_vm), 0.0))
+            feas = feas & (occ <= cap * (1.0 + _EDGE_CAP_RTOL))
+        else:  # per-node capacity rows Σ_{n: a_n=e} t̄_vm,n ≤ C_e
+            if assignment is None:
+                raise ValueError(
+                    "a per-node edge_capacity_s vector needs the device→node "
+                    "assignment (core.placement.assign_devices)")
+            e_count = cap.shape[0]
+            occ_e = placement.node_loads(sel.t_vm, assignment, e_count)
+            if sig_edge > 0.0:
+                var_e = placement.node_loads(sel.v_vm, assignment, e_count)
+                occ_e = occ_e + sig_edge * jnp.sqrt(jnp.maximum(var_e, 0.0))
+            node_ok = occ_e <= cap * (1.0 + _EDGE_CAP_RTOL)
+            feas = feas & node_ok[assignment]
     mu = jnp.asarray(0.0 if edge_price is None else edge_price, jnp.float64)
 
     e_loc = energy.expected_local_energy(prep.kappa, sel.w_flops, sel.g_eff, f)
@@ -358,7 +380,8 @@ def _alloc_finalize(prep: AllocPrep, b, f, feas, B, lam, need_price,
 
 
 def _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
-                   channel_cv, edge_capacity_s, edge_price, prior_log_hi):
+                   channel_cv, edge_capacity_s, edge_price, prior_log_hi,
+                   assignment=None, edge_eps=None):
     prep = _alloc_prep(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
                        channel_cv)
 
@@ -380,11 +403,11 @@ def _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
     lam = jnp.where(need_price, 10.0**log_lam, 0.0)
     b, f, feas = solve_at(lam)
     alloc = _alloc_finalize(prep, b, f, feas, B, lam, need_price, channel_cv,
-                            edge_capacity_s, edge_price)
+                            edge_capacity_s, edge_price, assignment, edge_eps)
     return alloc, log_hi
 
 
-@partial(jax.jit, static_argnames=("sigma_model", "channel_cv"))
+@partial(jax.jit, static_argnames=("sigma_model", "channel_cv", "edge_eps"))
 def allocate(
     fleet: Fleet,
     m_sel: jnp.ndarray,
@@ -397,6 +420,8 @@ def allocate(
     edge_capacity_s=None,
     edge_price=None,
     prior_log_hi=None,
+    assignment=None,
+    edge_eps=None,
 ) -> Allocation:
     """Solve problem (23) by dual decomposition over Σ b_n ≤ B.
 
@@ -414,13 +439,20 @@ def allocate(
     expansion from a prior solve's bracket top — value-identical to a
     cold start (see ``_expand_log_bracket``). Use ``allocate_with_bracket``
     to also get the bracket top back for threading.
+
+    ``edge_capacity_s`` may also be a per-node ``(E,)`` capacity vector
+    (DESIGN.md §placement), in which case the traced ``assignment``
+    (device→node, ``(N,)`` int32) selects which row each device's
+    occupancy lands on and ``mu`` records the per-node price vector.
+    ``edge_eps`` (static float) swaps the mean occupancy row for the
+    Cantelli chance-constrained row (see ``placement.edge_sigma``).
     """
     return _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
                           channel_cv, edge_capacity_s, edge_price,
-                          prior_log_hi)[0]
+                          prior_log_hi, assignment, edge_eps)[0]
 
 
-@partial(jax.jit, static_argnames=("sigma_model", "channel_cv"))
+@partial(jax.jit, static_argnames=("sigma_model", "channel_cv", "edge_eps"))
 def allocate_with_bracket(
     fleet: Fleet,
     m_sel: jnp.ndarray,
@@ -433,6 +465,8 @@ def allocate_with_bracket(
     edge_capacity_s=None,
     edge_price=None,
     prior_log_hi=None,
+    assignment=None,
+    edge_eps=None,
 ):
     """``allocate`` that also returns the expanded λ-bracket top (log10),
     for threading across repeated solves (the Algorithm-2 alternation
@@ -442,7 +476,7 @@ def allocate_with_bracket(
     (``analysis.contracts.ALLOCATION_LEAVES``)."""
     return _allocate_impl(fleet, m_sel, deadline, eps, B, sigma_model, ub_k,
                           channel_cv, edge_capacity_s, edge_price,
-                          prior_log_hi)
+                          prior_log_hi, assignment, edge_eps)
 
 
 def _rescale_with_floor(b, b_lo, B):
@@ -491,7 +525,9 @@ def allocate_ipm(  # analyze: ok(TRC001,TRC002,TRC003): host cross-check utility
     B: float,
     sigma_model: str = "cantelli",
     init: Allocation | None = None,
-    edge_capacity_s: float | None = None,
+    edge_capacity_s=None,
+    assignment=None,
+    edge_eps: float | None = None,
 ) -> Allocation:
     """Paper-faithful joint interior-point solve of (23) (for cross-checks).
 
@@ -507,33 +543,67 @@ def allocate_ipm(  # analyze: ok(TRC001,TRC002,TRC003): host cross-check utility
     12×20 fixed Newton-step budget down to the steps that actually move
     the iterate.
 
-    ``edge_capacity_s`` (concrete host float — this is a test/cross-check
-    utility) appends the shared-edge capacity row Σ t̄_vm(m_n) − C ≤ 0.
-    At fixed m the row is a constant: strictly satisfied it is inert in
-    the barrier (certifying that the capacity does not distort the (b, f)
-    optimum); violated it poisons the barrier, so it is validated here and
-    raised as an error instead.
+    ``edge_capacity_s`` (concrete host float or per-node array — this is a
+    test/cross-check utility) appends the shared-edge capacity row
+    Σ t̄_vm(m_n) − C ≤ 0 — one row per finite node when a capacity vector
+    and its ``assignment`` are given, with the Cantelli variance term
+    σ_edge·√(Σ v_vm) added under ``edge_eps``. At fixed m each row is a
+    constant: strictly satisfied it is inert in the barrier (certifying
+    that the capacity does not distort the (b, f) optimum); violated it
+    poisons the barrier, so it is validated here and raised as an error
+    instead.
     """
     sel = select_point(fleet, m_sel)
     budget = deadline_budget(sel, deadline, eps, sigma_model)
     plat, link = fleet.platform, fleet.link
     n = fleet.num_devices
+    sig_edge = placement.edge_sigma(edge_eps)
 
-    cap = None
-    if edge_capacity_s is not None and np.isfinite(float(edge_capacity_s)):
-        cap = float(edge_capacity_s)
-        occ_total = float(jnp.sum(sel.t_vm))
-        if occ_total > cap * (1.0 + _EDGE_CAP_RTOL):
-            raise ValueError(
-                f"allocate_ipm: partition occupies {occ_total:.6g} s of the "
-                f"shared edge but edge_capacity_s={cap:.6g} s — the capacity "
-                "constraint is violated at this fixed m_sel (the occupancy "
-                "row would poison the barrier); re-plan with the edge price "
-                "before cross-checking")
+    def _eff_occ(occ_sum, var_sum):
+        return occ_sum + sig_edge * np.sqrt(max(var_sum, 0.0))
+
+    cap = None  # scalar capacity row
+    cap_vec = a_host = None  # per-node capacity rows
+    occ_host = np.asarray(sel.t_vm, np.float64)
+    var_host = np.asarray(sel.v_vm, np.float64)
+    if edge_capacity_s is not None:
+        cap_arr = np.asarray(edge_capacity_s, np.float64)
+        if cap_arr.ndim == 0:
+            if np.isfinite(cap_arr):
+                cap = float(cap_arr)
+                occ_total = _eff_occ(float(np.sum(occ_host)),
+                                     float(np.sum(var_host)))
+                if occ_total > cap * (1.0 + _EDGE_CAP_RTOL):
+                    raise ValueError(
+                        f"allocate_ipm: partition occupies {occ_total:.6g} s of the "
+                        f"shared edge but edge_capacity_s={cap:.6g} s — the capacity "
+                        "constraint is violated at this fixed m_sel (the occupancy "
+                        "row would poison the barrier); re-plan with the edge price "
+                        "before cross-checking")
+        else:
+            if assignment is None:
+                raise ValueError(
+                    "allocate_ipm: a per-node edge_capacity_s vector needs "
+                    "the device→node assignment (pass plan.assignment)")
+            cap_vec = cap_arr
+            a_host = np.asarray(assignment, np.int64)
+            for e in range(cap_vec.shape[0]):
+                if not np.isfinite(cap_vec[e]):
+                    continue
+                mask = a_host == e
+                occ_e = _eff_occ(float(np.sum(occ_host[mask])),
+                                 float(np.sum(var_host[mask])))
+                if occ_e > cap_vec[e] * (1.0 + _EDGE_CAP_RTOL):
+                    raise ValueError(
+                        f"allocate_ipm: node {e} occupies {occ_e:.6g} s but its "
+                        f"edge capacity is {cap_vec[e]:.6g} s — the capacity "
+                        "constraint is violated at this fixed (m_sel, assignment); "
+                        "re-plan with the per-node prices before cross-checking")
 
     if init is None:
         init = allocate(fleet, m_sel, deadline, eps, B, sigma_model,
-                        edge_capacity_s=edge_capacity_s)
+                        edge_capacity_s=edge_capacity_s,
+                        assignment=assignment, edge_eps=edge_eps)
 
     def unpack(z):
         return z[:n] * B, z[n:] * plat.f_max  # b, f
@@ -564,7 +634,23 @@ def allocate_ipm(  # analyze: ok(TRC001,TRC002,TRC003): host cross-check utility
             # is written against cap·(1+2·rtol): any occupancy that
             # passed the guard sits strictly inside it.
             cap_eff = cap * (1.0 + 2.0 * _EDGE_CAP_RTOL)
-            rows.append((jnp.sum(sel.t_vm) - cap_eff)[None])
+            occ_row = jnp.sum(sel.t_vm)
+            if sig_edge > 0.0:
+                occ_row = occ_row + sig_edge * jnp.sqrt(
+                    jnp.maximum(jnp.sum(sel.v_vm), 0.0))
+            rows.append((occ_row - cap_eff)[None])
+        if cap_vec is not None:
+            # One constant row per finite node (same 2·rtol headroom).
+            for e in range(cap_vec.shape[0]):
+                if not np.isfinite(cap_vec[e]):
+                    continue
+                mask = jnp.asarray(a_host == e)
+                occ_row = jnp.sum(jnp.where(mask, sel.t_vm, 0.0))
+                if sig_edge > 0.0:
+                    occ_row = occ_row + sig_edge * jnp.sqrt(jnp.maximum(
+                        jnp.sum(jnp.where(mask, sel.v_vm, 0.0)), 0.0))
+                cap_eff = cap_vec[e] * (1.0 + 2.0 * _EDGE_CAP_RTOL)
+                rows.append((occ_row - cap_eff)[None])
         return jnp.concatenate(rows)
 
     # Strictly feasible start: nudge the dual solution into the interior.

@@ -24,7 +24,6 @@ chain via ``apply_faults``, the same hook ``measured_chain`` serves.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -155,8 +154,9 @@ def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; th
     sc = Scenario(*scenario).normalized(fleet.num_devices)
     n = fleet.num_devices
     eps_scalar = float(np.asarray(sc.eps).mean())
-    cap_f = float(np.asarray(sc.edge_capacity_s))
-    cap_arg = None if math.isinf(cap_f) else sc.edge_capacity_s
+    cap_np = np.asarray(sc.edge_capacity_s)
+    multi_node = cap_np.ndim == 1  # per-node capacities (DESIGN.md §placement)
+    cap_arg = None if np.all(np.isinf(cap_np)) else sc.edge_capacity_s
 
     plan = planner.plan(fleet, sc)
     contingencies = contingency_plans(
@@ -183,7 +183,8 @@ def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; th
         vr = violation_report(
             jax.random.fold_in(key, t), fleet, plan.m_sel, plan.alloc,
             sc.deadline, dist=dist, num_samples=requests_per_step,
-            edge_capacity_s=cap_arg, faults=state)
+            edge_capacity_s=cap_arg, faults=state,
+            assignment=plan.assignment if multi_node else None)
         rates = np.asarray(vr.rate)
         k = int(round(float(rates.sum()) * requests_per_step))
         sentinel.observe(k, requests_per_step * n)

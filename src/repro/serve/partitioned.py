@@ -69,7 +69,7 @@ class _DeploymentBase:
     def spec(self) -> FleetSpec:  # pragma: no cover - interface
         raise NotImplementedError
 
-    def edge_capacity(self) -> float:
+    def edge_capacity(self):
         """Shared-edge VM-time budget per round (seconds; DESIGN.md §edge).
 
         ``inf`` for dedicated VMs (the paper's §III-B assumption) and for
@@ -78,12 +78,26 @@ class _DeploymentBase:
         explicit ``edge_capacity_s`` defaults to ``deadline_s``: one
         accelerator can hand out at most a round's worth of VM time per
         round.
+
+        Multi-node edges (DESIGN.md §placement) return a per-node ``(E,)``
+        numpy vector instead of a float: either ``edge_capacity_s`` is
+        itself a sequence of per-node capacities, or ``edge_nodes`` > 1
+        splits the scalar budget into that many equal nodes.
         """
-        if self.edge_capacity_s is not None:
-            return float(self.edge_capacity_s)
-        if self.dedicated_vm or self.legacy_vm_scale:
-            return float("inf")
-        return float(self.deadline_s)
+        cap = self.edge_capacity_s
+        if cap is not None and np.ndim(cap) == 1:
+            vec = np.asarray(cap, np.float64)
+            return float(vec[0]) if vec.size == 1 else vec
+        if cap is not None:
+            cap = float(cap)
+        elif self.dedicated_vm or self.legacy_vm_scale:
+            cap = float("inf")
+        else:
+            cap = float(self.deadline_s)
+        nodes = int(getattr(self, "edge_nodes", 1))
+        if nodes > 1 and np.isfinite(cap):
+            return np.full(nodes, cap / nodes)
+        return cap
 
     def device_names(self) -> list:
         """(N,) population label per device. Subclasses override with a
@@ -99,7 +113,7 @@ class _DeploymentBase:
         """The deployment's configured default scenario."""
         cap = self.edge_capacity()
         return Scenario(self.deadline_s, self.eps, self.bandwidth_hz,
-                        None if np.isinf(cap) else cap)
+                        None if np.all(np.isinf(cap)) else cap)
 
     def planner(self, policy: str = "robust_exact", **kw) -> Planner:
         """A ``Planner`` for this deployment (kw → ``PlannerConfig``).
@@ -111,7 +125,9 @@ class _DeploymentBase:
         same way; a ``solver=`` keyword wins.
         """
         cap = self.edge_capacity()
-        if not np.isinf(cap):
+        if not np.all(np.isinf(cap)):
+            if np.ndim(cap):  # per-node vector → hashable config tuple
+                cap = tuple(float(c) for c in cap)
             kw.setdefault("edge_capacity_s", cap)
         kw.setdefault("solver", getattr(self, "solver", "structured"))
         return Planner(PlannerConfig(policy=policy, **kw))
@@ -190,8 +206,11 @@ class _DeploymentBase:
         deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float64),
                                     (fleet.num_devices,))
         cap = self.edge_capacity()
+        if np.all(np.isinf(cap)):
+            cap = None
+        assignment = p.assignment if np.ndim(cap) else None
         vr = violation_report(key, fleet, p.m_sel, p.alloc, deadline, dist=dist,
-                              edge_capacity_s=None if np.isinf(cap) else cap)
+                              edge_capacity_s=cap, assignment=assignment)
         return vr, deadline
 
 
@@ -220,8 +239,12 @@ class TwoTierDeployment(_DeploymentBase):
     #: never shrink).
     dedicated_vm: bool = True
     #: shared-edge VM-time budget per round; None → ``deadline_s`` when
-    #: the edge is shared (see ``edge_capacity``)
-    edge_capacity_s: Optional[float] = None
+    #: the edge is shared (see ``edge_capacity``). A sequence gives
+    #: per-node capacities (DESIGN.md §placement).
+    edge_capacity_s: Optional[Union[float, Sequence[float]]] = None
+    #: split the (scalar) edge budget into this many equal placement
+    #: nodes; ignored when ``edge_capacity_s`` is already per-node
+    edge_nodes: int = 1
     #: DEPRECATED pre-capacity approximation: bake ``vm_time_scale = N``
     #: into the chain instead of pricing the shared edge. Kept only as a
     #: comparison baseline (see ``benchmarks/bench_edge.py``).
@@ -289,7 +312,8 @@ class MixedTwoTierDeployment(_DeploymentBase):
     area_m: float = 400.0
     seed: int = 0
     dedicated_vm: bool = True
-    edge_capacity_s: Optional[float] = None
+    edge_capacity_s: Optional[Union[float, Sequence[float]]] = None
+    edge_nodes: int = 1  # split the scalar budget into E equal nodes
     legacy_vm_scale: bool = False  # DEPRECATED static N-scaling fallback
     solver: str = "structured"  # PCCP inner-barrier path (DESIGN.md §solver)
 

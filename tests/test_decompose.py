@@ -113,6 +113,44 @@ def test_parity_optimal_slack_and_binding(spec, fleet, gains):
     assert _occupancy(fleet, shard.m_sel) <= cap * (1 + 1e-9)
 
 
+def test_parity_per_node_capacity_vector(spec, fleet, gains):
+    """Per-node (E,) capacity rows (DESIGN.md §placement): the sharded
+    host loop replays the heuristic assignment bit-for-bit and clears
+    each node's μ_e with the same bracket arithmetic — plans agree
+    leaf-wise (assignment exactly, prices within rtol) under genuinely
+    binding per-node capacities."""
+    slack = Planner(PlannerConfig(policy="robust_exact",
+                                  outer_iters=3)).plan(fleet, SC)
+    occ0 = _occupancy(fleet, slack.m_sel)
+    caps = jnp.asarray([0.3, 0.2, 0.1]) * occ0  # Σ = 0.6× slack: binds
+    mono, shard = _parity(spec, fleet, gains, SC._replace(edge_capacity_s=caps),
+                          policy="robust_exact", outer_iters=3)
+    assert np.asarray(shard.alloc.mu).shape == (3,)
+    assert bool(np.asarray(shard.feasible).all())
+    # the cap genuinely reshaped the plan (the final *recorded* μ may
+    # read 0 — at the alternation's fixed point the price is
+    # internalized in the (b, f) allocation, cf. tests/test_edge.py)
+    assert float(shard.total_energy) > float(slack.total_energy)
+    from repro.core.placement import node_loads
+    occ_e = np.asarray(node_loads(
+        jnp.take_along_axis(fleet.chain.t_vm, shard.m_sel[:, None], -1)[:, 0],
+        shard.assignment, 3))
+    assert np.all(occ_e <= np.asarray(caps) * (1 + 1e-9)), (occ_e, caps)
+
+
+def test_sharded_rejects_unsupported_vector_paths(spec, gains):
+    """The exact solve-override path is monolithic-only under a capacity
+    vector, and the Cantelli edge row is not wired into the host loop —
+    both must refuse loudly, not silently fall back to scalar."""
+    caps = (0.05, 0.03, 0.02)
+    with pytest.raises(NotImplementedError):
+        Planner(PlannerConfig(policy="optimal", edge_capacity_s=caps)
+                ).plan_sharded(spec, SC, gains=gains)
+    with pytest.raises(NotImplementedError):
+        Planner(PlannerConfig(policy="robust_exact", edge_eps=0.1)
+                ).plan_sharded(spec, SC, gains=gains)
+
+
 def test_parity_scalar_init_m(spec, fleet, gains):
     """Scalar warm starts resolve per group exactly as on the padded
     fleet (clamped to each group's own chain width)."""

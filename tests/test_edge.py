@@ -211,10 +211,14 @@ def test_config_default_capacity_applies_when_scenario_unset(fleet):
 
 
 def test_scenario_capacity_validation(fleet):
+    # (E,) per-node vectors are valid since DESIGN.md §placement; only
+    # >=2-D capacity shapes are rejected at normalization
     with pytest.raises(ValueError, match="edge_capacity_s"):
-        Scenario(D, EPS, B, jnp.full((3,), 0.1)).normalized(N)
+        Scenario(D, EPS, B, jnp.full((2, 3), 0.1)).normalized(N)
     with pytest.raises(ValueError, match="edge_capacity_s"):
         PlannerConfig(edge_capacity_s=0.0)
+    with pytest.raises(ValueError, match="edge_capacity_s"):
+        PlannerConfig(edge_capacity_s=(0.0, 0.0))
 
 
 # ------------------------------------------------------- MC ground truth

@@ -100,6 +100,29 @@ def test_closed_loop_escalation_compiles_once():
     assert c.count == 0, "a fresh fault draw must not recompile anything"
 
 
+def test_per_node_capacity_is_traced_not_a_cache_key(fleet):
+    """Multi-edge placement (DESIGN.md §placement): an (E,) capacity
+    vector — and the (K, E) batch rows — are traced operands of the same
+    compiled program; varying node budgets (including zeroing a node out,
+    i.e. removing it) must not recompile."""
+    # pccp_iters=8 is unique to this test: fresh cache entries
+    planner = Planner(PlannerConfig(policy="robust", outer_iters=2,
+                                    pccp_iters=8))
+    caps0 = jnp.asarray([0.08, 0.05, 0.03])
+    scs = [Scenario(0.15 + 0.01 * i, 0.02, 10e6, caps0) for i in range(4)]
+    before = api.plan_many_jit._cache_size()
+    _run(planner, fleet, scs)
+    assert api.plan_many_jit._cache_size() - before == 1, \
+        "4 scenarios sharing one (E,) capacity shape must be ONE compile"
+    varied = [Scenario(0.16 + 0.01 * i, 0.03, 12e6,
+                       jnp.asarray([0.06, 0.07, 0.0])) for i in range(4)]
+    with CompileCounter() as c:
+        _run(planner, fleet, varied)
+    assert c.count == 0, \
+        "value-varied node budgets (incl. an absent node) must hit the cache"
+    assert api.plan_many_jit._cache_size() - before == 1
+
+
 def test_static_deadline_variant_recompiles(fleet):
     """The anti-pattern TRC006 exists to catch: marking the deadline (a
     traced scenario knob) static recompiles per value — and proves the
