@@ -26,13 +26,14 @@ analyze:
 # Quick perf smoke: planner runtime + structured-vs-dense solver A/B +
 # PCCP convergence + scenario batching + heterogeneous fleets +
 # shared-edge capacity pricing + the group-sharded device-scaling
-# ladder. bench_runtime (runtime + solver sections), bench_plan_grid,
-# bench_hetero, bench_edge and bench_devices (devices section) write
-# their sections of the BENCH_planner.json artifact (ratio metrics). CI
-# runs this and uploads the artifact per PR. ``--only solver`` alone
-# runs just the solver A/B section (see benchmarks/run.py).
+# ladder + the trace-driven replay drill. bench_runtime (runtime +
+# solver sections), bench_plan_grid, bench_hetero, bench_edge,
+# bench_replay and bench_devices (devices section) write their sections
+# of the BENCH_planner.json artifact (ratio metrics). CI runs this and
+# uploads the artifact per PR. ``--only solver`` alone runs just the
+# solver A/B section (see benchmarks/run.py).
 bench-smoke:
-	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge,placement,faults,devices
+	$(PY) -m benchmarks.run --only runtime,solver,convergence,plan_grid,hetero,edge,placement,faults,replay,devices
 
 # Full paper-figure benchmark sweep
 bench:

@@ -1,0 +1,182 @@
+"""Trace-driven replay drill: event-driven serving under a per-node
+edge fault, with migration and regret-vs-oracle accounting (DESIGN.md
+§robustness).
+
+One reproducible scenario on the E=3 placement fleet (the bench_edge
+setup): a seeded Poisson trace is replayed through the closed loop
+while the node holding most of the plan's devices browns out to a few
+percent of its capacity mid-trace and stays degraded. Three runs share
+the trace and the sample key stream:
+
+- ``unguarded`` — the t=0 plan is frozen; the faulted node congests and
+  the final-window violation rate exceeds ε.
+- ``guarded``   — the sentinel trips on the real request stream, the
+  per-node capacity re-fit shrinks the degraded node's estimated
+  budget, and the ladder's re-plan re-runs the ``hybrid`` allocator:
+  the node's devices *migrate* (churn + per-migration energy metered)
+  and the final window returns ≤ ε.
+- ``oracle``    — re-plans against the true faulted fleet/capacity the
+  moment the schedule moves (clairvoyant); the cumulative energy +
+  violation gap to it is the regret the controller's reaction time
+  costs.
+
+The replay loop must also stay on one compiled epoch program: the
+benchmark replays a value-varied tail (different key, different fault
+depth) and records that ``sample_epoch`` compiled nothing new
+(``replay_recompile_drill`` in ``make analyze`` enforces the same pin).
+"""
+from __future__ import annotations
+
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import update_artifact
+
+N_DEVICES = 8
+DEADLINE, EPS, BANDWIDTH = 0.2, 0.04, 30e6
+#: per-node shares of the slack plan's occupancy (bench_edge's recipe)
+SHARES = (0.2, 0.1, 0.05)
+EPOCHS = 40
+RATE_PER_EPOCH = 96.0
+FAULT = dict(start=10, depth=0.03)  # brownout to 3% capacity, held to the end
+
+
+def run_replay() -> list:
+    from repro.configs.paper_tables import mixed_spec
+    from repro.core import Planner, PlannerConfig, Scenario
+    from repro.core.resource import select_point
+    from repro.serve import replay as rp
+    from repro.serve.closedloop import GuardConfig
+    from repro.serve.faults import brownout
+    from repro.serve.guard import SentinelConfig
+
+    fleet = mixed_spec(N_DEVICES).build(jax.random.PRNGKey(11))
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                    pccp_iters=6))
+    slack = planner.plan(fleet, Scenario(DEADLINE, EPS, BANDWIDTH))
+    occ0 = float(select_point(fleet, slack.m_sel).t_vm.sum())
+    caps = jnp.asarray(SHARES) * occ0
+    sc = Scenario(DEADLINE, EPS, BANDWIDTH, caps)
+
+    p0 = planner.plan(fleet, sc)
+    a0 = np.asarray(p0.assignment)
+    node = int(np.argmax(np.bincount(a0, minlength=caps.shape[0])))
+    on_node = int((a0 == node).sum())
+    sched = brownout(EPOCHS, start=FAULT["start"],
+                     length=EPOCHS - FAULT["start"], depth=FAULT["depth"],
+                     node=node, num_nodes=caps.shape[0])
+    trace = rp.poisson_trace(rate_per_epoch=RATE_PER_EPOCH, epochs=EPOCHS,
+                             epoch_s=1.0, num_devices=N_DEVICES, seed=7)
+    guard = GuardConfig(
+        sentinel=SentinelConfig(window=256, alpha=1e-3, min_count=48))
+    key = jax.random.PRNGKey(5)
+
+    rows: list = []
+    results = {}
+    for name, kw in (("unguarded", dict(guarded=False)),
+                     ("guarded", dict(guarded=True)),
+                     ("oracle", dict(oracle=True))):
+        t0 = time.perf_counter()
+        r = rp.replay(fleet, sc, sched, planner, trace, key, guard=guard,
+                      **kw)
+        us = (time.perf_counter() - t0) * 1e6 / EPOCHS
+        results[name] = r
+        rows.append((
+            f"replay/{name}", us,
+            f"final_rate={r.final_window_rate:.4f};"
+            f"viol={r.total_violations};replans={r.replans};"
+            f"migrations={r.migrations};"
+            f"mig_energy_j={r.migration_energy_j:.4e}"))
+
+    ung, grd, orc = results["unguarded"], results["guarded"], results["oracle"]
+    regret = rp.regret_curves(grd, orc)
+
+    # zero-recompile pin: replay a value-varied tail (new key, new depth)
+    # — every traced program must already be compiled
+    cache0 = rp.sample_epoch._cache_size()
+    sched2 = brownout(EPOCHS, start=FAULT["start"],
+                      length=EPOCHS - FAULT["start"], depth=0.5 * FAULT["depth"],
+                      node=node, num_nodes=caps.shape[0])
+    rp.replay(fleet, sc, sched2, planner, trace, jax.random.PRNGKey(6),
+              guarded=False, guard=guard)
+    zero_recompiles = rp.sample_epoch._cache_size() == cache0
+
+    payload = {
+        "epochs": EPOCHS,
+        "rate_per_epoch": RATE_PER_EPOCH,
+        "requests": trace.num_requests,
+        "trace_capacity": trace.capacity,
+        "eps": EPS,
+        "deadline_s": DEADLINE,
+        "fault": dict(FAULT, node=node, devices_on_node=on_node),
+        "unguarded": {
+            "final_window_rate": ung.final_window_rate,
+            "violations": ung.total_violations,
+            "energy_j": ung.total_energy_j,
+        },
+        "guarded": {
+            "final_window_rate": grd.final_window_rate,
+            "violations": grd.total_violations,
+            "energy_j": grd.total_energy_j,
+            "replans": grd.replans,
+            "churn": grd.churn,
+            "migrations": grd.migrations,
+            "migration_energy_j": grd.migration_energy_j,
+        },
+        "oracle": {
+            "violations": orc.total_violations,
+            "energy_j": orc.total_energy_j,
+            "replans": orc.replans,
+            "migrations": orc.migrations,
+        },
+        "regret": {
+            "final_energy_j": regret["final_energy_j"],
+            "final_violations": regret["final_violations"],
+            "energy_curve_j": regret["energy_j"].tolist(),
+            "violation_curve": regret["violations"].tolist(),
+        },
+        "unguarded_final_gt_eps": bool(ung.final_window_rate > EPS),
+        "guarded_final_leq_eps": bool(grd.final_window_rate <= EPS),
+        "guarded_migrated": bool(grd.migrations > 0),
+        "zero_recompiles": bool(zero_recompiles),
+    }
+    update_artifact("replay", payload)
+
+    if not payload["guarded_final_leq_eps"]:
+        warnings.warn(
+            f"guarded replay ended above eps: "
+            f"{grd.final_window_rate:.4f} > {EPS}", RuntimeWarning,
+            stacklevel=2)
+    if not payload["unguarded_final_gt_eps"]:
+        warnings.warn(
+            "fault too weak: unguarded replay ended back under eps "
+            f"({ung.final_window_rate:.4f} <= {EPS})", RuntimeWarning,
+            stacklevel=2)
+    if not zero_recompiles:
+        warnings.warn("replay recompiled on a value-varied tail",
+                      RuntimeWarning, stacklevel=2)
+    rows.append((
+        "replay/headline", 0.0,
+        f"unguarded_final={ung.final_window_rate:.4f}>eps={EPS};"
+        f"guarded_final={grd.final_window_rate:.4f};"
+        f"migrations={grd.migrations};"
+        f"regret_viol={regret['final_violations']};"
+        f"zero_recompiles={zero_recompiles}"))
+    return rows
+
+
+SECTIONS = {"replay": run_replay}
+
+
+def run() -> list:
+    return run_replay()
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

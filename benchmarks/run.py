@@ -37,6 +37,11 @@
 #   bench_faults        — closed-loop fault drill: guarded vs unguarded
 #                         serving through an injected incident (DESIGN.md
 #                         §robustness; recovery/churn → BENCH_planner.json)
+#   bench_replay        — trace-driven replay: event-driven serving under
+#                         a per-node brownout on the E=3 placement, with
+#                         sentinel-triggered migration + regret vs a
+#                         schedule-aware oracle (→ BENCH_planner.json
+#                         §replay)
 #   bench_two_tier      — beyond-paper: planner over zoo architectures
 #   bench_channel       — beyond-paper: channel uncertainty + hetero fleet
 #   bench_kernels       — Pallas kernels vs references
@@ -60,6 +65,7 @@ MODULES = [
     "bench_hetero",
     "bench_edge",
     "bench_faults",
+    "bench_replay",
     "bench_two_tier",
     "bench_channel",
     "bench_kernels",
@@ -75,6 +81,7 @@ MODULE_SECTIONS = {
     "bench_runtime": ("runtime", "solver"),
     "bench_devices": ("fig12", "devices"),
     "bench_edge": ("edge", "placement"),
+    "bench_replay": ("replay",),
 }
 
 

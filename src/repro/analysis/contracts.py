@@ -26,6 +26,9 @@ TRACED_PARAM_NAMES = frozenset({
     # multi-edge placement operands (core.placement): device→node
     # assignment vectors, per-device occupancy and per-node capacities
     "assignment", "occ", "caps",
+    # trace-replay epoch operands (serve.replay): padded request batches
+    # and the demand normalizer — value-varied per epoch, one program
+    "device_ids", "valid", "rounds",
 })
 
 # Parameter names that are, by contract, STATIC wherever they appear on
@@ -72,6 +75,9 @@ ANALYSIS_SURFACE = (
     ("core.placement", "plan_duality_gap"),
     ("core.resource", "allocate_ipm"),
     ("serve.closedloop", "run_closed_loop"),
+    ("serve.replay", "replay"),
+    ("serve.replay", "replay_engine"),
+    ("serve.replay", "regret_curves"),
     ("serve.guard", "contingency_plans"),
     ("serve.guard", "pick_contingency"),
     ("serve.guard", "plan_margin"),

@@ -409,5 +409,43 @@ def run_audit(n: int = 3) -> Dict[str, Any]:
             "value-varied per-node capacity repeat — the capacity vector "
             "or assignment leaked into a static")
 
+    # replay drill: the trace-driven epoch sampler pads request batches
+    # to a static capacity, so a value-varied epoch — different request
+    # count/devices, different key, different (E,) fault state — must
+    # reuse the one compiled program.
+    from repro.serve.faults import brownout, state_at
+    from repro.serve.replay import sample_epoch
+
+    rplan = planner.plan(fleet, sc._replace(edge_capacity_s=caps0))
+    rsched = brownout(4, start=1, length=2, depth=0.5, node=1, num_nodes=3)
+    dev = jnp.asarray([0, 1, 2, 0, 1, 2, 0, 1], jnp.int32)
+    valid = jnp.arange(8) < 6
+    key = jax.random.PRNGKey(9)
+    # the value-varied operands are built eagerly BEFORE the counter —
+    # the drill pins the epoch program, not jnp.roll's dispatch cache
+    key2 = jax.random.fold_in(key, 1)
+    dev2 = jnp.roll(dev, 1)
+    valid2 = jnp.arange(8) < 4
+    caps2 = caps0 * 0.7
+    state0, state1 = state_at(rsched, 0), state_at(rsched, 1)
+    sample_epoch(key, fleet, rplan.m_sel, rplan.alloc, sc.deadline, dev,
+                 valid, 2.0, edge_capacity_s=caps0, faults=state0,
+                 assignment=rplan.assignment)  # warm
+    with CompileCounter() as cr:
+        out = sample_epoch(
+            key2, fleet, rplan.m_sel, rplan.alloc, sc.deadline, dev2,
+            valid2, 3.0, edge_capacity_s=caps2, faults=state1,
+            assignment=rplan.assignment)
+        jax.block_until_ready(out.total_s)
+    report["replay_recompile_drill"] = {
+        "ok": cr.count == 0,
+        "backend_compiles_on_value_varied_repeat": cr.count,
+    }
+    if cr.count:
+        report["problems"].append(
+            f"replay_recompile_drill: {cr.count} backend compiles on a "
+            "value-varied replay epoch — a trace batch leaf (device_ids/"
+            "valid/rounds) or fault state leaked into a static")
+
     report["ok"] = not report["problems"]
     return report

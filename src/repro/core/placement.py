@@ -36,8 +36,8 @@ import numpy as np
 
 __all__ = [
     "ASSIGN_FNS", "assign_devices", "assign_devices_host",
-    "available_assignments", "node_loads", "duality_gap",
-    "plan_duality_gap", "edge_sigma",
+    "available_assignments", "assignment_churn", "migration_energy",
+    "node_loads", "duality_gap", "plan_duality_gap", "edge_sigma",
 ]
 
 #: Stand-in capacity for uncapacitated (∞) nodes inside utilization
@@ -329,6 +329,38 @@ def node_loads(occ, assignment, num_nodes: int):
     return jax.ops.segment_sum(jnp.asarray(occ, jnp.float64),
                                jnp.asarray(assignment, jnp.int32),
                                num_segments=num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Migration accounting (workload replay: DESIGN.md §robustness)
+# ---------------------------------------------------------------------------
+
+
+def assignment_churn(a_old, a_new) -> jnp.ndarray:
+    """Number of devices whose node changed between two assignments
+    (traced, int32 scalar). The replay's ladder charges each such move —
+    a migrated device's session state must be re-established on the new
+    node before it serves again."""
+    a_old = jnp.asarray(a_old, jnp.int32)
+    a_new = jnp.asarray(a_new, jnp.int32)
+    if a_old.shape != a_new.shape:
+        raise ValueError(
+            f"assignment shapes differ: {a_old.shape} vs {a_new.shape}")
+    return jnp.sum((a_old != a_new).astype(jnp.int32))
+
+
+def migration_energy(a_old, a_new, e_migrate) -> jnp.ndarray:
+    """Total energy of a re-plan's migrations: Σ over moved devices of
+    ``e_migrate[n]`` (traced, float64 scalar).
+
+    ``e_migrate`` is the per-device cost of re-establishing its session
+    on a new node — the replay uses one extra upload of the offload
+    payload, t_off·p_tx at the incumbent partition, so a device with a
+    bigger activation payload or a worse channel is costlier to move."""
+    a_old = jnp.asarray(a_old, jnp.int32)
+    a_new = jnp.asarray(a_new, jnp.int32)
+    cost = jnp.asarray(e_migrate, jnp.float64)
+    return jnp.sum(jnp.where(a_old != a_new, cost, 0.0))
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.api import Planner, Scenario
 from repro.core.blocks import Fleet
 from repro.core.montecarlo import violation_report
+from repro.core.placement import assignment_churn
 from repro.core.planner import Plan, plan_fixed_partition
 from repro.core.resource import select_point
 from repro.core import channel, energy
@@ -85,6 +86,8 @@ class ClosedLoopResult:
     churn: int  # Σ hamming(m_sel) over installations
     first_trip_step: Optional[int]
     recovery_steps: Optional[int]  # first trip → window back ≤ ε
+    #: Σ devices whose node changed over installations (multi-node only)
+    migrations: int = 0
 
     @property
     def peak_window_rate(self) -> float:
@@ -136,6 +139,41 @@ def _refit_state(loc_hat: float, vm_hat: float) -> FaultState:
         vm_mean_scale=s, vm_var_scale=s**2)
 
 
+def _refit_node_scales(cap_hat, t_vm_pred, obs_vm, assignment,  # analyze: ok(TRC002,TRC003): host EWMA over already-materialized telemetry
+                       num_nodes: int, ewma: float):
+    """Observable-only per-node capacity re-fit (DESIGN.md §robustness).
+
+    Each node's dilation ratio r_e = Σ_{n: a_n=e} obs_vm / Σ pred_vm
+    mixes two causes the controller must separate: a *tier-common* VM
+    slowdown (co-tenant drift — the scalar ``vm_hat``'s job) and a
+    *node-local* capacity fade (brownout/failure — this estimator's
+    job). The least-dilated exercised node is taken as the tier
+    baseline, so only the **relative** dilation r_e / min_r is
+    attributed to node e's capacity: ŝ_e ← EWMA(min_r / r_e), clamped
+    to (1e-3, 1]. Unexercised nodes (no devices assigned, or the plan
+    keeps their t_vm at 0) are *held* — the controller must not forget
+    a node is degraded just because it migrated everything off it;
+    recovery is observed only by re-exercising the node. With E = 1
+    there is no relative signal and the estimate stays 1 (the scalar
+    ``vm_hat`` already owns whole-edge dilation).
+    """
+    pred = np.zeros(num_nodes)
+    obs = np.zeros(num_nodes)
+    np.add.at(pred, assignment, np.asarray(t_vm_pred, float))
+    np.add.at(obs, assignment, np.asarray(obs_vm, float))
+    exercised = pred > 1e-9
+    out = np.array(cap_hat, float)
+    if int(exercised.sum()) < 2:
+        return out  # no cross-node baseline to compare against
+    r = np.where(exercised, obs / np.maximum(pred, 1e-12), np.inf)
+    base = float(np.min(r[exercised]))
+    for e in range(num_nodes):
+        if exercised[e]:
+            tgt = min(max(base / max(r[e], 1e-12), 1e-3), 1.0)
+            out[e] = (1.0 - ewma) * out[e] + ewma * tgt
+    return out
+
+
 def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; the jit boundary is violation_report/plan_fixed_partition inside
     fleet: Fleet,
     scenario: Scenario,
@@ -165,9 +203,13 @@ def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; th
     sentinel = ViolationSentinel(eps_scalar, guard.sentinel)
 
     loc_hat = vm_hat = 1.0  # per-tier time-scale estimates (re-fit moments)
+    # per-node capacity-scale estimates (multi-node edge only): the
+    # ladder re-plans against caps × ĉ, so a degraded node looks small
+    # to the allocator and the hybrid strategy migrates its devices
+    cap_hat = np.ones(cap_np.shape[0]) if multi_node else None
     rung = RUNG_NONE
     last_action = -(10**9)
-    replans = churn = 0
+    replans = churn = migrations = 0
     first_trip: Optional[int] = None
     recovery: Optional[int] = None
 
@@ -195,6 +237,10 @@ def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; th
             loc_hat, vm_hat, t_loc, t_vm,
             np.asarray(vr.mean_local, float), np.asarray(vr.mean_vm, float),
             guard.ewma)
+        if multi_node:
+            cap_hat = _refit_node_scales(
+                cap_hat, t_vm, np.asarray(vr.mean_vm, float),
+                np.asarray(plan.assignment), cap_np.shape[0], guard.ewma)
 
         trip = sentinel.tripped()
         step_rate[t] = float(rates.mean())
@@ -207,16 +253,26 @@ def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; th
             last_action = t
             rung = min(rung + 1, guard.max_rung)
             fleet_hat = apply_faults(fleet, _refit_state(loc_hat, vm_hat))
+            if multi_node:
+                # re-plan against the re-fit capacities: a degraded node
+                # looks small, so the allocator migrates its devices
+                cap_fit = sc.edge_capacity_s * jnp.asarray(cap_hat)
+                sc_fit = sc._replace(edge_capacity_s=cap_fit)
+            else:
+                cap_fit, sc_fit = cap_arg, sc
             if rung == RUNG_PRICE:
                 new = plan_fixed_partition(
-                    fleet_hat, plan.m_sel, sc.deadline, sc.eps, sc.B, cap_arg)
+                    fleet_hat, plan.m_sel, sc.deadline, sc.eps, sc.B, cap_fit)
             elif rung == RUNG_REPLAN:
-                new = planner.plan(fleet_hat, sc, init_m=plan.m_sel,
+                new = planner.plan(fleet_hat, sc_fit, init_m=plan.m_sel,
                                    incumbent=plan)
             else:
                 new = pick_contingency(contingencies, fleet_hat, sc.deadline,
                                        sc.eps, incumbent=plan)
             churn += int(np.sum(np.asarray(new.m_sel) != np.asarray(plan.m_sel)))
+            if multi_node:
+                migrations += int(assignment_churn(plan.assignment,
+                                                   new.assignment))
             replans += 1
             plan = new
             sentinel.reset()  # the new plan starts with a clean record
@@ -237,4 +293,5 @@ def run_closed_loop(  # analyze: ok(TRC001,TRC002,TRC003): host serving loop; th
     return ClosedLoopResult(
         step_rate=step_rate, window_rate=window_rate, tripped=tripped_log,
         rung=rung_log, energy=energy_log, replans=replans, churn=churn,
-        first_trip_step=first_trip, recovery_steps=recovery)
+        first_trip_step=first_trip, recovery_steps=recovery,
+        migrations=migrations)

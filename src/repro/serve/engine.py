@@ -26,6 +26,9 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 16
     deadline_s: float = 1.0
+    #: arrival time on the serving clock (workload replay stamps it;
+    #: ad-hoc queues default to 0, preserving pure EDF-then-uid order)
+    arrival_s: float = 0.0
     output: List[int] = field(default_factory=list)
 
 
@@ -39,12 +42,30 @@ class EngineStats:
     request_uids: List[int] = field(default_factory=list)
     completion_times: List[float] = field(default_factory=list)
     deadline_flags: List[bool] = field(default_factory=list)
+    #: completion-stream index of the current observation window's start
+    #: (``mark_window`` advances it; replay marks one window per epoch)
+    window_start: int = 0
 
     def record_completion(self, uid: int, elapsed_s: float,
                           deadline_s: float) -> None:
         self.request_uids.append(uid)
         self.completion_times.append(elapsed_s)
         self.deadline_flags.append(elapsed_s <= deadline_s)
+
+    def mark_window(self) -> None:
+        """Start a new observation window at the current stream position
+        — the per-window violation counts in :meth:`summary` (and
+        :meth:`window_counts`) cover completions recorded after the most
+        recent mark. The workload replay marks once per epoch so the
+        sentinel feed is an explicit engine-side count, not a host-side
+        re-derivation from the raw stream."""
+        self.window_start = len(self.deadline_flags)
+
+    def window_counts(self) -> Tuple[int, int]:
+        """(violations, total) over the current window — exactly the
+        shape ``ViolationSentinel.observe`` consumes."""
+        flags = self.deadline_flags[self.window_start:]
+        return sum(1 for f in flags if not f), len(flags)
 
     def summary(self) -> Dict[str, float]:
         # The first decode step is the warmup drop (jit dispatch +
@@ -53,7 +74,11 @@ class EngineStats:
         warm = np.asarray(self.decode_times[1:], float)
         p = np.asarray(self.prefill_times, float)
         met = np.asarray(self.deadline_flags, bool)
+        done = np.asarray(self.completion_times, float)
         nan = float("nan")
+        q50, q95, q99 = (np.percentile(done, (50.0, 95.0, 99.0))
+                         if done.size else (nan, nan, nan))
+        win_viol, win_total = self.window_counts()
         return {
             "prefill_mean_s": float(p.mean()) if p.size else nan,
             "decode_mean_s": float(warm.mean()) if warm.size else nan,
@@ -62,6 +87,12 @@ class EngineStats:
             "prefill_samples": int(p.size),
             "requests_completed": len(self.completion_times),
             "deadline_met_rate": float(met.mean()) if met.size else nan,
+            "completion_p50_s": float(q50),
+            "completion_p95_s": float(q95),
+            "completion_p99_s": float(q99),
+            "deadline_violations": int(met.size - met.sum()),
+            "window_violations": win_viol,
+            "window_requests": win_total,
         }
 
 
@@ -78,15 +109,19 @@ class ServingEngine:
     def schedule(self, queue: List[Request]) -> List[List[Request]]:
         """Greedy deadline-aware batching (EDF order, fixed max batch).
 
-        Deadline ties break by ``uid`` so batch composition is a function
-        of the queue's *contents*, not its arrival order (Python's sort is
-        stable, so equal deadlines would otherwise keep insertion order).
+        Deadline ties break by **arrival time first** (FIFO — a replayed
+        burst of equal-deadline requests must not starve early arrivals
+        behind later ones that happen to carry smaller uids), then by
+        ``uid`` so batch composition is a function of the queue's
+        *contents*, not its Python insertion order (Python's sort is
+        stable, so equal (deadline, arrival) pairs would otherwise keep
+        insertion order).
         """
-        ordered = sorted(queue, key=lambda r: (r.deadline_s, r.uid))
+        ordered = sorted(queue, key=lambda r: (r.deadline_s, r.arrival_s, r.uid))
         return [ordered[i : i + self.max_batch] for i in range(0, len(ordered), self.max_batch)]
 
     # -- execution ---------------------------------------------------------
-    def _pad_prompts(self, batch: List[Request]) -> np.ndarray:
+    def _pad_prompts(self, batch: List[Request]) -> np.ndarray:  # analyze: ok(TRC002): prompts are host int32 arrays by Request contract
         s = max(len(r.prompt) for r in batch)
         out = np.zeros((len(batch), s), np.int32)
         for i, r in enumerate(batch):
@@ -109,7 +144,7 @@ class ServingEngine:
         self.stats.prefill_times.append(time.perf_counter() - t0)
         return logits, cache, s
 
-    def decode_loop(self, batch: List[Request], logits, cache, start_pos: int,
+    def decode_loop(self, batch: List[Request], logits, cache, start_pos: int,  # analyze: ok(TRC001,TRC003): host serving loop — tokens are materialized per step by design (block_until_ready)
                     steps: Optional[int] = None,
                     t_start: Optional[float] = None):
         """``t_start`` is the group's wall-clock origin (its prefill
@@ -134,7 +169,7 @@ class ServingEngine:
                             r.uid, now - t_start, r.deadline_s)
         return batch
 
-    def _validate_queue(self, queue: List[Request]) -> None:
+    def _validate_queue(self, queue: List[Request]) -> None:  # analyze: ok(TRC003): host-side request validation; Request fields are python/np by contract
         if not queue:
             raise ValueError("empty request queue — nothing to serve")
         for r in queue:

@@ -13,7 +13,13 @@ driven through reproducible incidents:
   spikes of the paper, but *clustered in time*);
 - **channel fades** — multiplicative dips in the uplink gain;
 - **edge-capacity brownouts** — the shared accelerator's VM-time budget
-  shrinks for a window (maintenance, preemption by a higher tier).
+  shrinks for a window (maintenance, preemption by a higher tier);
+- **per-node faults** (DESIGN.md §placement) — on a multi-node edge the
+  capacity scale generalizes from a scalar to an ``(E,)`` vector:
+  ``brownout(node=e)`` fades ONE node's budget and :func:`node_failure`
+  zeroes it outright (capacity 0 ⇒ absent node, so the placement layer
+  must migrate that node's devices). Scalar profiles stay the default
+  and are bit-identical to the pre-per-node code paths.
 
 Everything is a pure pytree of traced leaves:
 
@@ -39,7 +45,8 @@ from repro.core.blocks import Fleet
 __all__ = [
     "FaultState", "FaultSchedule", "identity_schedule", "moment_drift",
     "straggler_burst", "random_bursts", "channel_fade", "brownout",
-    "compose", "state_at", "apply_faults", "faulted_capacity",
+    "node_failure", "compose", "state_at", "apply_faults",
+    "faulted_capacity",
 ]
 
 
@@ -57,7 +64,10 @@ class FaultState(NamedTuple):
     vm_mean_scale: jnp.ndarray   # × mean VM time
     vm_var_scale: jnp.ndarray    # × VM time variance
     gain_scale: jnp.ndarray      # × uplink channel gain (fade < 1)
-    cap_scale: jnp.ndarray       # × shared-edge capacity (brownout < 1)
+    #: × shared-edge capacity (brownout < 1). Scalar for the single
+    #: shared edge; an ``(E,)`` vector fades per NODE on a multi-node
+    #: edge (DESIGN.md §placement) — 0 marks a failed/absent node.
+    cap_scale: jnp.ndarray
     straggler_prob: jnp.ndarray  # P{a VM execution straggles}
     straggler_extra_s: jnp.ndarray  # mean extra latency of a straggler
     straggler_cv: jnp.ndarray    # cv of the (Pareto) straggler extra
@@ -67,6 +77,12 @@ class FaultState(NamedTuple):
         one = jnp.asarray(1.0, jnp.float64)
         zero = jnp.asarray(0.0, jnp.float64)
         return cls(one, one, one, one, one, one, zero, zero, one)
+
+    @property
+    def edge_scale(self) -> jnp.ndarray:
+        """Alias for :attr:`cap_scale` — the edge-capacity fade, scalar
+        or per-node ``(E,)``."""
+        return self.cap_scale
 
 
 class FaultSchedule(NamedTuple):
@@ -86,6 +102,12 @@ class FaultSchedule(NamedTuple):
     @property
     def steps(self) -> int:
         return self.vm_mean_scale.shape[0]
+
+    @property
+    def edge_scale(self) -> jnp.ndarray:
+        """Alias for :attr:`cap_scale` — ``(T,)`` for the single shared
+        edge, ``(T, E)`` for per-node fades."""
+        return self.cap_scale
 
 
 def _full(steps: int, value: float) -> jnp.ndarray:
@@ -165,18 +187,67 @@ def channel_fade(steps: int, *, start: int, length: int,
         gain_scale=jnp.where(w, depth, 1.0))
 
 
-def brownout(steps: int, *, start: int, length: int,
-             depth: float) -> FaultSchedule:
-    """Shared-edge capacity shrinks to ``depth`` × nominal in the window."""
+def brownout(steps: int, *, start: int, length: int, depth: float,
+             node: int = None, num_nodes: int = None) -> FaultSchedule:
+    """Shared-edge capacity shrinks to ``depth`` × nominal in the window.
+
+    ``node=None`` (default) fades the single shared-edge budget — the
+    scalar ``(T,)`` profile, bit-identical to the pre-per-node path.
+    ``node=e`` (with ``num_nodes=E``) fades only node ``e`` of a
+    multi-node edge: ``cap_scale`` becomes ``(T, E)``, columns other
+    than ``e`` stay 1, and :func:`state_at` yields ``(E,)`` states that
+    multiply elementwise into an ``(E,)`` ``Scenario.edge_capacity_s``.
+    """
     w = _window(steps, start, length)
-    return identity_schedule(steps)._replace(
-        cap_scale=jnp.where(w, depth, 1.0))
+    if node is None:
+        return identity_schedule(steps)._replace(
+            cap_scale=jnp.where(w, depth, 1.0))
+    if num_nodes is None:
+        raise ValueError("brownout(node=...) needs num_nodes=E")
+    if not 0 <= node < num_nodes:
+        raise ValueError(
+            f"node must lie in [0, {num_nodes}), got {node}")
+    col = jnp.arange(num_nodes) == node
+    cap = jnp.where(w[:, None] & col[None, :], depth, 1.0)
+    return identity_schedule(steps)._replace(cap_scale=cap)
+
+
+def node_failure(steps: int, *, node: int, num_nodes: int, start: int,
+                 length: int = None) -> FaultSchedule:
+    """Hard failure of one edge node: its capacity drops to **0** —
+    the placement layer's absent-node convention (DESIGN.md §placement),
+    so every device assigned there congests unboundedly until the
+    ladder migrates it. ``length=None`` fails the node for the rest of
+    the horizon (crash-stop, no recovery)."""
+    if length is None:
+        length = steps - start
+    return brownout(steps, start=start, length=length, depth=0.0,
+                    node=node, num_nodes=num_nodes)
+
+
+def _compose_caps(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Multiply capacity profiles, unioning per-node windows: a scalar
+    ``(T,)`` profile broadcasts over every node of a ``(T, E)`` one (a
+    whole-edge brownout fades ALL nodes), and two ``(T, E)`` profiles
+    must agree on E."""
+    if a.ndim == b.ndim:
+        if a.ndim == 2 and a.shape[1] != b.shape[1]:
+            raise ValueError(
+                f"per-node cap profiles must share a node count: "
+                f"{a.shape[1]} != {b.shape[1]}")
+        return a * b
+    if a.ndim < b.ndim:
+        a = a[:, None]
+    else:
+        b = b[:, None]
+    return a * b
 
 
 def compose(*schedules: FaultSchedule) -> FaultSchedule:
     """Combine schedules: scales multiply; straggler episodes combine as
     independent events (p = 1 − Π(1−pᵢ)) with the probability-weighted
-    mean extra and the max cv."""
+    mean extra and the max cv. Capacity profiles union per node: a
+    scalar profile fades every node of an ``(E,)``-wide one."""
     if not schedules:
         raise ValueError("compose needs at least one schedule")
     steps = schedules[0].steps
@@ -196,7 +267,7 @@ def compose(*schedules: FaultSchedule) -> FaultSchedule:
             vm_mean_scale=out.vm_mean_scale * s.vm_mean_scale,
             vm_var_scale=out.vm_var_scale * s.vm_var_scale,
             gain_scale=out.gain_scale * s.gain_scale,
-            cap_scale=out.cap_scale * s.cap_scale,
+            cap_scale=_compose_caps(out.cap_scale, s.cap_scale),
             straggler_prob=p,
             straggler_extra_s=extra,
             straggler_cv=jnp.maximum(out.straggler_cv, s.straggler_cv),
@@ -205,7 +276,14 @@ def compose(*schedules: FaultSchedule) -> FaultSchedule:
 
 
 def state_at(schedule: FaultSchedule, t) -> FaultState:
-    """The :class:`FaultState` at step ``t`` (``t`` may be traced)."""
+    """The :class:`FaultState` at step ``t`` (``t`` may be traced).
+
+    Out-of-range steps clamp to the boundary states (jax gather
+    semantics): ``t >= steps`` holds the final state — so a replay that
+    outruns its schedule serves under the last fault regime, never a
+    silently-reset identity — and ``t < 0`` is the first state.
+    """
+    t = jnp.clip(jnp.asarray(t), 0, schedule.steps - 1)
     return FaultState(*(jnp.asarray(leaf)[t] for leaf in schedule))
 
 
@@ -231,7 +309,10 @@ def apply_faults(fleet: Fleet, state: FaultState) -> Fleet:
 
 
 def faulted_capacity(edge_capacity_s, state: FaultState):
-    """Shared-edge capacity under a brownout (``None`` stays ``None``)."""
+    """Shared-edge capacity under a brownout (``None`` stays ``None``).
+    Per-node: an ``(E,)`` capacity vector × an ``(E,)`` (or scalar)
+    ``cap_scale`` fades node-wise; a faded-to-0 node is *absent* by the
+    placement convention."""
     if edge_capacity_s is None:
         return None
     return jnp.asarray(edge_capacity_s, jnp.float64) * state.cap_scale

@@ -123,6 +123,14 @@ class ViolationSentinel:
             self._k -= k0
             self._n -= n0
 
+    def observe_outcomes(self, met_flags) -> None:
+        """Feed a batch of per-request deadline outcomes as *met?* bools
+        — the shape ``EngineStats.deadline_flags`` (and each replay
+        window of it) records. An empty batch is a no-op."""
+        flags = [bool(f) for f in met_flags]
+        if flags:
+            self.observe(sum(1 for f in flags if not f), len(flags))
+
     @property
     def counts(self):
         return self._k, self._n

@@ -409,7 +409,7 @@ class MixedTwoTierDeployment(_DeploymentBase):
         return plan, spec
 
 
-def measured_chain(base: BlockChain, decode_stats: Dict[str, float],
+def measured_chain(base: BlockChain, decode_stats: Dict[str, float],  # analyze: ok(TRC001): decode_stats is EngineStats.summary()'s host dict by contract
                    blocks_scale: Optional[np.ndarray] = None) -> BlockChain:
     """Fold online engine measurements into a chain (paper §IV online path).
 

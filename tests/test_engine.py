@@ -15,8 +15,9 @@ def _engine(max_batch=2):
                          max_batch=max_batch)
 
 
-def _req(uid, deadline):
-    return Request(uid=uid, prompt=np.zeros(4, np.int32), deadline_s=deadline)
+def _req(uid, deadline, arrival=0.0):
+    return Request(uid=uid, prompt=np.zeros(4, np.int32), deadline_s=deadline,
+                   arrival_s=arrival)
 
 
 def test_schedule_breaks_deadline_ties_by_uid():
@@ -36,6 +37,24 @@ def test_schedule_is_arrival_order_independent():
     for perm in ([3, 2, 1, 0], [2, 0, 3, 1], [1, 3, 0, 2]):
         shuffled = [reqs[i] for i in perm]
         assert [[r.uid for r in b] for b in eng.schedule(shuffled)] == want
+
+
+def test_schedule_burst_fifo_regression():
+    """A replayed burst of equal-deadline requests: arrival time breaks
+    the tie BEFORE uid, so early arrivals are never starved behind later
+    ones that happen to carry smaller uids (the old sort key was
+    (deadline, uid) — this burst is its counterexample)."""
+    eng = _engine()
+    reqs = [_req(9, 0.5, 0.00), _req(7, 0.5, 0.01),
+            _req(5, 0.5, 0.02), _req(3, 0.5, 0.03)]
+    batches = eng.schedule(reqs)
+    assert [[r.uid for r in b] for b in batches] == [[9, 7], [5, 3]]
+    # uid still decides equal (deadline, arrival) pairs
+    reqs = [_req(4, 0.5, 0.01), _req(2, 0.5, 0.01), _req(8, 0.5, 0.00)]
+    assert [[r.uid for r in b] for b in eng.schedule(reqs)] == [[8, 2], [4]]
+    # ...and deadline still dominates arrival
+    reqs = [_req(0, 0.9, 0.00), _req(1, 0.1, 0.05)]
+    assert [[r.uid for r in b] for b in eng.schedule(reqs)] == [[1, 0]]
 
 
 def test_schedule_edf_order_dominates_uid():
@@ -60,6 +79,42 @@ def test_record_completion_scores_deadline():
     s = st.summary()
     assert s["requests_completed"] == 3
     np.testing.assert_allclose(s["deadline_met_rate"], 2 / 3)
+
+
+def test_summary_completion_percentiles():
+    st = EngineStats()
+    times = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+    for uid, t in enumerate(times):
+        st.record_completion(uid, t, 0.55)
+    s = st.summary()
+    np.testing.assert_allclose(s["completion_p50_s"],
+                               np.percentile(times, 50.0))
+    np.testing.assert_allclose(s["completion_p95_s"],
+                               np.percentile(times, 95.0))
+    np.testing.assert_allclose(s["completion_p99_s"],
+                               np.percentile(times, 99.0))
+    assert s["deadline_violations"] == 5  # 0.6 … 1.0 missed
+    # empty stats: percentiles are NaN, never a fake zero
+    e = EngineStats().summary()
+    assert np.isnan(e["completion_p50_s"]) and np.isnan(e["completion_p99_s"])
+
+
+def test_window_counts_cover_only_the_current_window():
+    """mark_window starts a fresh observation window — the sentinel feed
+    (window_counts) sees completions after the most recent mark only,
+    while the cumulative summary keeps the whole stream."""
+    st = EngineStats()
+    st.record_completion(0, 0.9, 0.5)  # missed, pre-window
+    st.mark_window()
+    assert st.window_counts() == (0, 0)
+    st.record_completion(1, 0.4, 0.5)  # met
+    st.record_completion(2, 0.8, 0.5)  # missed
+    assert st.window_counts() == (1, 2)
+    s = st.summary()
+    assert s["window_violations"] == 1 and s["window_requests"] == 2
+    assert s["deadline_violations"] == 2  # cumulative keeps the first miss
+    st.mark_window()
+    assert st.window_counts() == (0, 0)
 
 
 def test_summary_empty_reports_nan_not_zero():

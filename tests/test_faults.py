@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st
 
 from repro.configs.paper_tables import alexnet_fleet
 from repro.core import Planner, PlannerConfig, Scenario, violation_report
@@ -27,6 +28,7 @@ from repro.serve.faults import (
     faulted_capacity,
     identity_schedule,
     moment_drift,
+    node_failure,
     random_bursts,
     state_at,
     straggler_burst,
@@ -125,6 +127,132 @@ def test_compose_multiplies_scales_and_unions_stragglers():
 def test_compose_rejects_mismatched_horizons():
     with pytest.raises(ValueError, match="share a horizon"):
         compose(identity_schedule(4), identity_schedule(5))
+
+
+# ---------------------------------------------------------------------------
+# per-node faults (DESIGN.md §placement)
+# ---------------------------------------------------------------------------
+
+
+def test_brownout_per_node_fades_one_column():
+    s = brownout(6, start=2, length=3, depth=0.1, node=1, num_nodes=4)
+    cap = np.asarray(s.cap_scale)
+    assert cap.shape == (6, 4)
+    np.testing.assert_allclose(cap[2:5, 1], 0.1)
+    # every other (step, node) cell stays identity
+    mask = np.ones_like(cap, bool)
+    mask[2:5, 1] = False
+    np.testing.assert_allclose(cap[mask], 1.0)
+    with pytest.raises(ValueError, match="num_nodes"):
+        brownout(6, start=0, length=2, depth=0.5, node=1)
+    with pytest.raises(ValueError, match="node must lie"):
+        brownout(6, start=0, length=2, depth=0.5, node=4, num_nodes=4)
+
+
+def test_brownout_scalar_profile_unchanged_by_per_node_support():
+    """node=None keeps the (T,) scalar profile — bit-identical to the
+    pre-per-node path (scalar states broadcast in every consumer)."""
+    s = brownout(6, start=1, length=2, depth=0.25)
+    assert np.asarray(s.cap_scale).shape == (6,)
+    st6 = state_at(s, 1)
+    assert np.asarray(st6.cap_scale).shape == ()
+    np.testing.assert_allclose(float(st6.cap_scale), 0.25)
+
+
+def test_node_failure_zeroes_to_horizon():
+    s = node_failure(8, node=2, num_nodes=3, start=5)
+    cap = np.asarray(s.cap_scale)
+    np.testing.assert_allclose(cap[5:, 2], 0.0)  # crash-stop, no recovery
+    np.testing.assert_allclose(cap[:5, 2], 1.0)
+    np.testing.assert_allclose(cap[:, :2], 1.0)
+    # an (E,) state × an (E,) capacity: the failed node is ABSENT (cap 0)
+    caps = faulted_capacity(jnp.asarray([0.5, 0.4, 0.3]), state_at(s, 6))
+    np.testing.assert_allclose(np.asarray(caps), [0.5, 0.4, 0.0])
+
+
+def test_compose_scalar_cap_broadcasts_over_per_node():
+    """A whole-edge brownout fades ALL nodes of a per-node profile —
+    in either compose order."""
+    whole = brownout(6, start=0, length=6, depth=0.5)
+    one = brownout(6, start=2, length=2, depth=0.1, node=0, num_nodes=3)
+    for s in (compose(whole, one), compose(one, whole)):
+        cap = np.asarray(s.cap_scale)
+        assert cap.shape == (6, 3)
+        np.testing.assert_allclose(cap[2:4, 0], 0.05)
+        np.testing.assert_allclose(cap[2:4, 1:], 0.5)
+        np.testing.assert_allclose(cap[0], 0.5)
+
+
+def test_compose_rejects_node_count_mismatch():
+    a = brownout(6, start=0, length=2, depth=0.5, node=0, num_nodes=3)
+    b = brownout(6, start=0, length=2, depth=0.5, node=0, num_nodes=4)
+    with pytest.raises(ValueError, match="node count"):
+        compose(a, b)
+
+
+def test_edge_scale_alias_tracks_cap_scale():
+    st6 = FaultState.identity()._replace(cap_scale=jnp.asarray([0.5, 1.0]))
+    np.testing.assert_array_equal(np.asarray(st6.edge_scale),
+                                  np.asarray(st6.cap_scale))
+    sched = brownout(4, start=0, length=2, depth=0.3, node=1, num_nodes=2)
+    np.testing.assert_array_equal(np.asarray(sched.edge_scale),
+                                  np.asarray(sched.cap_scale))
+
+
+def test_state_at_clamps_to_boundary_states():
+    """A replay that outruns its schedule holds the LAST fault regime
+    (never a silently-reset identity); t < 0 clamps to the first."""
+    s = brownout(5, start=3, length=2, depth=0.2, node=1, num_nodes=3)
+    last = state_at(s, 4)
+    for got, want in zip(state_at(s, 99), last, strict=True):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    first = state_at(s, 0)
+    for got, want in zip(state_at(s, -7), first, strict=True):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(last.cap_scale).shape == (3,)
+    np.testing.assert_allclose(np.asarray(last.cap_scale), [1.0, 0.2, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# property tests (optional hypothesis; skip cleanly without it)
+# ---------------------------------------------------------------------------
+
+_T = 6
+
+
+def _sched_from(vm, p, extra, depth):
+    full = lambda v: jnp.full((_T,), v, jnp.float64)
+    return identity_schedule(_T)._replace(
+        vm_mean_scale=full(vm), vm_var_scale=full(vm) ** 2,
+        straggler_prob=full(p), straggler_extra_s=full(extra),
+        cap_scale=full(depth))
+
+
+_leg = st.tuples(st.floats(0.5, 2.0), st.floats(0.0, 0.9),
+                 st.floats(0.0, 0.5), st.floats(0.1, 1.0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=_leg, b=_leg, c=_leg)
+def test_compose_is_associative(a, b, c):
+    """compose is associative on every leaf: scales multiply, straggler
+    episodes union as independent events, and the probability-weighted
+    extra telescopes to Σpᵢeᵢ / p regardless of grouping."""
+    sa, sb, sc = (_sched_from(*x) for x in (a, b, c))
+    left = compose(compose(sa, sb), sc)
+    right = compose(sa, compose(sb, sc))
+    for got, want in zip(left, right, strict=True):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=st.integers(-100, 100), steps=st.integers(1, 12))
+def test_state_at_clamping_property(t, steps):
+    s = moment_drift(steps, vm_ramp=1.0)
+    want = state_at(s, int(np.clip(t, 0, steps - 1)))
+    for got, ref in zip(state_at(s, t), want, strict=True):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
 # ---------------------------------------------------------------------------

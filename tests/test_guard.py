@@ -122,6 +122,18 @@ def test_sentinel_window_evicts_and_reset_clears():
     assert s.counts == (0, 0) and np.isnan(s.rate())
 
 
+def test_sentinel_observe_outcomes_counts_met_flags():
+    """The engine-shaped feed: per-request *met?* bools (exactly what
+    ``EngineStats.deadline_flags`` windows hold) land as (k, n) counts."""
+    s = ViolationSentinel(0.05, SentinelConfig(window=512, alpha=1e-3,
+                                               min_count=4))
+    s.observe_outcomes([False, False, False, False, True])
+    assert s.counts == (4, 5)
+    s.observe_outcomes([])  # empty window: a no-op, not a ValueError
+    assert s.counts == (4, 5)
+    assert s.tripped()  # 4/5 missed vs ε = 5%
+
+
 def test_sentinel_false_positive_rate_bounded():
     """At the true rate ε the per-test trip probability is ≤ α by
     construction of the exact tail; check empirically over seeded

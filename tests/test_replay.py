@@ -1,0 +1,374 @@
+"""Trace-driven workload replay (DESIGN.md §robustness): seeded arrival
+processes, the compiled epoch sampler, the guarded replay loop with
+per-node faults + migration, regret-vs-oracle pairing, and the
+engine-backed mode.
+
+The incident fixture reproduces the ``bench_replay`` drill at test
+scale: a per-node brownout on the node holding most of the plan's
+devices, replayed unguarded / guarded / oracle over one shared trace
+and key stream, so the A/B/or claims (unguarded exceeds ε, guarded
+migrates and recovers, oracle bounds both) are pinned in CI.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tables import alexnet_fleet, mixed_spec
+from repro.core import Planner, PlannerConfig, Scenario
+from repro.core.resource import select_point
+from repro.serve import replay as rp
+from repro.serve.closedloop import GuardConfig
+from repro.serve.faults import FaultState, brownout, identity_schedule, state_at
+from repro.serve.guard import SentinelConfig
+
+SC = Scenario(0.25, 0.05, 10e6)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return alexnet_fleet(jax.random.PRNGKey(0), 8)
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                 pccp_iters=6))
+
+
+@pytest.fixture(scope="module")
+def plan(fleet, planner):
+    return planner.plan(fleet, SC)
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_deterministic_and_sorted():
+    a = rp.poisson_trace(rate_per_epoch=32.0, epochs=10, epoch_s=1.0,
+                         num_devices=4, seed=3)
+    b = rp.poisson_trace(rate_per_epoch=32.0, epochs=10, epoch_s=1.0,
+                         num_devices=4, seed=3)
+    np.testing.assert_array_equal(a.arrival_s, b.arrival_s)
+    np.testing.assert_array_equal(a.device_id, b.device_id)
+    assert (np.diff(a.arrival_s) >= 0).all()
+    assert a.device_id.min() >= 0 and a.device_id.max() < 4
+    assert a.nominal_per_epoch == 32.0
+    # a different seed moves the stream
+    c = rp.poisson_trace(rate_per_epoch=32.0, epochs=10, epoch_s=1.0,
+                         num_devices=4, seed=4)
+    assert c.num_requests != a.num_requests \
+        or not np.array_equal(a.arrival_s, c.arrival_s)
+
+
+def test_trace_epoch_bounds_partition_and_capacity():
+    tr = rp.poisson_trace(rate_per_epoch=20.0, epochs=12, epoch_s=0.5,
+                          num_devices=3, seed=0)
+    b = tr.epoch_bounds()
+    assert b.shape == (13,) and b[0] == 0 and b[-1] == tr.num_requests
+    assert (np.diff(b) >= 0).all()
+    counts = np.diff(b)
+    # each epoch's slice really holds that epoch's arrivals
+    for t in range(12):
+        sl = tr.arrival_s[b[t]:b[t + 1]]
+        assert np.all(sl >= t * 0.5) and np.all(sl < (t + 1) * 0.5)
+    assert tr.max_per_epoch == counts.max()
+    cap = tr.capacity
+    assert cap >= tr.max_per_epoch and cap & (cap - 1) == 0  # power of two
+
+
+def test_diurnal_trace_peak_exceeds_trough():
+    tr = rp.diurnal_trace(rate_per_epoch=100.0, epochs=20, epoch_s=1.0,
+                          num_devices=4, seed=1, swing=0.9)
+    counts = np.diff(tr.epoch_bounds())
+    # one period over the horizon: sin > 0 on the first half
+    assert counts[:10].sum() > counts[10:].sum()
+    assert tr.nominal_per_epoch == 100.0  # the normalizer stays the mean rate
+    with pytest.raises(ValueError, match="swing"):
+        rp.diurnal_trace(rate_per_epoch=10.0, epochs=4, epoch_s=1.0,
+                         num_devices=2, seed=0, swing=1.5)
+
+
+def test_bursty_trace_bursts_exceed_calm_rate():
+    tr = rp.bursty_trace(rate_per_epoch=30.0, epochs=60, epoch_s=1.0,
+                         num_devices=4, seed=2, burst_factor=6.0,
+                         p_enter=0.25, p_exit=0.3)
+    counts = np.diff(tr.epoch_bounds())
+    # the normalizer stays the CALM rate, so a burst genuinely congests
+    assert tr.nominal_per_epoch == 30.0
+    assert counts.max() > 3 * 30.0  # seeded: at least one real burst epoch
+
+
+def test_population_mix_probabilities_and_validation():
+    p = rp.population_mix([2, 3], [0.6, 0.4])
+    assert p.shape == (5,)
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-12)
+    np.testing.assert_allclose(p[:2], 0.3)  # 0.6 spread over 2 devices
+    np.testing.assert_allclose(p[2:], 0.4 / 3)
+    # a zero-weight population receives no traffic
+    q = rp.population_mix([1, 1], [1.0, 0.0])
+    np.testing.assert_allclose(q, [1.0, 0.0])
+    with pytest.raises(ValueError, match="counts"):
+        rp.population_mix([0, 2], [0.5, 0.5])
+    with pytest.raises(ValueError, match=">= 0"):
+        rp.population_mix([1, 1], [0.5, -0.5])
+    with pytest.raises(ValueError, match="positive weight"):
+        rp.population_mix([1, 1], [0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# sample_epoch: the compiled request-granular ground truth
+# ---------------------------------------------------------------------------
+
+
+def _epoch_args(plan, n=8, capacity=16, key=0):
+    dev = jnp.asarray(np.arange(capacity) % n, jnp.int32)
+    valid = jnp.ones(capacity, bool)
+    return dict(key=jax.random.PRNGKey(key), m_sel=plan.m_sel,
+                alloc=plan.alloc, deadline=SC.deadline,
+                device_ids=dev, valid=valid, rounds=2.0)
+
+
+def test_sample_epoch_identity_faults_bit_identical_to_none(fleet, plan):
+    """Same discipline as ``violation_report``: the identity state takes
+    the faulted code path yet must not move a single bit."""
+    kw = _epoch_args(plan)
+    base = rp.sample_epoch(fleet=fleet, **kw)
+    ident = rp.sample_epoch(fleet=fleet, faults=FaultState.identity(), **kw)
+    for got, want in zip(ident, base, strict=True):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sample_epoch_padding_and_counts(fleet, plan):
+    kw = _epoch_args(plan)
+    full = rp.sample_epoch(fleet=fleet, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(full.count),
+        np.bincount(np.asarray(kw["device_ids"]), minlength=8))
+    # masking the tail removes exactly its contribution — same key, same
+    # per-slot samples, so the valid mask is the only difference
+    half = dict(kw, valid=jnp.asarray(np.arange(16) < 8))
+    part = rp.sample_epoch(fleet=fleet, **half)
+    assert float(part.count.sum()) == 8.0
+    assert float(part.energy_j) < float(full.energy_j)
+    assert np.all(np.asarray(part.obs_vm) <= np.asarray(full.obs_vm) + 1e-15)
+    np.testing.assert_array_equal(np.asarray(part.total_s),
+                                  np.asarray(full.total_s))
+
+
+def test_sample_epoch_deadline_scores_requests(fleet, plan):
+    kw = _epoch_args(plan)
+    generous = rp.sample_epoch(fleet=fleet, **dict(kw, deadline=1e9))
+    assert bool(np.asarray(generous.met).all())
+    hopeless = rp.sample_epoch(fleet=fleet, **dict(kw, deadline=1e-9))
+    assert not bool(np.asarray(hopeless.met).any())
+    assert np.all(np.asarray(generous.total_s) > 0)
+
+
+def test_sample_epoch_per_node_congestion_targets_faded_node(fleet, plan):
+    """Shrinking ONE node's capacity must stretch only that node's
+    devices: gamma moment-matching is scale-equivariant, so with a
+    shared key the other nodes' samples are bit-identical."""
+    kw = _epoch_args(plan)
+    t_vm = np.asarray(select_point(fleet, plan.m_sel).t_vm)
+    assert (t_vm > 0).any()
+    offload_dev = int(np.argmax(t_vm))
+    # put the most-offloading device alone on node 2, everyone else spread
+    assignment = jnp.asarray(np.where(np.arange(8) == offload_dev, 2,
+                                      np.arange(8) % 2), jnp.int32)
+    roomy = jnp.asarray([1e9, 1e9, 1e9])
+    choked = jnp.asarray([1e9, 1e9, 1e-4])
+    a = rp.sample_epoch(fleet=fleet, edge_capacity_s=roomy,
+                        assignment=assignment, **kw)
+    b = rp.sample_epoch(fleet=fleet, edge_capacity_s=choked,
+                        assignment=assignment, **kw)
+    on_node = np.asarray(kw["device_ids"]) == offload_dev
+    np.testing.assert_array_equal(np.asarray(a.total_s)[~on_node],
+                                  np.asarray(b.total_s)[~on_node])
+    assert np.all(np.asarray(b.total_s)[on_node]
+                  > np.asarray(a.total_s)[on_node])
+
+
+def test_sample_epoch_per_node_cap_requires_assignment(fleet, plan):
+    kw = _epoch_args(plan)
+    with pytest.raises(ValueError, match="assignment"):
+        rp.sample_epoch(fleet=fleet, edge_capacity_s=jnp.asarray([1.0, 1.0]),
+                        **kw)
+
+
+def test_sample_epoch_one_program_across_varied_epochs(fleet, plan):
+    """Value-varied epochs — different counts, devices, fault depths,
+    rounds — must reuse ONE compiled program (the trace capacity is the
+    only shape)."""
+    sched = brownout(8, start=2, length=4, depth=0.3, node=1, num_nodes=3)
+    assignment = jnp.asarray(np.arange(8) % 3, jnp.int32)
+    caps = jnp.asarray([0.5, 0.4, 0.3])
+    kw = _epoch_args(plan)
+    rp.sample_epoch(fleet=fleet, edge_capacity_s=caps, faults=state_at(sched, 0),
+                    assignment=assignment, **kw)
+    cache0 = rp.sample_epoch._cache_size()
+    varied = dict(kw, key=jax.random.PRNGKey(9),
+                  device_ids=jnp.asarray(np.arange(16) % 5, jnp.int32),
+                  valid=jnp.asarray(np.arange(16) < 11), rounds=7.0)
+    rp.sample_epoch(fleet=fleet, edge_capacity_s=0.5 * caps,
+                    faults=state_at(sched, 3), assignment=assignment, **varied)
+    assert rp.sample_epoch._cache_size() == cache0
+
+
+# ---------------------------------------------------------------------------
+# the replay loop: quiet traces, the incident A/B, regret
+# ---------------------------------------------------------------------------
+
+
+def test_replay_identity_trace_sentinel_fp_rate(fleet, planner):
+    """Satellite: on a long no-fault trace the guarded loop must stay
+    quiet — the sentinel's per-window trip probability is ≤ α by the
+    exact binomial tail, so over T=120 windows at α=1e-3 the expected
+    trip count is 0.12 (seeded: exactly zero), and the ladder never
+    acts on the healthy plan."""
+    trace = rp.poisson_trace(rate_per_epoch=64.0, epochs=120, epoch_s=1.0,
+                             num_devices=8, seed=11)
+    r = rp.replay(fleet, SC, identity_schedule(120), planner, trace,
+                  jax.random.PRNGKey(2), guarded=True)
+    assert int(r.tripped.sum()) == 0
+    assert r.replans == 0 and r.churn == 0 and r.migrations == 0
+    assert r.final_window_rate <= SC.eps
+    assert len(r.stats.deadline_flags) == trace.num_requests
+    assert int(r.epoch_requests.sum()) == trace.num_requests
+
+
+# -- the bench_replay incident at test scale --------------------------------
+
+EPOCHS, FAULT_START = 32, 8
+MN_SC = (0.2, 0.04, 30e6)  # deadline, eps, B — the bench_replay scenario
+
+
+@pytest.fixture(scope="module")
+def incident():
+    fleet = mixed_spec(8).build(jax.random.PRNGKey(11))
+    planner = Planner(PlannerConfig(policy="robust_exact", outer_iters=3,
+                                    pccp_iters=6))
+    slack = planner.plan(fleet, Scenario(*MN_SC))
+    occ0 = float(select_point(fleet, slack.m_sel).t_vm.sum())
+    caps = jnp.asarray((0.2, 0.1, 0.05)) * occ0
+    sc = Scenario(*MN_SC, caps)
+    p0 = planner.plan(fleet, sc)
+    node = int(np.argmax(np.bincount(np.asarray(p0.assignment),
+                                     minlength=3)))
+    sched = brownout(EPOCHS, start=FAULT_START, length=EPOCHS - FAULT_START,
+                     depth=0.03, node=node, num_nodes=3)
+    trace = rp.poisson_trace(rate_per_epoch=96.0, epochs=EPOCHS, epoch_s=1.0,
+                             num_devices=8, seed=7)
+    guard = GuardConfig(sentinel=SentinelConfig(window=256, alpha=1e-3,
+                                                min_count=48))
+    key = jax.random.PRNGKey(5)
+    runs = {
+        "unguarded": rp.replay(fleet, sc, sched, planner, trace, key,
+                               guarded=False, guard=guard),
+        "guarded": rp.replay(fleet, sc, sched, planner, trace, key,
+                             guarded=True, guard=guard),
+        "oracle": rp.replay(fleet, sc, sched, planner, trace, key,
+                            guard=guard, oracle=True),
+    }
+    return dict(runs=runs, trace=trace, node=node, eps=MN_SC[1])
+
+
+def test_replay_unguarded_exceeds_eps(incident):
+    ung = incident["runs"]["unguarded"]
+    assert ung.final_window_rate > incident["eps"]
+    assert ung.replans == 0 and ung.migrations == 0
+    assert ung.migration_energy_j == 0.0 and ung.overhead_j.sum() == 0.0
+
+
+def test_replay_guarded_migrates_and_recovers(incident):
+    grd = incident["runs"]["guarded"]
+    assert grd.final_window_rate <= incident["eps"]
+    assert grd.replans >= 1 and bool(grd.tripped.any())
+    # the per-node re-fit shrank the browned-out node's budget, so the
+    # re-plan's hybrid allocator moved its devices — and paid for it
+    assert grd.migrations > 0
+    assert grd.migration_energy_j > 0.0
+    np.testing.assert_allclose(grd.overhead_j.sum(), grd.migration_energy_j,
+                               rtol=1e-12)
+    assert grd.total_violations \
+        < incident["runs"]["unguarded"].total_violations
+
+
+def test_replay_oracle_bounds_and_regret(incident):
+    grd = incident["runs"]["guarded"]
+    orc = incident["runs"]["oracle"]
+    # clairvoyant: re-planned at t=0 (identity) and at the fault onset
+    assert orc.replans >= 2
+    assert orc.total_violations <= grd.total_violations
+    regret = rp.regret_curves(grd, orc)
+    assert regret["violations"].shape == (EPOCHS,)
+    assert regret["energy_j"].shape == (EPOCHS,)
+    assert regret["final_violations"] \
+        == grd.total_violations - orc.total_violations
+    assert regret["final_violations"] >= 0
+    np.testing.assert_allclose(regret["violations"][-1],
+                               regret["final_violations"])
+
+
+def test_regret_curves_reject_mismatched_horizons(incident):
+    grd = incident["runs"]["guarded"]
+    short = rp.ReplayResult(
+        epoch_rate=np.zeros(3), window_rate=np.zeros(3),
+        tripped=np.zeros(3, bool), rung=np.zeros(3, np.int32),
+        energy_j=np.zeros(3), overhead_j=np.zeros(3),
+        epoch_violations=np.zeros(3, np.int64),
+        epoch_requests=np.zeros(3, np.int64),
+        replans=0, churn=0, migrations=0, migration_energy_j=0.0)
+    with pytest.raises(ValueError, match="horizon"):
+        rp.regret_curves(grd, short)
+
+
+def test_replay_telemetry_is_consistent(incident):
+    """The engine-shaped outcome stream and the per-epoch logs must tell
+    the same story: re-counting violations from the flags reproduces
+    ``epoch_violations`` exactly."""
+    trace = incident["trace"]
+    r = incident["runs"]["unguarded"]
+    assert int(r.epoch_requests.sum()) == trace.num_requests
+    flags = np.asarray(r.stats.deadline_flags, bool)
+    assert flags.shape == (trace.num_requests,)
+    b = trace.epoch_bounds()
+    for t in range(EPOCHS):
+        miss = int((~flags[b[t]:b[t + 1]]).sum())
+        assert miss == int(r.epoch_violations[t])
+    served = r.epoch_requests > 0
+    assert np.all(r.energy_j[served] > 0)
+    assert np.all(np.isnan(r.epoch_rate[~served]))
+
+
+# ---------------------------------------------------------------------------
+# engine-backed replay (the real ServingEngine at smoke scale)
+# ---------------------------------------------------------------------------
+
+
+def test_replay_engine_drives_real_engine_and_refits():
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.models.costmodel import block_chain_from_config
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = rp.ServingEngine(cfg, params, max_batch=2, window=64)
+    trace = rp.poisson_trace(rate_per_epoch=3.0, epochs=2, epoch_s=1.0,
+                             num_devices=1, seed=1)
+    assert trace.num_requests > 0
+    chain = block_chain_from_config(cfg, seq_len=64)
+    summary, sentinel, refit = rp.replay_engine(
+        eng, trace, seed=0, deadline_s=30.0, prompt_tokens=4,
+        max_new_tokens=3, eps=0.5, chain=chain)
+    assert summary["requests_completed"] == trace.num_requests
+    # every completion reached the sentinel through the window counts
+    assert sentinel.counts[1] == trace.num_requests
+    assert not sentinel.tripped()  # generous SLO: nothing missed
+    assert summary["deadline_met_rate"] == 1.0
+    # §IV online path: the measured decode mean anchored the edge tier
+    assert refit is not None
+    np.testing.assert_allclose(float(refit.t_vm[0]),
+                               summary["decode_mean_s"], rtol=1e-6)
